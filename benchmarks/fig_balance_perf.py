@@ -1,0 +1,100 @@
+"""Fig. 6 / Fig. 15 / Fig. 17 reproduction: bank imbalance, rebalancing
+effect, and multiprogrammed throughput/QoS vs the three baselines."""
+from __future__ import annotations
+
+import numpy as np
+
+from .simulator import (Machine, PERSONALITIES, init_state, make_trace,
+                        run_app, step_policy)
+
+
+def run_fig6() -> dict:
+    """Hot-page distribution across banks without rebalancing (claim:
+    significant imbalance; GemsFDTD-like workloads worst)."""
+    out = {}
+    for app in ("gems", "mcf", "hmmer", "memcached"):
+        spec = PERSONALITIES[app]
+        reads, writes = make_trace(spec, 100, 0)
+        rng = np.random.RandomState(1)
+        # skewed page->bank map (physical interleave doesn't fix hotness)
+        banks = rng.randint(0, 16, spec.n_pages)
+        if spec.bank_skew > 0:
+            hot_guess = np.argsort(-(reads.sum(0) + writes.sum(0)))
+            n_skew = int(spec.bank_skew * len(hot_guess)) // 2
+            banks[hot_guess[:n_skew]] = rng.randint(0, 4, n_skew)
+        hot = (reads + writes) >= 4
+        load = np.zeros(16)
+        for t in range(100):
+            load += np.bincount(banks, weights=hot[t].astype(float),
+                                minlength=16)
+        out[app] = {"bank_std": float(np.std(load)),
+                    "max_min_ratio": float(load.max() / max(load.min(), 1))}
+    out["checks"] = {"gems_most_imbalanced":
+                     out["gems"]["bank_std"] >= out["memcached"]["bank_std"]}
+    return out
+
+
+def run_fig15() -> dict:
+    """Bank-imbalance reduction via rebalancing (claim: std -60..70% in
+    single-thread cases; multiprogrammed drops to a low stable level)."""
+    out = {}
+    reductions = []
+    for app in ("gems", "mcf", "libquantum"):
+        base = run_app(app, "baseline")
+        mem = run_app(app, "memos")
+        b = base["bank_imb_fast"] + base["bank_imb_slow"]
+        m_ = mem["bank_imb_fast"] + mem["bank_imb_slow"]
+        red = 1 - m_ / max(b, 1e-9)
+        out[app] = {"baseline_std": b, "memos_std": m_, "reduction": red}
+        reductions.append(red)
+    avg = float(np.mean(reductions))
+    out["avg_reduction"] = avg
+    out["paper_claim"] = "imbalance std reduced ~60-70%"
+    out["reproduced"] = avg > 0.4
+    return out
+
+
+def run_fig17() -> dict:
+    """Multiprogrammed throughput + QoS (max slowdown) vs baselines.
+    Claims: throughput +19.1% avg (up to 28.1%), QoS +23.6% (up to 34.3%),
+    ~+7-10% over the best prior (vertical cache-bank) approach."""
+    rng = np.random.RandomState(3)
+    apps = list(PERSONALITIES)
+    policies = ("baseline", "utility", "vertical", "memos")
+    points: dict = {p: [] for p in policies}
+    qos: dict = {p: [] for p in policies}
+
+    # solo throughput for slowdown normalization (generous machine)
+    solo = {a: run_app(a, "baseline",
+                       machine=Machine(fast_capacity=10**9))["throughput"]
+            for a in apps}
+
+    for i in range(16):  # 16 injection points (Fig. 17 x-axis)
+        mix = rng.choice(apps, size=3, replace=False)
+        # contended DRAM: each of 3 co-runners gets ~1/3 of the channel
+        shared = Machine(fast_capacity=36)
+        for pol in policies:
+            tps, slows = [], []
+            for app in mix:
+                r = run_app(app, pol, machine=shared, seed=i)
+                tps.append(r["throughput"])
+                slows.append(solo[app] / max(r["throughput"], 1e-12))
+            points[pol].append(float(np.sum(tps)))      # weighted speedup
+            qos[pol].append(float(np.max(slows)))       # max slowdown
+
+    out: dict = {"points": {p: points[p] for p in policies}}
+    base_tp = np.asarray(points["baseline"])
+    base_qos = np.asarray(qos["baseline"])
+    for pol in ("utility", "vertical", "memos"):
+        tp_gain = float(np.mean(np.asarray(points[pol]) / base_tp - 1))
+        qos_gain = float(np.mean(1 - np.asarray(qos[pol]) / base_qos))
+        out[pol] = {"throughput_gain": tp_gain, "qos_gain": qos_gain}
+    memos_vs_vert = float(np.mean(
+        np.asarray(points["memos"]) / np.asarray(points["vertical"]) - 1))
+    out["memos_vs_vertical"] = memos_vs_vert
+    out["paper_claim"] = ("throughput +19.1% (up to 28.1%), QoS +23.6%, "
+                          "+7.3% over vertical")
+    out["reproduced"] = (out["memos"]["throughput_gain"] > 0.10
+                         and out["memos"]["qos_gain"] > 0.10
+                         and memos_vs_vert > 0.02)
+    return out

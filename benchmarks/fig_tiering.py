@@ -1,0 +1,139 @@
+"""Fig. 13 / Fig. 14 / lifetime / Fig. 16 reproduction: tier rates,
+latency + energy across memory configurations, NVM lifetime, and
+NVM-side access reduction."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import costmodel as cm
+
+from .simulator import (FAST, SLOW, Machine, PERSONALITIES, init_state,
+                        make_trace, run_app, step_policy)
+# (Machine imported above is reused with paper-like DRAM:footprint ratios)
+
+
+def run_fig13() -> dict:
+    """HOT/COLD and WD/RD rates per tier under memos (claim: both higher in
+    DRAM: overall 85.4% hot and 83.2% of writes land on the DRAM side)."""
+    out = {}
+    hot_fast_fracs, wd_fast_fracs = [], []
+    for app in ("hmmer", "astar", "memcached", "mcf"):
+        spec = PERSONALITIES[app]
+        m = Machine(fast_capacity=64)
+        reads, writes = make_trace(spec, 150, 0)
+        st = init_state(spec.n_pages, m, "memos", 0)
+        hot_rate_f, hot_rate_s, wdr_f, wdr_s = [], [], [], []
+        for t in range(150):
+            step_policy("memos", st, reads[t], writes[t], m)
+            hot = (reads[t] + writes[t]) >= 4
+            fmask = st.tier == FAST
+            hot_rate_f.append(hot[fmask].sum())
+            hot_rate_s.append(hot[~fmask].sum())
+            wdr_f.append(writes[t][fmask].sum())
+            wdr_s.append(writes[t][~fmask].sum())
+        h_f, h_s = float(np.sum(hot_rate_f)), float(np.sum(hot_rate_s))
+        w_f, w_s = float(np.sum(wdr_f)), float(np.sum(wdr_s))
+        out[app] = {
+            "hot_pages_on_fast_frac": h_f / max(h_f + h_s, 1),
+            "writes_on_fast_frac": w_f / max(w_f + w_s, 1),
+        }
+        hot_fast_fracs.append(out[app]["hot_pages_on_fast_frac"])
+        wd_fast_fracs.append(out[app]["writes_on_fast_frac"])
+    hot_avg = float(np.mean(hot_fast_fracs))
+    wd_avg = float(np.mean(wd_fast_fracs))
+    out["overall"] = {"hot_on_fast": hot_avg, "writes_on_fast": wd_avg}
+    out["paper_claim"] = "hot 85.4%, WD 83.2% on DRAM side"
+    out["reproduced"] = bool(hot_avg > 0.75 and wd_avg > 0.75)
+    return out
+
+
+def run_fig14() -> dict:
+    """Latency + dynamic energy across memory configurations:
+    D-only / 4:4 / 4:8 / 4:12 / 4:16 / N-only (DRAM:NVM capacity).
+    Claim: memos on MCHA cuts NVM-side latency 79.6% and energy 77.2% vs
+    NVM-only, approaching DRAM-only."""
+    base_pages = 256
+    configs = {
+        "D-only": (10**9, 0), "4:4": (128, 128), "4:8": (85, 171),
+        "4:12": (64, 192), "4:16": (51, 205), "N-only": (0, 10**9),
+    }
+    apps = ("mcf", "xalan", "hmmer", "memcached")
+    table: dict = {}
+    for name, (fast_cap, _) in configs.items():
+        lat, en = [], []
+        for app in apps:
+            if name == "D-only":
+                m = Machine(fast_capacity=10**9, slow=cm.DRAM)
+                r = run_app(app, "baseline", machine=m)
+            elif name == "N-only":
+                m = Machine(fast_capacity=0, fast=cm.NVM)
+                r = run_app(app, "baseline", machine=m)
+            else:
+                m = Machine(fast_capacity=fast_cap)
+                r = run_app(app, "memos", machine=m)
+            lat.append(r["mean_latency_ns"])
+            en.append(r["fast_energy_mw"] + r["slow_energy_mw"])
+        table[name] = {"latency_ns": float(np.mean(lat)),
+                       "dyn_energy_mw": float(np.mean(en))}
+    nvm_only = table["N-only"]
+    mcha = table["4:12"]
+    lat_red = 1 - mcha["latency_ns"] / nvm_only["latency_ns"]
+    en_red = 1 - mcha["dyn_energy_mw"] / nvm_only["dyn_energy_mw"]
+    table["reduction_vs_nvm_only"] = {"latency": lat_red, "energy": en_red}
+    table["paper_claim"] = "latency -79.6%, energy -77.2% vs NVM-only"
+    table["reproduced"] = bool(lat_red > 0.4 and en_red > 0.4)
+    return table
+
+
+def run_lifetime() -> dict:
+    """NVM lifetime (Sec. 7.1): Table-1 endurance, Start-Gap 95% leveling.
+    Claims: hmmer 3.2y -> 108.8y; mcf 0.17y -> 73.3y; multiprog 0.14y ->
+    44.7y; x40 average improvement."""
+    out = {}
+    ratios = []
+    capacity = 8 * 2**30
+    mach = Machine(fast_capacity=96)
+    for app in ("hmmer", "mcf", "memcached"):
+        base = run_app(app, "baseline", machine=mach)
+        mem = run_app(app, "memos", machine=mach)
+        # bytes/s written to NVM: scale pass counts to a 1 ms pass window
+        scale = 4096 / 1e-3
+        base_rate = base["slow_writes"] * scale / len(base["passes"])
+        mem_rate = max(mem["slow_writes"], 1e-9) * scale / len(mem["passes"])
+        # baseline wears a skewed subset of blocks; memos levels + reduces
+        life_base = cm.nvm_lifetime_years(base_rate, capacity,
+                                          hot_block_fraction=0.05)
+        life_mem = cm.nvm_lifetime_years(mem_rate, capacity,
+                                         hot_block_fraction=1.0)
+        out[app] = {"baseline_years": life_base, "memos_years": life_mem,
+                    "improvement_x": life_mem / max(life_base, 1e-12)}
+        ratios.append(out[app]["improvement_x"])
+    gm = float(np.exp(np.mean(np.log(ratios))))
+    out["geomean_improvement_x"] = gm
+    out["paper_claim"] = "x40 average (up to x500)"
+    out["reproduced"] = gm > 10
+    return out
+
+
+def run_fig16() -> dict:
+    """NVM-channel access reduction (claim: writes -~50%, reads -42%
+    across random SPEC mixes)."""
+    rng = np.random.RandomState(7)
+    apps = list(PERSONALITIES)
+    red_w, red_r = [], []
+    mach = Machine(fast_capacity=96)   # DRAM < footprint (paper: 4G vs 8G)
+    for i in range(10):
+        mix = rng.choice(apps, size=3, replace=False)
+        bw = br = mw = mr = 0.0
+        for app in mix:
+            b = run_app(app, "baseline", seed=i, machine=mach)
+            m_ = run_app(app, "memos", seed=i, machine=mach)
+            bw += b["slow_writes"]; br += b["slow_reads"]
+            mw += m_["slow_writes"]; mr += m_["slow_reads"]
+        red_w.append(1 - mw / max(bw, 1e-9))
+        red_r.append(1 - mr / max(br, 1e-9))
+    w, r = float(np.mean(red_w)), float(np.mean(red_r))
+    return {"write_reduction": w, "read_reduction": r,
+            "paper_claim": "writes -50%, reads -42%",
+            "reproduced": w > 0.3 and r > 0.2,
+            "per_mix_write_reduction": [float(x) for x in red_w]}

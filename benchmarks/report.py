@@ -1,0 +1,126 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run artifacts and the §Perf comparison rows from tagged runs.
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .roofline import DRYRUN, cell_terms
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def dryrun_table() -> str:
+    rows = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if "__analysis" in f.name or "__" in f.name.replace(
+                f"{r.get('arch')}__{r.get('shape')}__{r.get('mesh')}", ""):
+            continue
+    header = ("| arch | shape | mesh | status | compile_s | args GB/dev | "
+              "temp GB/dev | collective B/dev |\n|---|---|---|---|---|---|---|---|")
+    lines = [header]
+    for f in sorted(DRYRUN.glob("*.json")):
+        name = f.stem
+        parts = name.split("__")
+        if len(parts) != 3:          # skip tagged/analysis artifacts
+            continue
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            lines.append(f"| {parts[0]} | {parts[1]} | {parts[2]} | "
+                         f"**{r.get('status')}** | | | | |")
+            continue
+        mem = r.get("memory", {})
+        lines.append(
+            f"| {parts[0]} | {parts[1]} | {parts[2]} | ok | "
+            f"{r.get('compile_s')} | "
+            f"{mem.get('argument_size_in_bytes', 0)/1e9:.2f} | "
+            f"{mem.get('temp_size_in_bytes', 0)/1e9:.2f} | "
+            f"{r.get('collectives', {}).get('total_bytes', 0):.3g} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    from repro.configs import cells
+    header = ("| arch | shape | compute_s | memory_s | collective_s | "
+              "dominant | useful ratio | roofline frac | fits 16GB |\n"
+              "|---|---|---|---|---|---|---|---|---|")
+    lines = [header]
+    for arch, shape in cells():
+        t = cell_terms(arch, shape)
+        if t is None:
+            lines.append(f"| {arch} | {shape} | — | — | — | — | — | — | — |")
+            continue
+        star = "" if t.get("exact", True) else " *"
+        lines.append(
+            f"| {arch}{star} | {shape} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant']} | {t['useful_compute_ratio']:.3f} | "
+            f"{t['roofline_fraction']:.3f} | "
+            f"{'yes' if t['fits_16GB'] else 'NO'} |")
+    lines.append("")
+    lines.append("`*` train cell whose unrolled `--analysis` artifact was "
+                 "not yet compiled at report time: scan bodies are counted "
+                 "once, so compute/memory/collective and the derived ratios "
+                 "underestimate (regenerate with "
+                 "`python -m repro.launch.dryrun --arch <a> --shape "
+                 "train_4k --analysis` then `python -m benchmarks.report`).")
+    return "\n".join(lines)
+
+
+def perf_rows(cells_tags: list[tuple[str, str, str, str]]) -> str:
+    """cells_tags: (arch, shape, tag_or_empty, label)."""
+    out = []
+    for arch, shape, tag, label in cells_tags:
+        suffix = f"__{tag}" if tag else ""
+        p = DRYRUN / f"{arch}__{shape}__16x16{suffix}.json"
+        pa = DRYRUN / f"{arch}__{shape}__16x16__analysis{suffix}.json"
+        src = pa if pa.exists() else p
+        if not src.exists():
+            out.append(f"| {label} | (missing) | | | |")
+            continue
+        r = json.loads(src.read_text())
+        if r.get("status") != "ok":
+            out.append(f"| {label} | error | | | |")
+            continue
+        scale = r.get("analysis_scale", 1)
+        ba = r["cost"].get("bytes accessed", 0) * scale
+        ob = r.get("op_bytes")
+        if ob:
+            art = 2 * (ob["convert"] + ob["copy"] + ob["bitcast"]
+                       + ob["transpose"])
+            ba = max(ba - art * scale, 0.2 * ba)
+        fl = r["cost"].get("flops", 0) * scale
+        co = r["collectives"]["total_bytes"] * scale
+        out.append(f"| {label} | {fl/197e12:.4f} | {ba/819e9:.4f} | "
+                   f"{co/200e9:.4f} | {r['compile_s']}s |")
+    return "\n".join(out)
+
+
+def main():
+    import re as _re
+    exp = (ROOT / "EXPERIMENTS.md").read_text()
+    table = ("<!-- ROOFLINE-TABLE-START -->\n" + roofline_table()
+             + "\n<!-- ROOFLINE-TABLE-END -->")
+    if "TABLE-PLACEHOLDER-ROOFLINE" in exp:
+        exp = exp.replace("TABLE-PLACEHOLDER-ROOFLINE", table)
+    elif "<!-- ROOFLINE-TABLE-START -->" in exp:
+        exp = _re.sub(r"<!-- ROOFLINE-TABLE-START -->.*?"
+                      r"<!-- ROOFLINE-TABLE-END -->", table, exp,
+                      flags=_re.S)
+    else:  # replace the previously generated headerless table block
+        exp = _re.sub(
+            r"\| arch \| shape \| compute_s.*?(?=\n\nHillclimb targets)",
+            table, exp, flags=_re.S)
+    (ROOT / "EXPERIMENTS.md").write_text(exp)
+    print("roofline table written,", len(table.splitlines()) - 2, "rows")
+    (ROOT / "benchmarks" / "results" / "dryrun_table.md").write_text(
+        dryrun_table())
+    print("dry-run table written to benchmarks/results/dryrun_table.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark harness — one entry per paper table/figure (DESIGN.md Sec. 5)
+plus the roofline report over the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig3,fig17
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def _entry(name):
+    from . import fig_balance_perf, fig_patterns, fig_tiering
+    from . import roofline as roofline_mod
+    return {
+        "fig1": fig_patterns.run_fig1,
+        "fig2": fig_patterns.run_fig2,
+        "fig3": fig_patterns.run_fig3,
+        "fig6": fig_balance_perf.run_fig6,
+        "fig13": fig_tiering.run_fig13,
+        "fig14": fig_tiering.run_fig14,
+        "lifetime": fig_tiering.run_lifetime,
+        "fig15": fig_balance_perf.run_fig15,
+        "fig16": fig_tiering.run_fig16,
+        "fig17": fig_balance_perf.run_fig17,
+        "roofline": roofline_mod.run_roofline,
+    }[name]
+
+
+ALL = ["fig1", "fig2", "fig3", "fig6", "fig13", "fig14", "lifetime",
+       "fig15", "fig16", "fig17", "roofline"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    args = ap.parse_args()
+    todo = args.only.split(",") if args.only else ALL
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    summary = {}
+    for name in todo:
+        t0 = time.time()
+        try:
+            res = _entry(name)()
+            status = "ok"
+        except Exception as e:
+            res = {"error": f"{type(e).__name__}: {e}"}
+            status = "ERROR"
+        dt = time.time() - t0
+        (RESULTS / f"{name}.json").write_text(json.dumps(res, indent=1,
+                                                         default=str))
+        repro = res.get("reproduced", res.get("checks", ""))
+        claim = res.get("paper_claim", "")
+        print(f"{name:>9s} [{status}] {dt:6.1f}s  reproduced={repro}  {claim}")
+        summary[name] = {"status": status, "seconds": round(dt, 1),
+                         "reproduced": str(repro)}
+    (RESULTS / "summary.json").write_text(json.dumps(summary, indent=1,
+                                                     default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,375 @@
+"""Shared emulation machinery for the paper-figure benchmarks.
+
+Mirrors the paper's evaluation methodology (Sec. 6.1): trace-driven
+emulation — synthetic per-pass (reads, writes) page traces for workloads
+with the memory personalities the paper studies (SPEC-like + Memcached-
+like), pushed through a placement policy, scored with the Table-1
+DRAM/NVM cost model (core/costmodel.py).
+
+Policies reproduced (Sec. 7.3):
+  * ``baseline``  — unmodified kernel: channel-interleaved placement,
+                    no migration, hash-mapped cache (no slab isolation);
+  * ``vertical``  — cache-bank vertical partitioning [36,37]: slab
+                    isolation + bank rebalancing, channel-blind;
+  * ``utility``   — utility-based cache partitioning [31]: slab quotas by
+                    marginal utility, no bank/channel awareness;
+  * ``memos``     — the full loop: WD prediction -> channel allocation ->
+                    Algorithm-2 bank/slab targeting -> migration +
+                    bandwidth balancing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import patterns, predictor
+
+FAST, SLOW = 0, 1
+
+
+# =============================================================================
+# workload personalities (Fig. 1 / Sec. 3 characters)
+# =============================================================================
+
+@dataclass
+class AppSpec:
+    name: str
+    n_pages: int = 256
+    hot_frac: float = 0.1          # fraction of pages in the hot set
+    hot_rate: float = 8.0          # accesses/page/pass in the hot set
+    cold_rate: float = 0.05
+    wd_frac: float = 0.5           # fraction of hot accesses that are writes
+    wd_burst_len: int = 12         # passes a WD burst persists
+    wd_gap_len: int = 40           # passes between bursts (astar: long)
+    shift_every: int = 0           # hot-set rotation period (memcached-like)
+    streaming: bool = False        # thrashing sequential scans (libquantum)
+    bank_skew: float = 0.0         # hot pages concentrated on few banks
+    intensity: float = 1.0         # memory accesses per unit compute
+
+
+PERSONALITIES = {
+    # transient WD bursts over a mostly cold space (Fig. 1 astar)
+    "astar": AppSpec("astar", hot_frac=0.15, wd_frac=0.7, wd_burst_len=6,
+                     wd_gap_len=48, intensity=0.4),
+    # large active set, mixed WD/RD all the time (Fig. 1 cactusADM)
+    "cactus": AppSpec("cactus", hot_frac=0.5, wd_frac=0.45, wd_burst_len=20,
+                      wd_gap_len=8, intensity=0.8),
+    # spatially segregated WD and RD regions (Fig. 1 hmmer)
+    "hmmer": AppSpec("hmmer", hot_frac=0.3, wd_frac=0.9, wd_burst_len=30,
+                     wd_gap_len=6, intensity=0.5),
+    # streaming RD scans that thrash the cache (libquantum)
+    "libquantum": AppSpec("libquantum", hot_frac=0.8, wd_frac=0.02,
+                          streaming=True, bank_skew=0.6, intensity=1.0),
+    # memory-intensive write-heavy with bank skew (mcf / GemsFDTD)
+    "mcf": AppSpec("mcf", hot_frac=0.4, wd_frac=0.6, wd_burst_len=24,
+                   wd_gap_len=10, bank_skew=0.8, intensity=1.0),
+    "gems": AppSpec("gems", hot_frac=0.3, wd_frac=0.4, bank_skew=0.9,
+                    wd_burst_len=16, wd_gap_len=16, intensity=0.9),
+    # small, frequently shifting hot set (Memcached, Sec. 7.1)
+    "memcached": AppSpec("memcached", hot_frac=0.08, hot_rate=16.0,
+                         wd_frac=0.5, shift_every=12, wd_burst_len=8,
+                         wd_gap_len=4, intensity=0.7),
+    # xalan-like: moderate intensity, mixed
+    "xalan": AppSpec("xalan", hot_frac=0.25, wd_frac=0.5, wd_burst_len=14,
+                     wd_gap_len=20, intensity=0.7),
+}
+
+
+def make_trace(spec: AppSpec, n_passes: int, seed: int = 0
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Generate (reads, writes) uint16 [n_passes, n_pages]."""
+    rng = np.random.RandomState(seed)
+    P = spec.n_pages
+    reads = np.zeros((n_passes, P), np.float64)
+    writes = np.zeros((n_passes, P), np.float64)
+    n_hot = max(1, int(spec.hot_frac * P))
+    hot0 = rng.permutation(P)[:n_hot]
+    period = spec.wd_burst_len + spec.wd_gap_len
+    phase0 = rng.randint(0, period, size=P)
+    for t in range(n_passes):
+        if spec.shift_every and t % spec.shift_every == 0:
+            hot0 = rng.permutation(P)[:n_hot]
+        hot = hot0
+        base = np.full(P, spec.cold_rate)
+        base[hot] = spec.hot_rate
+        if spec.streaming:
+            # sequential scan: every page touched ~once per pass, read-only
+            reads[t] = rng.poisson(1.0, P) + base * 0.1
+            writes[t] = rng.poisson(spec.wd_frac, P) * (base > 1)
+            continue
+        in_burst = ((t + phase0) % period) < spec.wd_burst_len
+        w_rate = base * spec.wd_frac * in_burst
+        r_rate = base * (1 - spec.wd_frac * in_burst)
+        reads[t] = rng.poisson(r_rate)
+        writes[t] = rng.poisson(w_rate)
+    return reads.astype(np.int32), writes.astype(np.int32)
+
+
+# =============================================================================
+# machine model
+# =============================================================================
+
+@dataclass
+class Machine:
+    n_banks: int = 16              # per channel
+    n_slabs: int = 16
+    fast_capacity: int = 256       # pages the DRAM channel can hold
+    slow_capacity: int = 4096
+    fast: cm.MediumParams = cm.DRAM
+    slow: cm.MediumParams = cm.NVM
+    llc_base_missrate: float = 0.35
+    cpu_ns_per_access: float = 22.0  # non-memory work per access (Amdahl)
+
+
+@dataclass
+class PolicyState:
+    tier: np.ndarray               # [P] per-page tier
+    bank: np.ndarray               # [P] bank within its channel
+    slab: np.ndarray               # [P] cache slab color
+    hist: np.ndarray               # [P] WD history bytes
+    migrations: int = 0
+    slow_writes: int = 0
+    slow_reads: int = 0
+    fast_writes: int = 0
+    fast_reads: int = 0
+
+
+def init_state(n_pages: int, m: Machine, policy: str, seed: int = 0
+               ) -> PolicyState:
+    rng = np.random.RandomState(seed + 99)
+    if policy == "memos":
+        tier = np.full(n_pages, SLOW)     # start on NVM (Sec. 7.1)
+    else:
+        tier = (np.arange(n_pages) % 2).astype(np.int64)  # channel interleave
+    fast_used = int((tier == FAST).sum())
+    if fast_used > m.fast_capacity:       # overflow lands on NVM
+        over = np.nonzero(tier == FAST)[0][m.fast_capacity:]
+        tier[over] = SLOW
+    return PolicyState(
+        tier=tier,
+        bank=rng.randint(0, m.n_banks, n_pages),
+        slab=rng.randint(0, m.n_slabs, n_pages),
+        hist=np.zeros(n_pages, np.uint8),
+    )
+
+
+def _popcount8(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    x = x - ((x >> 1) & 0x55)
+    x = (x & 0x33) + ((x >> 2) & 0x33)
+    return ((x + (x >> 4)) & 0x0F).astype(np.int32)
+
+
+def predict_np(hist: np.ndarray) -> np.ndarray:
+    ones = _popcount8(hist)
+    out = np.where(ones >= predictor.HI_THRESH, predictor.WD_FREQ_H,
+                   np.where(ones >= predictor.LO_THRESH,
+                            predictor.WD_FREQ_L, predictor.UN_WD))
+    suffix = hist & 0b111
+    out = np.where(suffix == 0b111, predictor.WD_FREQ_H, out)
+    out = np.where(suffix == 0, predictor.UN_WD, out)
+    return out
+
+
+@dataclass
+class PassResult:
+    latency_ns: float
+    slow_latency_ns: float
+    fast_energy_mw: float
+    slow_energy_mw: float
+    slow_write_bytes: float
+    bank_imbalance_fast: float
+    bank_imbalance_slow: float
+    llc_missrate: float
+    ipc_like: float                # throughput proxy: accesses / time
+
+
+def step_policy(policy: str, st: PolicyState, reads: np.ndarray,
+                writes: np.ndarray, m: Machine, *,
+                max_migrations: int = 64) -> PassResult:
+    """One sampling pass: classify -> (policy-specific) migrate -> score."""
+    P = reads.shape[0]
+    touched = (reads + writes) > 0
+    wd = (2 * writes >= reads) & touched
+    hot = (reads + writes) >= 4
+    st.hist = (((st.hist.astype(np.uint16) << 1) | wd.astype(np.uint16))
+               & 0xFF).astype(np.uint8)
+
+    # ---- policy actions ------------------------------------------------------
+    if policy == "memos":
+        fut = predict_np(st.hist)
+        want_fast = hot | (fut != predictor.UN_WD)
+        # thrashing RD streams stay slow (reserved slab isolates them)
+        streaming = hot & ~wd & (reads > 0) & (np.abs(reads - np.median(
+            reads[touched]) if touched.any() else 0) < 1)
+        # rank: WD_FREQ_H first then hotness (Fig. 10)
+        cand = np.nonzero(want_fast & (st.tier == SLOW))[0]
+        order = np.lexsort((-(reads + 2 * writes)[cand], -fut[cand]))
+        cand = cand[order]
+        fast_used = int((st.tier == FAST).sum())
+        bank_load = np.bincount(st.bank[st.tier == FAST],
+                                weights=hot[st.tier == FAST].astype(float),
+                                minlength=m.n_banks)
+        promoted = 0
+        for p in cand[:max_migrations]:
+            if fast_used >= m.fast_capacity:
+                # evict the coldest UN_WD fast page (bandwidth balance spill)
+                evictable = np.nonzero((st.tier == FAST) & ~want_fast)[0]
+                if len(evictable) == 0:
+                    break
+                ev = evictable[np.argmin((reads + 2 * writes)[evictable])]
+                st.tier[ev] = SLOW
+                st.migrations += 1
+                fast_used -= 1
+            st.tier[p] = FAST
+            # Algorithm 2: coldest bank; slab by reuse class
+            b = int(np.argmin(bank_load))
+            st.bank[p] = b
+            bank_load[b] += 1
+            st.slab[p] = 0 if streaming[p] else 1 + (p % (m.n_slabs - 2))
+            st.migrations += 1
+            fast_used += 1
+            promoted += 1
+        # drain cold/UN_WD pages off DRAM (lazy, optimistic path)
+        cold_fast = np.nonzero((st.tier == FAST) & ~want_fast & ~touched)[0]
+        for p in cold_fast[:max_migrations]:
+            st.tier[p] = SLOW
+            st.migrations += 1
+        # intra-channel rebalancing on the NVM side too (Sec. 5.4: "even for
+        # a specific channel, hot pages are migrated from highly utilized
+        # banks to lower ones")
+        traffic = (reads + writes).astype(float)
+        slow_hot = np.nonzero((st.tier == SLOW) & touched)[0]
+        slow_hot = slow_hot[np.argsort(-traffic[slow_hot])][:max_migrations]
+        sload = np.bincount(st.bank[st.tier == SLOW],
+                            weights=traffic[st.tier == SLOW],
+                            minlength=m.n_banks)
+        for p in slow_hot:
+            b = int(np.argmin(sload))
+            if sload[st.bank[p]] > sload[b] + traffic[p]:
+                sload[st.bank[p]] -= traffic[p]
+                st.bank[p] = b
+                sload[b] += traffic[p]
+                st.migrations += 1
+    elif policy == "vertical":
+        # bank+slab rebalance within channels; channel-blind (no migration
+        # across DRAM/NVM)
+        for tier in (FAST, SLOW):
+            mask = st.tier == tier
+            if not mask.any():
+                continue
+            load = np.bincount(st.bank[mask], weights=hot[mask].astype(float),
+                               minlength=m.n_banks)
+            hot_here = np.nonzero(mask & hot)[0]
+            for p in hot_here[:max_migrations // 2]:
+                b = int(np.argmin(load))
+                load[st.bank[p]] -= 1
+                st.bank[p] = b
+                load[b] += 1
+        streaming = hot & ~wd
+        st.slab[streaming] = 0
+    elif policy == "utility":
+        # cache-only: give high-reuse pages dedicated slabs
+        st.slab[hot] = 1 + (np.nonzero(hot)[0] % (m.n_slabs - 1))
+    # baseline: nothing
+
+    # ---- scoring --------------------------------------------------------------
+    fast_mask = st.tier == FAST
+    slow_mask = ~fast_mask
+
+    # LLC model: thrashing streams pollute unless isolated in slab 0
+    streaming_like = hot & ~wd
+    isolated = streaming_like & (st.slab == 0)
+    pollution = float(streaming_like.sum() - isolated.sum()) / max(P, 1)
+    # slab crowding raises conflict misses
+    slab_load = np.bincount(st.slab[touched], minlength=m.n_slabs)
+    inner = slab_load[1:m.n_slabs - 1]  # reserved slabs are sacrificial
+    crowding = float(np.std(inner)) / (max(float(np.mean(inner)), 1e-9))
+    miss = np.clip(m.llc_base_missrate * (1 + 1.2 * pollution
+                                          + 0.15 * crowding), 0.05, 1.0)
+
+    # bank conflict model: row-buffer conflict rate grows with imbalance
+    def imbalance(mask):
+        # paper Fig. 6/15 metric: spread of *active page counts* per bank
+        if not mask.any():
+            return 0.0
+        load = np.bincount(st.bank[mask & touched], minlength=m.n_banks)
+        return float(np.std(load))
+
+    def conflict(mask):
+        if not mask.any():
+            return 0.0
+        load = np.bincount(st.bank[mask & touched], minlength=m.n_banks)
+        mean = max(float(np.mean(load)), 1e-9)
+        return min(1.0, 0.5 * float(np.std(load)) / mean)
+
+    imb_f, imb_s = imbalance(fast_mask), imbalance(slow_mask)
+    conf_f, conf_s = conflict(fast_mask), conflict(slow_mask)
+
+    # memory accesses that reach DRAM/NVM = misses
+    f_reads = float(reads[fast_mask].sum()) * miss
+    f_writes = float(writes[fast_mask].sum()) * miss
+    s_reads = float(reads[slow_mask].sum()) * miss
+    s_writes = float(writes[slow_mask].sum()) * miss
+    st.fast_reads += f_reads
+    st.fast_writes += f_writes
+    st.slow_reads += s_reads
+    st.slow_writes += s_writes
+
+    cf = cm.AccessCounts(f_reads, f_writes)
+    cs = cm.AccessCounts(s_reads, s_writes)
+    lat = cm.mean_latency_ns(cf, cs, m.fast, m.slow, conf_f, conf_s)
+    slow_lat = cm.slow_tier_latency_ns(cs, m.slow, conf_s)
+    window_s = 1e-3
+    e_f = cm.dynamic_energy_mw(cf, m.fast, window_s)
+    e_s = cm.dynamic_energy_mw(cs, m.slow, window_s)
+
+    total_acc = float((reads + writes).sum())
+    mem_acc = total_acc * miss
+    time_ns = total_acc * m.cpu_ns_per_access + mem_acc * lat
+    ipc = total_acc / max(time_ns, 1e-9)
+
+    return PassResult(
+        latency_ns=lat, slow_latency_ns=slow_lat,
+        fast_energy_mw=e_f, slow_energy_mw=e_s,
+        slow_write_bytes=s_writes * 4096,
+        bank_imbalance_fast=imb_f, bank_imbalance_slow=imb_s,
+        llc_missrate=float(miss), ipc_like=ipc,
+    )
+
+
+def run_app(app: str, policy: str, *, n_passes: int = 120,
+            machine: Machine | None = None, seed: int = 0,
+            n_pages: int | None = None) -> dict:
+    spec = PERSONALITIES[app]
+    if n_pages:
+        from dataclasses import replace
+        spec = replace(spec, n_pages=n_pages)
+    m = machine or Machine()
+    reads, writes = make_trace(spec, n_passes, seed)
+    st = init_state(spec.n_pages, m, policy, seed)
+    if spec.bank_skew > 0:
+        # physical allocation concentrates the busy pages on few banks
+        # (contiguous allocations + bank-bit aliasing, Fig. 6)
+        rng = np.random.RandomState(seed + 7)
+        busy = np.argsort(-(reads.sum(0) + writes.sum(0)))
+        n_skew = int(spec.bank_skew * spec.n_pages)
+        st.bank[busy[:n_skew]] = rng.randint(
+            0, max(2, m.n_banks // 4), n_skew)
+    res = [step_policy(policy, st, reads[t], writes[t], m)
+           for t in range(n_passes)]
+    return {
+        "app": app, "policy": policy, "state": st, "passes": res,
+        "mean_latency_ns": float(np.mean([r.latency_ns for r in res])),
+        "slow_latency_ns": float(np.mean([r.slow_latency_ns for r in res])),
+        "slow_energy_mw": float(np.mean([r.slow_energy_mw for r in res])),
+        "fast_energy_mw": float(np.mean([r.fast_energy_mw for r in res])),
+        "slow_writes": st.slow_writes, "slow_reads": st.slow_reads,
+        "fast_writes": st.fast_writes, "fast_reads": st.fast_reads,
+        "throughput": float(np.mean([r.ipc_like for r in res])),
+        "llc_missrate": float(np.mean([r.llc_missrate for r in res])),
+        "bank_imb_fast": float(np.mean([r.bank_imbalance_fast for r in res])),
+        "bank_imb_slow": float(np.mean([r.bank_imbalance_slow for r in res])),
+    }

@@ -1,0 +1,41 @@
+"""Long-context decode with sub-quadratic archs: a Mamba-2 smoke model
+decodes far past any attention window with O(1) state, and a
+sliding-window (mixtral-family) model decodes with a ring-buffer KV cache
+that never grows — the mechanisms behind the long_500k dry-run cells.
+
+Run:  PYTHONPATH=src python examples/longctx_decode.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry, smoke
+from repro.models import transformer as T
+
+for arch in ("mamba2_1_3b", "mixtral_8x7b"):
+    cfg = smoke(registry()[arch])
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(0, cfg.vocab, size=24)
+
+    # teacher-forced reference over the whole long sequence
+    horizon = 40
+    toks = jnp.asarray([prompt.tolist() + [0] * horizon], jnp.int32)
+
+    lg, state = T.prefill(params, cfg,
+                          {"tokens": jnp.asarray([prompt], jnp.int32)},
+                          cache_len=32)  # cache far smaller than the context!
+    kv_bytes = sum(int(np.prod(c["k"].shape)) * 2 * 4
+                   for c in state["attn"])
+    ssm_bytes = sum(int(np.prod(c["h"].shape)) * 4 for c in state["mamba"])
+    gen = []
+    for t in range(horizon):
+        g = int(jnp.argmax(lg[0, 0, :cfg.vocab]))
+        gen.append(g)
+        lg, state = T.decode_step(params, cfg, state,
+                                  {"tokens": jnp.asarray([[g]], jnp.int32)})
+    print(f"{arch:16s} decoded {horizon} tokens past a {len(prompt)}-token "
+          f"prompt; state: kv={kv_bytes}B ssm={ssm_bytes}B (context-length-"
+          f"independent)")
+    print(f"  first 10: {gen[:10]}")
+print("ring-buffer / O(1)-state long-context decode ✓")

@@ -1,0 +1,47 @@
+"""Quickstart: the memos core on a synthetic page workload.
+
+Builds a hybrid fast/slow TierStore, drives a phased access pattern
+through SysMon, and shows the memos loop (predict -> plan -> migrate)
+moving hot/WD pages to the fast tier and draining cold pages to the slow
+tier — the paper's Fig. 10 pipeline end to end, in ~60 lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sysmon
+from repro.core.memos import MemosConfig, MemosManager
+from repro.core.placement import FAST, SLOW
+from repro.core.tiers import TierConfig, TierStore
+
+N_PAGES, FAST_SLOTS = 64, 16
+
+store = TierStore(TierConfig(n_pages=N_PAGES, fast_slots=FAST_SLOTS,
+                             slow_slots=N_PAGES, page_shape=(8,)))
+for p in range(N_PAGES):
+    store.allocate(p, SLOW)                       # everything starts "on NVM"
+    store.write_page(p, np.full(8, p, np.float32))
+
+mgr = MemosManager(store, MemosConfig(interval=4, adaptive_interval=False))
+sm = sysmon.init(N_PAGES, n_banks=8, n_slabs=4)
+
+print(f"{'step':>4} {'fast':>5} {'slow':>5} {'migrated':>9} {'imbalance':>9}")
+for step in range(48):
+    phase = step // 16                            # working set shifts twice
+    hot = jnp.arange(phase * 8, phase * 8 + 8)
+    warm = jnp.arange(40, 48)                     # read-mostly pages
+    sm = sysmon.record(sm, hot, is_write=True)
+    sm = sysmon.record(sm, warm, is_write=False)
+    sm, report = mgr.maybe_step(sm)
+    if report:
+        print(f"{step:>4} {report.fast_pages:>5} {report.slow_pages:>5} "
+              f"{report.migrations.migrated:>9} {report.bank_imbalance:>9.2f}")
+
+tiers = np.asarray(store.tier)
+print("\nfinal placement (phase-2 hot pages 16..23 should be FAST):")
+print("  pages 16..23 tier:", tiers[16:24].tolist(), "(0=FAST)")
+print("  pages  0..7  tier:", tiers[0:8].tolist(), "(1=SLOW, decayed)")
+for p in range(N_PAGES):                          # contents always intact
+    np.testing.assert_array_equal(store.read_page(p), np.full(8, p))
+print("all page contents bit-exact after migrations ✓")

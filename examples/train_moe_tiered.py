@@ -1,0 +1,43 @@
+"""End-to-end driver: train a ~100M-param OLMoE-family MoE for a few
+hundred steps on CPU with checkpoint/restart, expert-hotness tracking
+(the MoE half of memos), and a simulated mid-run crash + recovery.
+
+Run:  PYTHONPATH=src python examples/train_moe_tiered.py [--steps 200]
+"""
+import argparse
+import tempfile
+from dataclasses import replace
+
+import numpy as np
+
+from repro.configs import get_arch, smoke
+from repro.launch.train import train_loop
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--big", action="store_true",
+                help="~100M params (slower); default is the smoke config")
+args = ap.parse_args()
+
+cfg = smoke(get_arch("olmoe_1b_7b"))
+if args.big:  # ~100M params: d_model 512, 8 layers, 16 experts
+    cfg = replace(cfg, d_model=512, n_layers=8, n_experts=16, top_k=4,
+                  expert_d_ff=512, d_ff=512, vocab=8192, d_head=64,
+                  n_heads=8, n_kv_heads=8)
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    crash_at = args.steps // 2
+    print(f"=== training with a simulated crash at step {crash_at} ===")
+    try:
+        train_loop(cfg, steps=args.steps, global_batch=8, seq_len=64,
+                   ckpt_dir=ckpt_dir, ckpt_every=25, crash_at=crash_at)
+    except RuntimeError as e:
+        print(f"!! {e} — restarting from the latest checkpoint")
+
+    losses, params, _ = train_loop(cfg, steps=args.steps, global_batch=8,
+                                   seq_len=64, ckpt_dir=ckpt_dir,
+                                   ckpt_every=25)
+    print(f"\nrecovered + finished: loss {losses[0 if losses else 0]:.4f} "
+          f"... {losses[-1]:.4f}")
+    assert losses[-1] < 5.0, "training failed to learn the synthetic task"
+    print("loss decreased on the synthetic Markov task ✓")

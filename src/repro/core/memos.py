@@ -1,0 +1,121 @@
+"""MemosManager — the periodic full-hierarchy management loop (Fig. 10).
+
+Ties SysMon -> predictor -> placement -> migration together:
+
+  every ``interval`` steps (paper: 20 s wall clock):
+    1. close the SysMon sampling pass (WD counts over Window_Len history)
+    2. predict each page's future state (+ Reverse check over K_Len)
+    3. mark will-be-migrated pages, rank the hotness list (WD_FREQ_H first)
+    4. migrate: locked slow->fast for hot/WD, optimistic fast->slow bulk;
+       destination slots via Algorithm 2 (coldest bank x coldest slab)
+    5. bandwidth balancing: spill RD (then coolest WD) pages to the slow
+       channel while the fast channel is saturated
+
+Overhead controls from Sec. 7.4 are exposed: sampling subset fraction and
+an adaptively growing interval once patterns stabilize.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import sysmon as sysmon_mod
+from .migration import MigrationEngine, MigrationStats
+from .placement import FAST, SLOW, BandwidthBalancer, plan
+from .tiers import TierStore
+
+
+@dataclass
+class MemosConfig:
+    interval: int = 16            # steps between memos passes
+    max_migrations: int | None = 256
+    fast_bw_bound: float = 0.9    # fraction of fast-channel peak
+    adaptive_interval: bool = True
+    interval_growth: float = 1.5  # grow when patterns are stable (Sec. 7.4)
+    interval_max: int = 256
+    stability_threshold: float = 0.02  # fraction of pages changing target
+
+
+@dataclass
+class MemosReport:
+    step: int
+    migrations: MigrationStats
+    n_marked: int
+    fast_pages: int
+    slow_pages: int
+    bank_imbalance: float
+    spilled: int = 0
+
+
+class MemosManager:
+    def __init__(self, store: TierStore, cfg: MemosConfig | None = None):
+        self.store = store
+        self.cfg = cfg or MemosConfig()
+        self.engine = MigrationEngine(store)
+        self.balancer = BandwidthBalancer(self.cfg.fast_bw_bound)
+        self.interval = self.cfg.interval
+        self._last_target: np.ndarray | None = None
+        self._steps_since = 0
+        self.reports: list[MemosReport] = []
+        self.step_count = 0
+
+    def maybe_step(self, sm_state: sysmon_mod.SysmonState,
+                   fast_bw_util: float = 0.0):
+        """Call once per training/serving step; fires the memos loop on the
+        configured interval.  Returns (new sysmon state, report|None)."""
+        self.step_count += 1
+        self._steps_since += 1
+        if self._steps_since < self.interval:
+            return sm_state, None
+        self._steps_since = 0
+        return self.run_pass(sm_state, fast_bw_util)
+
+    def run_pass(self, sm_state: sysmon_mod.SysmonState,
+                 fast_bw_util: float = 0.0):
+        # 1-2) close the pass; classification + prediction happen on device
+        sm_state, summary = sysmon_mod.end_pass(sm_state)
+
+        # 3) plan: mark will-be-migrated, rank HL
+        current = self.store.tier.copy()
+        decision = plan(summary, current, max_migrations=self.cfg.max_migrations)
+
+        bank_freq = np.asarray(summary.bank_freq)
+        slab_freq = np.asarray(summary.slab_freq)
+        reuse = np.asarray(summary.reuse_class)
+
+        # 4) migrate
+        stats = self.engine.execute(decision, bank_freq, slab_freq, reuse)
+
+        # 5) bandwidth balancing (spill while fast channel saturated)
+        spilled = 0
+        if self.balancer.update(fast_bw_util):
+            cands = self.balancer.spill_candidates(
+                np.asarray(summary.wd_code), np.asarray(summary.hotness),
+                self.store.tier, n=self.cfg.max_migrations or 64)
+            st = self.engine.migrate_optimistic(cands, SLOW, bank_freq,
+                                                slab_freq, reuse)
+            spilled = st.migrated
+
+        # adaptive interval (Sec. 7.4): grow when the plan barely changes
+        tgt = np.asarray(decision.target_tier)
+        if self.cfg.adaptive_interval and self._last_target is not None:
+            changed = float(np.mean(tgt != self._last_target))
+            if changed < self.cfg.stability_threshold:
+                self.interval = min(int(self.interval * self.cfg.interval_growth),
+                                    self.cfg.interval_max)
+            else:
+                self.interval = self.cfg.interval
+        self._last_target = tgt
+
+        report = MemosReport(
+            step=self.step_count,
+            migrations=stats,
+            n_marked=int(decision.migrate.sum()),
+            fast_pages=int((self.store.tier == FAST).sum()),
+            slow_pages=int((self.store.tier == SLOW).sum()),
+            bank_imbalance=float(np.std(bank_freq)),
+            spilled=spilled,
+        )
+        self.reports.append(report)
+        return sm_state, report

@@ -1,0 +1,210 @@
+"""Data-migration engine (paper Sec. 6.3, Fig. 10 step 4).
+
+Two migration paths, matching the paper:
+
+  * ``locked``     — CPU-style synchronous per-page copy under a lock
+                     (serving writes to the batch are fenced).  Preferred
+                     for small batches of hot/WD pages moving slow->fast.
+  * ``optimistic`` — unlocked DMA-style bulk copy: snapshot per-page
+                     version counters, copy the whole batch without
+                     blocking writers, then commit only pages whose version
+                     did not advance during the copy (the paper's post-hoc
+                     dirty-bit check); dirtied pages are retried on the
+                     next iteration ("the migration engine works
+                     iteratively").  Preferred for bulk cold/RD fast->slow
+                     moves, which are rarely dirtied mid-copy.
+
+Two scheduling modes: ``lazy`` (default, move when the memos loop fires)
+and ``eager`` (callers move pages immediately on request).
+
+Placement of the destination slot follows Algorithm 2: coldest bank, then
+coldest non-reserved slab with free rows (per the frequency tables of the
+current pass), so migrations simultaneously rebalance bank and slab load.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterable
+
+import numpy as np
+
+from . import placement
+from .placement import FAST, SLOW
+from .tiers import TierStore, NO_SLOT
+
+
+@dataclass
+class MigrationStats:
+    migrated: int = 0
+    dirty_discards: int = 0
+    retries: int = 0
+    bytes_moved: int = 0
+    to_fast: int = 0
+    to_slow: int = 0
+
+    def merge(self, other: "MigrationStats") -> None:
+        self.migrated += other.migrated
+        self.dirty_discards += other.dirty_discards
+        self.retries += other.retries
+        self.bytes_moved += other.bytes_moved
+        self.to_fast += other.to_fast
+        self.to_slow += other.to_slow
+
+
+class MigrationEngine:
+    def __init__(self, store: TierStore, *, max_retries: int = 3):
+        self.store = store
+        self.max_retries = max_retries
+        self.stats = MigrationStats()
+
+    # -- slot targeting (Algorithm 2) ----------------------------------------
+    def _target_color(self, dst_tier: int, bank_freq: np.ndarray | None,
+                      slab_freq: np.ndarray | None,
+                      reuse_class: int | None = None) -> tuple[int | None, int | None]:
+        """color = bank*n_slabs + slab, per Algorithm 2 + reserved-slab rules."""
+        cfg = self.store.alloc[dst_tier].cfg
+        if bank_freq is None or slab_freq is None:
+            return None, None
+        forced_slab = (placement.slab_for_reuse_class(reuse_class)
+                       if reuse_class is not None else None)
+
+        # fold the monitor's bank/slab frequency space onto the allocator's
+        # (the monitor tracks logical banks = device shards, which may be a
+        # different cardinality from the slot pool's color geometry)
+        def fold(freq: np.ndarray, n: int) -> np.ndarray:
+            out = np.zeros(n, dtype=np.float64)
+            for i, v in enumerate(np.asarray(freq)):
+                out[i % n] += v
+            return out
+
+        bfreq = fold(bank_freq, cfg.n_banks)
+        sfreq = fold(slab_freq, cfg.n_slabs)
+
+        def rows_free(bank: int, slab: int) -> bool:
+            # optimistic probe; the allocator falls back to any color when
+            # the exact color is exhausted (see TierStore.move_page)
+            return True
+
+        if forced_slab is not None:
+            bank = int(np.argmin(bfreq))
+            slab = forced_slab % cfg.n_slabs
+            return bank * cfg.n_slabs + slab, cfg.n_colors - 1
+        reserved = tuple(r for r in (placement.RESERVED_THRASH_SLAB,
+                                     placement.RESERVED_RARE_SLAB)
+                         if r < cfg.n_slabs) if cfg.n_slabs > 2 else ()
+        got = placement.coldest_bank_and_slab(bfreq, sfreq, rows_free,
+                                              reserved=reserved)
+        if got is None:
+            return None, None
+        bank, slab = got
+        return bank * cfg.n_slabs + slab, cfg.n_colors - 1
+
+    # -- locked path -----------------------------------------------------------
+    def migrate_locked(self, pages: Iterable[int], dst_tier: int,
+                       bank_freq: np.ndarray | None = None,
+                       slab_freq: np.ndarray | None = None,
+                       reuse_class: np.ndarray | None = None) -> MigrationStats:
+        st = MigrationStats()
+        bank_freq = None if bank_freq is None else np.array(bank_freq)
+        for p in pages:
+            rc = None if reuse_class is None else int(reuse_class[p])
+            color, mask = self._target_color(dst_tier, bank_freq, slab_freq, rc)
+            ok = self.store.move_page(int(p), dst_tier, color, mask)
+            if ok:
+                st.migrated += 1
+                st.bytes_moved += self.store.page_nbytes
+                if dst_tier == FAST:
+                    st.to_fast += 1
+                else:
+                    st.to_slow += 1
+                if bank_freq is not None:
+                    # account the move so subsequent picks spread across banks
+                    cfg = self.store.alloc[dst_tier].cfg
+                    b = cfg.bank_of(int(self.store.slot[p])) % len(bank_freq)
+                    bank_freq[b] += 1
+        self.stats.merge(st)
+        return st
+
+    # -- optimistic (unlocked DMA) path ---------------------------------------
+    def migrate_optimistic(
+        self, pages: Iterable[int], dst_tier: int,
+        bank_freq: np.ndarray | None = None,
+        slab_freq: np.ndarray | None = None,
+        reuse_class: np.ndarray | None = None,
+        concurrent_writer: Callable[[], None] | None = None,
+    ) -> MigrationStats:
+        """Bulk copy without locking; commit only pages not dirtied mid-copy.
+
+        ``concurrent_writer`` is a test/simulation hook invoked between the
+        bulk copy and the version re-check, standing in for writes that land
+        while the DMA is in flight.
+        """
+        st = MigrationStats()
+        pending = [int(p) for p in pages
+                   if int(self.store.tier[p]) != dst_tier
+                   and int(self.store.slot[p]) != NO_SLOT]
+        bank_freq = None if bank_freq is None else np.array(bank_freq)
+        for attempt in range(self.max_retries + 1):
+            if not pending:
+                break
+            if attempt > 0:
+                st.retries += 1
+            # 1) snapshot versions, 2) unlocked bulk copy to staging
+            vsnap = {p: int(self.store.version[p]) for p in pending}
+            staged = {p: self.store.read_page(p) for p in pending}
+            if concurrent_writer is not None:
+                concurrent_writer()
+                concurrent_writer = None  # writer fires once
+            # 3) dirty check + commit clean pages
+            dirty: list[int] = []
+            for p in pending:
+                if int(self.store.version[p]) != vsnap[p]:
+                    dirty.append(p)      # discard: will retry next iteration
+                    st.dirty_discards += 1
+                    continue
+                rc = None if reuse_class is None else int(reuse_class[p])
+                color, mask = self._target_color(dst_tier, bank_freq,
+                                                 slab_freq, rc)
+                new_slot = self.store.alloc[dst_tier].alloc(0, color, mask)
+                if new_slot is None and color is not None:
+                    new_slot = self.store.alloc[dst_tier].alloc(0, None)
+                if new_slot is None:
+                    continue
+                old_tier, old_slot = int(self.store.tier[p]), int(self.store.slot[p])
+                if dst_tier == FAST:
+                    import jax.numpy as jnp
+                    self.store.fast_pool = self.store.fast_pool.at[new_slot].set(
+                        jnp.asarray(staged[p], self.store.cfg.dtype))
+                else:
+                    self.store._slow_write(new_slot, staged[p])
+                self.store.alloc[old_tier].free(old_slot, 0)
+                self.store.tier[p] = dst_tier
+                self.store.slot[p] = new_slot
+                self.store.traffic[(old_tier, dst_tier)] += self.store.page_nbytes
+                st.migrated += 1
+                st.bytes_moved += self.store.page_nbytes
+                if dst_tier == FAST:
+                    st.to_fast += 1
+                else:
+                    st.to_slow += 1
+            pending = dirty
+        self.stats.merge(st)
+        return st
+
+    # -- policy-selected execution (Sec. 6.3 observed asymmetry) ---------------
+    def execute(self, decision: placement.PlacementDecision,
+                bank_freq: np.ndarray | None = None,
+                slab_freq: np.ndarray | None = None,
+                reuse_class: np.ndarray | None = None) -> MigrationStats:
+        """Run a planned migration: slow->fast hot/WD pages take the locked
+        path (small, must be consistent *now*); fast->slow bulk cold/RD
+        pages take the optimistic DMA path."""
+        st = MigrationStats()
+        hl = decision.hotness_list
+        to_fast = [p for p in hl if decision.target_tier[p] == FAST]
+        to_slow = [p for p in hl if decision.target_tier[p] == SLOW]
+        st.merge(self.migrate_locked(to_fast, FAST, bank_freq, slab_freq,
+                                     reuse_class))
+        st.merge(self.migrate_optimistic(to_slow, SLOW, bank_freq, slab_freq,
+                                         reuse_class))
+        return st

@@ -1,0 +1,101 @@
+"""Memory-pattern classification (paper Sec. 3).
+
+Pure, vectorized, jittable functions over per-page counter arrays.
+
+Definitions (paper Sec. 3.1, footnote 1):
+  * write operations carry weight 2 (write latency >= 2x read on NVM)
+  * WD (Write-Domain):  2 * writes >= reads   (and the page was touched)
+  * RD (Read-Domain):   reads > 2 * writes    (and the page was touched)
+  * cold:               untouched in the sampling pass
+
+Hotness (paper Sec. 4.2): a page is *hot* when most samplings in a pass
+observe it accessed, i.e. access_count > samples / 2.
+
+Reuse classes (paper Sec. 3.3 / Fig. 5):
+  * THRASHING       : small and stable reuse interval (streaming look-ups)
+  * FREQ_TOUCHED    : larger / unstable reuse interval, frequently accessed
+  * RARELY_TOUCHED  : touched only sporadically
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# --- pattern codes (per-pass page state) ------------------------------------
+COLD = 0
+RD = 1
+WD = 2
+
+# --- reuse classes -----------------------------------------------------------
+RARELY_TOUCHED = 0
+FREQ_TOUCHED = 1
+THRASHING = 2
+
+WRITE_WEIGHT = 2  # empirical value from the paper (footnote 1)
+
+
+def classify_wd(reads: jnp.ndarray, writes: jnp.ndarray) -> jnp.ndarray:
+    """Per-page WD/RD/COLD code for one sampling pass.
+
+    reads/writes: integer arrays [n_pages] of operation counts in the pass.
+    Returns int8 [n_pages] in {COLD, RD, WD}.
+    """
+    touched = (reads + writes) > 0
+    is_wd = (WRITE_WEIGHT * writes) >= reads
+    code = jnp.where(is_wd, WD, RD).astype(jnp.int8)
+    return jnp.where(touched, code, jnp.int8(COLD))
+
+
+def classify_hot(access_count: jnp.ndarray, pass_samples: jnp.ndarray | int) -> jnp.ndarray:
+    """Hot iff the page was seen accessed in most samplings of the pass."""
+    return access_count * 2 > pass_samples
+
+
+def hotness_score(access_count: jnp.ndarray, writes: jnp.ndarray) -> jnp.ndarray:
+    """Ranking key for the hotness list (HL).
+
+    Paper Fig. 10 step 3 ranks by access frequency; we fold in the weighted
+    write count so a WD page of equal frequency sorts above an RD one, which
+    keeps the ranking consistent with the WD-first migration priority.
+    """
+    return access_count.astype(jnp.float32) + 0.5 * jnp.minimum(
+        writes.astype(jnp.float32), access_count.astype(jnp.float32)
+    )
+
+
+def classify_reuse(
+    intv_cnt: jnp.ndarray,
+    intv_sum: jnp.ndarray,
+    intv_sqsum: jnp.ndarray,
+    pass_samples: jnp.ndarray | int,
+    *,
+    thrash_mean_max: float = 4.0,
+    thrash_std_max: float = 2.0,
+    rare_count_frac: float = 0.05,
+) -> jnp.ndarray:
+    """Reuse class per page from online interval stats (paper Fig. 5).
+
+    intv_cnt    : number of observed reuse intervals in the pass
+    intv_sum    : sum of interval lengths (in samplings)
+    intv_sqsum  : sum of squared interval lengths
+
+    THRASHING      <- mean interval small AND stable (low std)
+    RARELY_TOUCHED <- touched in < rare_count_frac of samplings
+    FREQ_TOUCHED   <- everything else that is touched repeatedly
+    """
+    cnt = jnp.maximum(intv_cnt, 1)
+    mean = intv_sum / cnt
+    var = jnp.maximum(intv_sqsum / cnt - mean * mean, 0.0)
+    std = jnp.sqrt(var)
+
+    rare = intv_cnt < jnp.maximum(rare_count_frac * pass_samples, 1.0)
+    thrash = (~rare) & (mean <= thrash_mean_max) & (std <= thrash_std_max)
+    out = jnp.where(thrash, THRASHING, FREQ_TOUCHED).astype(jnp.int8)
+    return jnp.where(rare, jnp.int8(RARELY_TOUCHED), out)
+
+
+def bank_imbalance(bank_freq: jnp.ndarray) -> jnp.ndarray:
+    """Std-dev of per-bank hot-page counts — the paper's imbalance metric
+    (Fig. 6 / Fig. 15: 'standard deviation of the number of active pages
+    between hottest and coldest banks')."""
+    f = bank_freq.astype(jnp.float32)
+    return jnp.std(f)

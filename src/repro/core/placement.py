@@ -1,0 +1,142 @@
+"""Placement policy: channel allocation, hotness list, Algorithm 2,
+channel-bandwidth balancing (paper Sec. 5.2/5.3).
+
+Channel-allocation principles (Sec. 5.2):
+  1. hot pages (Freq-touched, Thrashing) -> FAST (DRAM/HBM), especially WD;
+  2. RD-intensive pages may live in SLOW (NVM/host) without hurting perf;
+  3. cold pages stay in SLOW (energy + reserve FAST capacity).
+
+Migration marking (Fig. 10 step 3): a page is "will-be-migrated" when its
+*current* tier disagrees with the tier implied by its *predicted future*
+state + hotness; ranking (step 3b): WD_FREQ_H before WD_FREQ_L, then by
+hotness score.
+
+Algorithm 2: pick the coldest bank, then the coldest cache slab (excluding
+the reserved slabs 0 and 15) whose associated rows in that bank still have
+free capacity; walk to the next-coldest slab otherwise.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import numpy as np
+
+from . import patterns, predictor
+
+FAST = 0  # DRAM / HBM tier
+SLOW = 1  # NVM / host tier
+
+RESERVED_THRASH_SLAB = 0    # paper: slab 0 isolates Thrashing pages
+RESERVED_RARE_SLAB = 15     # paper: slab 15 holds Rarely-touched pages
+
+
+class PlacementDecision(NamedTuple):
+    target_tier: np.ndarray       # int8 [n_pages] FAST/SLOW
+    migrate: np.ndarray           # bool [n_pages] will-be-migrated
+    hotness_list: np.ndarray      # int32 [k] page ids, priority-ordered (HL)
+
+
+def target_tier(wd_code: np.ndarray, hot: np.ndarray, future: np.ndarray,
+                reuse_class: np.ndarray) -> np.ndarray:
+    """Apply the three channel-allocation principles per page."""
+    fast = hot | (future == predictor.WD_FREQ_H) | (future == predictor.WD_FREQ_L)
+    # RD-intensive or cold pages may stay slow even if moderately touched;
+    # thrashing RD streams explicitly stay slow (they are served through the
+    # reserved slab and NVM reads are cheap) unless they are write-heavy.
+    rd_stream = (wd_code != patterns.WD) & (reuse_class == patterns.THRASHING)
+    fast = fast & ~rd_stream
+    return np.where(fast, FAST, SLOW).astype(np.int8)
+
+
+def plan(summary, current_tier: np.ndarray, *, max_migrations: int | None = None
+         ) -> PlacementDecision:
+    """Fig. 10 steps 2-3: decide targets, mark migrations, rank the HL."""
+    wd_code = np.asarray(summary.wd_code)
+    hot = np.asarray(summary.hot)
+    future = np.asarray(summary.future)
+    reuse = np.asarray(summary.reuse_class)
+    hotness = np.asarray(summary.hotness)
+
+    tgt = target_tier(wd_code, hot, future, reuse)
+    migrate = tgt != current_tier
+
+    ids = np.nonzero(migrate)[0]
+    # priority: WD_FREQ_H (2) > WD_FREQ_L (1) > UN_WD (0), then hotness desc.
+    order = np.lexsort((-hotness[ids], -future[ids]))
+    hl = ids[order].astype(np.int32)
+    if max_migrations is not None:
+        hl = hl[:max_migrations]
+        keep = np.zeros_like(migrate)
+        keep[hl] = True
+        migrate = migrate & keep
+    return PlacementDecision(tgt, migrate, hl)
+
+
+def coldest_bank_and_slab(
+    bank_freq: np.ndarray,
+    slab_freq: np.ndarray,
+    rows_free: Callable[[int, int], bool],
+    *,
+    reserved: tuple[int, ...] = (RESERVED_THRASH_SLAB, RESERVED_RARE_SLAB),
+) -> tuple[int, int] | None:
+    """Algorithm 2: (cold_bank, cold_slab) with free rows, else None.
+
+    ``rows_free(bank, slab)`` reports whether the rows of ``bank`` associated
+    with ``slab`` still have free capacity.
+    """
+    cold_bank = int(np.argmin(bank_freq))
+    slab_order = [int(s) for s in np.argsort(slab_freq, kind="stable")
+                  if int(s) not in reserved]
+    for slab in slab_order:                    # WHILE rows not free: next slab
+        if rows_free(cold_bank, slab):
+            return cold_bank, slab
+    return None
+
+
+def slab_for_reuse_class(reuse_class: int) -> int | None:
+    """Reserved-slab routing (Sec. 5.3 step 1): Thrashing -> slab 0,
+    Rarely-touched -> slab 15, Freq-touched -> policy choice (None)."""
+    if reuse_class == patterns.THRASHING:
+        return RESERVED_THRASH_SLAB
+    if reuse_class == patterns.RARELY_TOUCHED:
+        return RESERVED_RARE_SLAB
+    return None
+
+
+class BandwidthBalancer:
+    """Channel-bandwidth balancing (Sec. 5.2 'Data Migration Mechanism').
+
+    Spill pages fast->slow while the fast channel is saturated; stop as soon
+    as fast-channel utilization *begins to drop* (the paper's stop rule),
+    so fast-channel bandwidth stays maximized while the slow channel soaks
+    up overflow reads.
+    """
+
+    def __init__(self, fast_bw_bound: float, hysteresis: float = 0.02):
+        self.bound = fast_bw_bound
+        self.hysteresis = hysteresis
+        self._last_util: float | None = None
+        self.spilling = False
+
+    def update(self, fast_util: float) -> bool:
+        """Feed one bandwidth-utilization observation (bytes/s); returns
+        whether memos should keep spilling pages to the slow channel."""
+        if fast_util >= self.bound:
+            self.spilling = True
+        elif self._last_util is not None and self.spilling:
+            if fast_util < self._last_util * (1.0 - self.hysteresis):
+                self.spilling = False  # utilization began to drop -> stop
+        self._last_util = fast_util
+        return self.spilling
+
+    def spill_candidates(self, wd_code: np.ndarray, hotness: np.ndarray,
+                         current_tier: np.ndarray, n: int) -> np.ndarray:
+        """Pick n pages to spill: RD pages first, then coolest WD ones."""
+        in_fast = current_tier == FAST
+        rd = in_fast & (wd_code == patterns.RD)
+        wd = in_fast & (wd_code == patterns.WD)
+        rd_ids = np.nonzero(rd)[0]
+        rd_ids = rd_ids[np.argsort(hotness[rd_ids])]
+        wd_ids = np.nonzero(wd)[0]
+        wd_ids = wd_ids[np.argsort(hotness[wd_ids])]
+        return np.concatenate([rd_ids, wd_ids])[:n].astype(np.int32)

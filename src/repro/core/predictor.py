@@ -1,0 +1,139 @@
+"""Write-history based future-pattern prediction (paper Sec. 3.2, Fig. 3/4).
+
+Each page keeps its last ``Window_Len`` (default 8) WD observations as a
+bitfield in one raw byte — the paper's "page shadow array (each element is
+a raw byte) and bit manipulation", taken literally.  Bit 0 is the most
+recent pass; bit (Window_Len-1) the oldest.
+
+Prediction of the future state:
+
+  * popcount(window) >= hi_thresh  ->  WD_FREQ_H   (Fig. 4 case_1)
+  * popcount(window) >= lo_thresh  ->  WD_FREQ_L   (Fig. 4 case_3)
+  * otherwise                      ->  UN_WD       (Fig. 4 case_2)
+
+``Reverse`` rule (Fig. 4 case_4): when the last ``K_Len`` consecutive
+observations are all WD, predict WD_FREQ_H regardless of the window
+majority; when they are all non-WD, predict UN_WD ("and visa versa").
+This handles sampling windows that span a phase change.
+
+The paper's calibration: Window_Len=8 predicts a stable pattern with ~96%
+accuracy, valid for ~10 future sampling intervals (benchmarks/fig3 sweeps
+this on traces).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# future-state codes
+UN_WD = 0
+WD_FREQ_L = 1
+WD_FREQ_H = 2
+
+WINDOW_LEN = 8   # paper default (Fig. 3 knee)
+K_LEN = 3        # Reverse suffix length (Fig. 4 case_4 shows a 3-long suffix)
+HI_THRESH = 6    # popcount >= 6 of 8 -> WD_FREQ_H (case_1: 7 ones)
+LO_THRESH = 2    # popcount >= 2 -> WD_FREQ_L (case_3: 5 ones; case_2: 1 -> UN)
+
+
+def push_history(hist: jnp.ndarray, wd_bit: jnp.ndarray, window_len: int = WINDOW_LEN) -> jnp.ndarray:
+    """Shift a new WD observation (0/1) into the per-page history word.
+    hist dtype must hold window_len bits (uint8 for <=8, uint16 beyond —
+    the Fig. 3 sweep goes to 10)."""
+    mask = jnp.asarray((1 << window_len) - 1, hist.dtype)
+    return ((hist << 1) | wd_bit.astype(hist.dtype)) & mask
+
+
+def popcount8(x: jnp.ndarray) -> jnp.ndarray:
+    """Popcount (<=16-bit values) via SWAR bit manipulation."""
+    x = x.astype(jnp.int32)
+    x = x - ((x >> 1) & 0x5555)
+    x = (x & 0x3333) + ((x >> 2) & 0x3333)
+    x = (x + (x >> 4)) & 0x0F0F
+    x = (x + (x >> 8)) & 0x001F
+    return x.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("window_len", "k_len", "hi_thresh", "lo_thresh"))
+def predict_future(
+    hist: jnp.ndarray,
+    *,
+    window_len: int = WINDOW_LEN,
+    k_len: int = K_LEN,
+    hi_thresh: int = HI_THRESH,
+    lo_thresh: int = LO_THRESH,
+) -> jnp.ndarray:
+    """Predict the future WD state per page. Returns int8 codes.
+
+    hist: uint8 [n_pages] history bitfields (bit 0 = latest pass).
+    """
+    ones = popcount8(hist.astype(jnp.int32) & ((1 << window_len) - 1))
+    base = jnp.where(
+        ones >= hi_thresh,
+        jnp.int8(WD_FREQ_H),
+        jnp.where(ones >= lo_thresh, jnp.int8(WD_FREQ_L), jnp.int8(UN_WD)),
+    )
+    # Reverse rule on the K_Len-bit suffix (the latest k observations).
+    k_mask = (1 << k_len) - 1
+    suffix = hist.astype(jnp.int32) & k_mask
+    all_wd = suffix == k_mask
+    none_wd = suffix == 0
+    # all-WD suffix forces WD_FREQ_H; all-cold suffix forces UN_WD.
+    out = jnp.where(all_wd, jnp.int8(WD_FREQ_H), base)
+    out = jnp.where(none_wd, jnp.int8(UN_WD), out)
+    return out
+
+
+def is_reverse(
+    hist: jnp.ndarray,
+    *,
+    window_len: int = WINDOW_LEN,
+    k_len: int = K_LEN,
+    hi_thresh: int = HI_THRESH,
+    lo_thresh: int = LO_THRESH,
+) -> jnp.ndarray:
+    """True where the Reverse rule overrode the whole-window majority
+    ("the sampling window actually spans an Un_WD phase and a coming WD
+    phase", Fig. 4 case_4 — majority view vs the K_Len suffix)."""
+    ones = popcount8(hist.astype(jnp.int32) & ((1 << window_len) - 1))
+    majority_wd = 2 * ones >= window_len
+    k_mask = (1 << k_len) - 1
+    suffix = hist.astype(jnp.int32) & k_mask
+    return ((suffix == k_mask) & ~majority_wd) | \
+        ((suffix == 0) & majority_wd)
+
+
+def predict_trace(
+    wd_trace: jnp.ndarray,
+    *,
+    window_len: int = WINDOW_LEN,
+    k_len: int = K_LEN,
+    horizon: int = 1,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the predictor along a [T, n_pages] WD 0/1 trace.
+
+    Returns (predictions [T, n_pages] int8, accuracy scalar) where a
+    prediction at t is scored against the observed WD state at t+horizon:
+    WD_FREQ_{H,L} counts as predicting WD=1, UN_WD as WD=0.  Used by the
+    Fig. 3 reproduction benchmark.
+    """
+    T = wd_trace.shape[0]
+
+    def step(hist, wd_t):
+        hist = push_history(hist, wd_t, window_len)
+        pred = predict_future(hist, window_len=window_len, k_len=k_len)
+        return hist, pred
+
+    hdt = jnp.uint8 if window_len <= 8 else jnp.uint16
+    hist0 = jnp.zeros(wd_trace.shape[1], dtype=hdt)
+    _, preds = jax.lax.scan(step, hist0, wd_trace)
+
+    if T <= horizon + window_len:
+        return preds, jnp.float32(0.0)
+    # score predictions made after warm-up against the state `horizon` ahead
+    pred_bin = (preds[window_len : T - horizon] != UN_WD).astype(jnp.int32)
+    actual = wd_trace[window_len + horizon :].astype(jnp.int32)
+    acc = jnp.mean((pred_bin == actual).astype(jnp.float32))
+    return preds, acc

@@ -1,0 +1,181 @@
+"""SysMon — inner-runtime memory-pattern profiling (paper Sec. 4.2).
+
+The OS version samples PTE access/dirty bits; a TPU has neither, so SysMon
+becomes a *software counter layer fused into the jitted step function*:
+the serving/training step knows exactly which pages it touched (attention
+block tables, router decisions, KV appends), and records them with
+scatter-adds into a ``SysmonState`` pytree that lives on device and is
+carried through the step.  Harvesting (pattern classification + history
+push) runs at pass boundaries — this mirrors the paper's sampling passes
+(default 100 samplings per pass) at zero host round-trips per step.
+
+Algorithm 1 (cache/bank frequency tables) is implemented verbatim: each
+recorded access bumps the page's bank and slab counters, keyed by the
+page's color bits.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import patterns, predictor
+
+
+class SysmonState(NamedTuple):
+    """Per-page counters for the current sampling pass + persistent history.
+
+    Shapes: [n_pages] unless noted.  Everything is int32/uint8 so the whole
+    state stays tiny relative to the pools it monitors (paper: 'a page
+    shadow array, each element is a raw byte').
+    """
+
+    reads: jnp.ndarray          # int32 — reads this pass
+    writes: jnp.ndarray         # int32 — writes this pass
+    access_count: jnp.ndarray   # int32 — samplings in which page was touched
+    hist: jnp.ndarray           # uint8 — WD history window bitfield
+    last_access: jnp.ndarray    # int32 — sampling idx of last touch (-1 = never)
+    intv_cnt: jnp.ndarray       # int32 — observed reuse intervals
+    intv_sum: jnp.ndarray       # int32 — sum of interval lengths
+    intv_sqsum: jnp.ndarray     # int32 — sum of squared interval lengths
+    bank_freq: jnp.ndarray      # int32 [n_banks] — Algorithm 1
+    slab_freq: jnp.ndarray      # int32 [n_slabs] — Algorithm 1
+    page_bank: jnp.ndarray      # int32 — page -> bank (device shard) map
+    page_slab: jnp.ndarray      # int32 — page -> VMEM/cache slab class map
+    sample_idx: jnp.ndarray     # int32 scalar — sampling counter within pass
+
+    @property
+    def n_pages(self) -> int:
+        return self.reads.shape[0]
+
+
+class PassSummary(NamedTuple):
+    """Classification produced at a pass boundary (inputs to placement)."""
+
+    wd_code: jnp.ndarray      # int8 {COLD, RD, WD}
+    hot: jnp.ndarray          # bool
+    hotness: jnp.ndarray      # float32 ranking key
+    reuse_class: jnp.ndarray  # int8 {RARELY, FREQ, THRASHING}
+    future: jnp.ndarray       # int8 {UN_WD, WD_FREQ_L, WD_FREQ_H}
+    reads: jnp.ndarray        # int32 raw counters (for cost model / figs)
+    writes: jnp.ndarray
+    bank_freq: jnp.ndarray
+    slab_freq: jnp.ndarray
+
+
+def init(n_pages: int, n_banks: int, n_slabs: int,
+         page_bank: jnp.ndarray | None = None,
+         page_slab: jnp.ndarray | None = None) -> SysmonState:
+    if page_bank is None:
+        page_bank = jnp.arange(n_pages, dtype=jnp.int32) % n_banks
+    if page_slab is None:
+        page_slab = (jnp.arange(n_pages, dtype=jnp.int32) // max(n_banks, 1)) % n_slabs
+    z = jnp.zeros(n_pages, dtype=jnp.int32)
+    return SysmonState(
+        reads=z, writes=z, access_count=z,
+        hist=jnp.zeros(n_pages, dtype=jnp.uint8),
+        last_access=jnp.full((n_pages,), -1, dtype=jnp.int32),
+        intv_cnt=z, intv_sum=z, intv_sqsum=z,
+        bank_freq=jnp.zeros(n_banks, dtype=jnp.int32),
+        slab_freq=jnp.zeros(n_slabs, dtype=jnp.int32),
+        page_bank=page_bank.astype(jnp.int32),
+        page_slab=page_slab.astype(jnp.int32),
+        sample_idx=jnp.int32(0),
+    )
+
+
+def record(state: SysmonState, page_ids: jnp.ndarray, *,
+           is_write: jnp.ndarray | bool = False,
+           valid: jnp.ndarray | None = None) -> SysmonState:
+    """Record one sampling's worth of page touches (jit-safe, ragged via mask).
+
+    page_ids: int32 [k] page indices touched this sampling (may repeat).
+    is_write: bool or bool [k] — write vs read.
+    valid:    optional bool [k] mask for padded id lists.
+    """
+    page_ids = page_ids.reshape(-1).astype(jnp.int32)
+    k = page_ids.shape[0]
+    if isinstance(is_write, bool):
+        is_write = jnp.full((k,), is_write)
+    is_write = jnp.broadcast_to(is_write.reshape(-1), (k,))
+    if valid is None:
+        valid = jnp.ones((k,), dtype=bool)
+    valid = jnp.broadcast_to(valid.reshape(-1), (k,))
+
+    # mask invalid entries to a scratch slot? No — use where on the update
+    # value and clamp ids so scatter stays in-bounds.
+    ids = jnp.clip(page_ids, 0, state.n_pages - 1)
+    one = valid.astype(jnp.int32)
+    w = (valid & is_write).astype(jnp.int32)
+    r = (valid & ~is_write).astype(jnp.int32)
+
+    reads = state.reads.at[ids].add(r)
+    writes = state.writes.at[ids].add(w)
+
+    # access_count: count *samplings* where the page was touched (paper's
+    # access_bit semantics) — dedupe within the sampling via a touched mask.
+    touched = jnp.zeros(state.n_pages, dtype=bool).at[ids].max(valid)
+    access_count = state.access_count + touched.astype(jnp.int32)
+
+    # reuse intervals (paper Sec. 3.3): gap in samplings since last touch.
+    now = state.sample_idx
+    seen_before = state.last_access >= 0
+    gap = now - state.last_access
+    upd = touched & seen_before
+    intv_cnt = state.intv_cnt + upd.astype(jnp.int32)
+    intv_sum = state.intv_sum + jnp.where(upd, gap, 0)
+    intv_sqsum = state.intv_sqsum + jnp.where(upd, gap * gap, 0)
+    last_access = jnp.where(touched, now, state.last_access)
+
+    # Algorithm 1: bump bank/slab frequency by page touch.
+    bank_ids = state.page_bank[ids]
+    slab_ids = state.page_slab[ids]
+    bank_freq = state.bank_freq.at[bank_ids].add(one)
+    slab_freq = state.slab_freq.at[slab_ids].add(one)
+
+    return state._replace(
+        reads=reads, writes=writes, access_count=access_count,
+        last_access=last_access, intv_cnt=intv_cnt, intv_sum=intv_sum,
+        intv_sqsum=intv_sqsum, bank_freq=bank_freq, slab_freq=slab_freq,
+        sample_idx=state.sample_idx + 1,
+    )
+
+
+@jax.jit
+def end_pass(state: SysmonState) -> tuple[SysmonState, PassSummary]:
+    """Close a sampling pass: classify, push WD history, reset counters."""
+    wd_code = patterns.classify_wd(state.reads, state.writes)
+    wd_bit = (wd_code == patterns.WD).astype(jnp.uint8)
+    hist = predictor.push_history(state.hist, wd_bit)
+    future = predictor.predict_future(hist)
+    hot = patterns.classify_hot(state.access_count, state.sample_idx)
+    hotness = patterns.hotness_score(state.access_count, state.writes)
+    reuse = patterns.classify_reuse(
+        state.intv_cnt, state.intv_sum, state.intv_sqsum, state.sample_idx
+    )
+    summary = PassSummary(
+        wd_code=wd_code, hot=hot, hotness=hotness, reuse_class=reuse,
+        future=future, reads=state.reads, writes=state.writes,
+        bank_freq=state.bank_freq, slab_freq=state.slab_freq,
+    )
+    z = jnp.zeros_like(state.reads)
+    new_state = state._replace(
+        reads=z, writes=z, access_count=z,
+        hist=hist,
+        last_access=jnp.full_like(state.last_access, -1),
+        intv_cnt=z, intv_sum=z, intv_sqsum=z,
+        bank_freq=jnp.zeros_like(state.bank_freq),
+        slab_freq=jnp.zeros_like(state.slab_freq),
+        sample_idx=jnp.int32(0),
+    )
+    return new_state, summary
+
+
+def remap(state: SysmonState, page_ids: jnp.ndarray,
+          new_bank: jnp.ndarray, new_slab: jnp.ndarray) -> SysmonState:
+    """Update page->bank/slab maps after the migration engine moves pages."""
+    return state._replace(
+        page_bank=state.page_bank.at[page_ids].set(new_bank.astype(jnp.int32)),
+        page_slab=state.page_slab.at[page_ids].set(new_slab.astype(jnp.int32)),
+    )

@@ -1,0 +1,170 @@
+"""TierStore — the hybrid fast/slow page store (MCHA analogue, Sec. 5.1).
+
+Logical pages live in one of two physical pools:
+
+  * FAST — device HBM (a jax array pool; on this CPU host it is a jax
+    CpuDevice buffer, on TPU it is HBM);
+  * SLOW — host DRAM (numpy pool; the NVM-channel analogue; optionally
+    int8-quantized to model NVM's cheap-read/expensive-write asymmetry).
+
+A page table maps logical page -> (tier, slot); per-page version counters
+are bumped by every write so the optimistic (unlocked-DMA) migration path
+can detect pages dirtied mid-copy, exactly like the paper's post-hoc
+dirty-bit check (Sec. 6.3).
+
+Slot allocation inside each pool goes through the color-aware SubBuddy
+allocator so bank/slab-targeted placement (Algorithm 2) is honored.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .allocator import SubBuddyAllocator, SubBuddyConfig
+from .placement import FAST, SLOW
+
+NO_SLOT = -1
+
+
+@dataclass
+class TierConfig:
+    n_pages: int                 # logical page count
+    fast_slots: int              # HBM pool capacity (pages)
+    slow_slots: int              # host pool capacity (pages)
+    page_shape: tuple[int, ...]  # payload shape per page
+    dtype: jnp.dtype = jnp.float32
+    n_banks: int = 32
+    n_slabs: int = 16
+    quantize_slow: bool = False  # int8-quantize cold pages (soft-NVM analogue)
+
+
+class TierStore:
+    def __init__(self, cfg: TierConfig):
+        # clamp the color geometry so every color exists in both pools
+        # (the PFN space always contains all colors; a slot pool only does
+        # when n_colors <= n_slots).
+        n_banks, n_slabs = cfg.n_banks, cfg.n_slabs
+        min_slots = min(cfg.fast_slots, cfg.slow_slots)
+        while n_banks * n_slabs > max(min_slots, 1) and n_banks > 1:
+            n_banks //= 2
+        while n_banks * n_slabs > max(min_slots, 1) and n_slabs > 1:
+            n_slabs //= 2
+        if (n_banks, n_slabs) != (cfg.n_banks, cfg.n_slabs):
+            from dataclasses import replace
+            cfg = replace(cfg, n_banks=n_banks, n_slabs=n_slabs)
+        self.cfg = cfg
+        self.fast_pool = jnp.zeros((cfg.fast_slots, *cfg.page_shape), cfg.dtype)
+        if cfg.quantize_slow:
+            self.slow_pool = np.zeros((cfg.slow_slots, *cfg.page_shape), np.int8)
+            self.slow_scale = np.ones((cfg.slow_slots,), np.float32)
+        else:
+            self.slow_pool = np.zeros((cfg.slow_slots, *cfg.page_shape),
+                                      np.dtype(jnp.dtype(cfg.dtype).name)
+                                      if cfg.dtype != jnp.bfloat16 else np.float32)
+            self.slow_scale = None
+        self.tier = np.full((cfg.n_pages,), SLOW, np.int8)
+        self.slot = np.full((cfg.n_pages,), NO_SLOT, np.int64)
+        self.version = np.zeros((cfg.n_pages,), np.int64)
+        bcfg = dict(n_banks=cfg.n_banks, n_slabs=cfg.n_slabs)
+        self.alloc = {
+            FAST: SubBuddyAllocator(SubBuddyConfig(cfg.fast_slots, **bcfg)),
+            SLOW: SubBuddyAllocator(SubBuddyConfig(cfg.slow_slots, **bcfg)),
+        }
+        # bytes moved per tier-direction, for the bandwidth balancer / figs
+        self.traffic = {(FAST, SLOW): 0, (SLOW, FAST): 0}
+        self.writes_to = {FAST: 0, SLOW: 0}
+        self.reads_from = {FAST: 0, SLOW: 0}
+
+    # -- page lifecycle -----------------------------------------------------
+    @property
+    def page_nbytes(self) -> int:
+        return int(np.prod(self.cfg.page_shape)) * jnp.dtype(self.cfg.dtype).itemsize
+
+    def allocate(self, page: int, tier: int, color: int | None = None,
+                 color_mask: int | None = None) -> bool:
+        """Bind a logical page to a fresh slot in ``tier``."""
+        assert self.slot[page] == NO_SLOT, f"page {page} already allocated"
+        s = self.alloc[tier].alloc(0, color, color_mask)
+        if s is None:
+            return False
+        self.tier[page] = tier
+        self.slot[page] = s
+        return True
+
+    def release(self, page: int) -> None:
+        s = int(self.slot[page])
+        if s != NO_SLOT:
+            self.alloc[int(self.tier[page])].free(s, 0)
+            self.slot[page] = NO_SLOT
+
+    # -- data access ----------------------------------------------------------
+    def write_page(self, page: int, value) -> None:
+        t, s = int(self.tier[page]), int(self.slot[page])
+        assert s != NO_SLOT
+        if t == FAST:
+            self.fast_pool = self.fast_pool.at[s].set(
+                jnp.asarray(value, self.cfg.dtype))
+        else:
+            self._slow_write(s, np.asarray(value, np.float32))
+        self.version[page] += 1
+        self.writes_to[t] += 1
+
+    def read_page(self, page: int) -> np.ndarray:
+        t, s = int(self.tier[page]), int(self.slot[page])
+        assert s != NO_SLOT
+        self.reads_from[t] += 1
+        if t == FAST:
+            return np.asarray(self.fast_pool[s], np.float32)
+        return self._slow_read(s)
+
+    def _slow_write(self, slot: int, value: np.ndarray) -> None:
+        if self.cfg.quantize_slow:
+            scale = max(float(np.max(np.abs(value))), 1e-8) / 127.0
+            self.slow_pool[slot] = np.clip(
+                np.round(value / scale), -127, 127).astype(np.int8)
+            self.slow_scale[slot] = scale
+        else:
+            self.slow_pool[slot] = value
+
+    def _slow_read(self, slot: int) -> np.ndarray:
+        if self.cfg.quantize_slow:
+            return self.slow_pool[slot].astype(np.float32) * self.slow_scale[slot]
+        return np.asarray(self.slow_pool[slot], np.float32)
+
+    # -- migration primitive (single page, already-planned) --------------------
+    def move_page(self, page: int, dst_tier: int, color: int | None = None,
+                  color_mask: int | None = None) -> bool:
+        """Synchronous ('locked CPU copy') single-page move."""
+        src_tier = int(self.tier[page])
+        if src_tier == dst_tier:
+            return True
+        data = self.read_page(page)
+        new_slot = self.alloc[dst_tier].alloc(0, color, color_mask)
+        if new_slot is None and color is not None:
+            # Algorithm 2 exhausted its slab walk: fall back to any color
+            # rather than dropping the migration (capacity is the real bound).
+            new_slot = self.alloc[dst_tier].alloc(0, None)
+        if new_slot is None:
+            return False
+        old_slot = int(self.slot[page])
+        if dst_tier == FAST:
+            self.fast_pool = self.fast_pool.at[new_slot].set(
+                jnp.asarray(data, self.cfg.dtype))
+        else:
+            self._slow_write(new_slot, data)
+        self.alloc[src_tier].free(old_slot, 0)
+        self.tier[page] = dst_tier
+        self.slot[page] = new_slot
+        self.traffic[(src_tier, dst_tier)] += self.page_nbytes
+        return True
+
+    def occupancy(self) -> dict:
+        fast_used = int(np.sum(self.tier[self.slot != NO_SLOT] == FAST))
+        slow_used = int(np.sum(self.tier[self.slot != NO_SLOT] == SLOW))
+        return {
+            "fast_used": fast_used, "fast_total": self.cfg.fast_slots,
+            "slow_used": slow_used, "slow_total": self.cfg.slow_slots,
+        }

@@ -1,0 +1,3 @@
+from .pipeline import Prefetcher, ShardInfo, SyntheticLM
+
+__all__ = ["Prefetcher", "ShardInfo", "SyntheticLM"]

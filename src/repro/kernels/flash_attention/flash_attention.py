@@ -1,0 +1,110 @@
+"""Flash attention (training/prefill) Pallas TPU kernel.
+
+Grid: (B*Hq, n_q_blocks, n_k_blocks) — the k-block axis is innermost, so
+the online-softmax running state (m, l, acc) lives in VMEM scratch that
+persists across k iterations (TPU grids execute sequentially).
+
+BlockSpec tiling (the paper's "cache slab" policy at the VMEM level,
+DESIGN.md Sec. 3.2):
+  * q block  [bq, D]  — *Freq-touched*: resident for the whole k sweep;
+  * k/v blocks [bk, D] — *Thrashing* (streamed once per q block): minimal
+    double-buffered tiles, never re-read within a sweep;
+  * acc scratch [bq, D] f32 — resident accumulator.
+
+bq/bk default to 128/256 to align with the 128-lane MXU; D (head_dim) is
+the contraction and must be a multiple of 128 for peak MXU utilization
+(320-dim heads pad to 384 in ops.py).
+
+Supports causal masking, sliding windows (SWA / gemma3 local layers) and
+GQA via a q-head -> kv-head index map (no KV expansion in memory).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  bq: int, bk: int, seq_len: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [bq, D]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    v = v_ref[0].astype(jnp.float32)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                         causal: bool = True, window: int = 0,
+                         bq: int = 128, bk: int = 256, seq_len: int | None = None,
+                         interpret: bool = False) -> jnp.ndarray:
+    """q: [BHq, Sq, D]; k/v: [BHkv, Sk, D] (pre-flattened, padded).
+    BHq = BHkv * G; q head i uses kv head i // G."""
+    BHq, Sq, D = q.shape
+    BHkv, Sk, _ = k.shape
+    G = BHq // BHkv
+    scale = 1.0  # caller pre-scales (keeps D-padding exact)
+    if seq_len is None:
+        seq_len = Sk
+    grid = (BHq, Sq // bq, Sk // bk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, seq_len=seq_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, iq, ik, g=G: (bh // g, ik, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, iq, ik, g=G: (bh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

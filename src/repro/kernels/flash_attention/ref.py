@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        seq_len: int | None = None) -> jnp.ndarray:
+    """q: [BHq, Sq, D]; k/v: [BHkv, Sk, D]; BHq = BHkv * G (GQA)."""
+    BHq, Sq, D = q.shape
+    BHkv, Sk, _ = k.shape
+    G = BHq // BHkv
+    if seq_len is None:
+        seq_len = Sk
+    k = jnp.repeat(k, G, axis=0)
+    v = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = k_pos < seq_len
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & ((q_pos - k_pos) < window)
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", w, v.astype(jnp.float32)).astype(q.dtype)

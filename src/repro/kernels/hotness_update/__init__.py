@@ -1,0 +1,4 @@
+from .ops import sysmon_pass
+from .ref import sysmon_pass_ref
+
+__all__ = ["sysmon_pass", "sysmon_pass_ref"]

@@ -1,0 +1,87 @@
+"""SysMon pass-boundary Pallas TPU kernel — the paper's "page shadow array
+... raw byte and bit manipulation" (Sec. 4.2), fused.
+
+One elementwise sweep over the page-counter arrays computes, per page:
+  * WD/RD/COLD classification (weight-2 writes, Sec. 3.1),
+  * history-byte shift  hist' = (hist << 1 | wd) & 0xFF,
+  * SWAR popcount of the window,
+  * the WD_FREQ_H / WD_FREQ_L / UN_WD prediction with the K_Len Reverse
+    override (Sec. 3.2, Fig. 4).
+
+Blocked [bp] pages per grid step; everything stays in int32 vregs (VPU
+lanes), zero HBM re-reads — the fused version reads each counter array
+once vs. 4 passes for the unfused jnp composition in core/sysmon.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import patterns, predictor
+
+
+def _pass_kernel(reads_ref, writes_ref, hist_ref,
+                 wd_ref, newhist_ref, future_ref, *,
+                 window_len: int, k_len: int, hi: int, lo: int):
+    r = reads_ref[...].astype(jnp.int32)
+    w = writes_ref[...].astype(jnp.int32)
+    hist = hist_ref[...].astype(jnp.int32)
+
+    touched = (r + w) > 0
+    is_wd = (patterns.WRITE_WEIGHT * w) >= r
+    wd_code = jnp.where(touched,
+                        jnp.where(is_wd, patterns.WD, patterns.RD),
+                        patterns.COLD).astype(jnp.int32)
+    wd_bit = (wd_code == patterns.WD).astype(jnp.int32)
+
+    mask = (1 << window_len) - 1
+    hist = ((hist << 1) | wd_bit) & mask
+
+    # SWAR popcount (8-bit window inside an int32 lane)
+    x = hist
+    x = x - ((x >> 1) & 0x55)
+    x = (x & 0x33) + ((x >> 2) & 0x33)
+    ones = (x + (x >> 4)) & 0x0F
+
+    base = jnp.where(ones >= hi, predictor.WD_FREQ_H,
+                     jnp.where(ones >= lo, predictor.WD_FREQ_L,
+                               predictor.UN_WD))
+    kmask = (1 << k_len) - 1
+    suffix = hist & kmask
+    fut = jnp.where(suffix == kmask, predictor.WD_FREQ_H, base)
+    fut = jnp.where(suffix == 0, predictor.UN_WD, fut)
+
+    wd_ref[...] = wd_code
+    newhist_ref[...] = hist
+    future_ref[...] = fut
+
+
+def sysmon_pass_pallas(reads: jnp.ndarray, writes: jnp.ndarray,
+                       hist: jnp.ndarray, *, window_len: int = 8,
+                       k_len: int = 3, hi: int = 6, lo: int = 2,
+                       block: int = 1024, interpret: bool = False):
+    """reads/writes: int32 [n]; hist: int32 [n] (low window_len bits).
+    Returns (wd_code, new_hist, future) int32 [n]."""
+    n = reads.shape[0]
+    pad = (-n) % block
+    if pad:
+        reads = jnp.pad(reads, (0, pad))
+        writes = jnp.pad(writes, (0, pad))
+        hist = jnp.pad(hist, (0, pad))
+    np_ = reads.shape[0] // block
+    kernel = functools.partial(_pass_kernel, window_len=window_len,
+                               k_len=k_len, hi=hi, lo=lo)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out = pl.pallas_call(
+        kernel,
+        grid=(np_,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((reads.shape[0],), jnp.int32)] * 3,
+        interpret=interpret,
+    )(reads.astype(jnp.int32), writes.astype(jnp.int32),
+      hist.astype(jnp.int32))
+    return tuple(o[:n] for o in out)

@@ -1,0 +1,20 @@
+"""jit'd wrapper for the fused SysMon pass kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .hotness_update import sysmon_pass_pallas
+
+
+@partial(jax.jit, static_argnames=("window_len", "k_len", "hi", "lo",
+                                   "block", "interpret"))
+def sysmon_pass(reads, writes, hist, *, window_len: int = 8, k_len: int = 3,
+                hi: int = 6, lo: int = 2, block: int = 1024,
+                interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return sysmon_pass_pallas(reads, writes, hist, window_len=window_len,
+                              k_len=k_len, hi=hi, lo=lo, block=block,
+                              interpret=interpret)

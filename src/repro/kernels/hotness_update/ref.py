@@ -1,0 +1,15 @@
+"""Oracle: compose the core library's pure-jnp pieces."""
+import jax.numpy as jnp
+
+from repro.core import patterns, predictor
+
+
+def sysmon_pass_ref(reads, writes, hist, *, window_len=8, k_len=3,
+                    hi=6, lo=2):
+    wd_code = patterns.classify_wd(reads, writes).astype(jnp.int32)
+    wd_bit = (wd_code == patterns.WD).astype(jnp.uint8)
+    new_hist = predictor.push_history(hist.astype(jnp.uint8), wd_bit,
+                                      window_len)
+    fut = predictor.predict_future(new_hist, window_len=window_len,
+                                   k_len=k_len, hi_thresh=hi, lo_thresh=lo)
+    return wd_code, new_hist.astype(jnp.int32), fut.astype(jnp.int32)

@@ -1,0 +1,4 @@
+from .ops import page_gather, page_scatter
+from .ref import page_gather_ref, page_scatter_ref
+
+__all__ = ["page_gather", "page_scatter", "page_gather_ref", "page_scatter_ref"]

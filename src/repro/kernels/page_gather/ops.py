@@ -1,0 +1,22 @@
+"""jit'd wrappers for the migration data mover."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .page_gather import page_gather_pallas, page_scatter_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def page_gather(pool, idx, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return page_gather_pallas(pool, idx, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def page_scatter(pool, idx, pages, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return page_scatter_pallas(pool, idx, pages, interpret=interpret)

@@ -1,0 +1,78 @@
+"""Page pack/unpack Pallas TPU kernel — the migration engine's data mover.
+
+The optimistic (unlocked-DMA) migration path (core/migration.py) stages a
+batch of discontiguous pages into one contiguous buffer before the
+host<->device transfer — the TPU analogue of the paper's scatter-gather DMA
+mode (Sec. 6.3): ``dma_memcpy_pg_to_pg`` over a page list.  The page
+indices come in through scalar prefetch so the DMA engine can start
+fetching page i+1's HBM block while page i streams out (double-buffered
+automatically by the Pallas pipeline).
+
+gather:  staging[i] = pool[idx[i]]   (pack for eviction / host copy-out)
+scatter: pool[idx[i]] = staging[i]   (unpack after promotion / copy-in)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def page_gather_pallas(pool: jnp.ndarray, idx: jnp.ndarray,
+                       *, interpret: bool = False) -> jnp.ndarray:
+    """pool: [n_slots, *page_shape]; idx: int32 [k] -> [k, *page_shape]."""
+    k = idx.shape[0]
+    page_shape = pool.shape[1:]
+    blk = (1, *page_shape)
+    zeros = (0,) * len(page_shape)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec(blk, lambda i, idx: (idx[i], *zeros))],
+        out_specs=pl.BlockSpec(blk, lambda i, idx: (i, *zeros)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, *page_shape), pool.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), pool)
+
+
+def page_scatter_pallas(pool: jnp.ndarray, idx: jnp.ndarray,
+                        pages: jnp.ndarray, *,
+                        interpret: bool = False) -> jnp.ndarray:
+    """pool[idx[i]] = pages[i]; returns the updated pool (donated input).
+
+    Slots not referenced by idx are passed through untouched via
+    input_output_aliasing.
+    """
+    k = idx.shape[0]
+    page_shape = pool.shape[1:]
+    blk = (1, *page_shape)
+    zeros = (0,) * len(page_shape)
+
+    def scatter_kernel(idx_ref, pages_ref, pool_ref, out_ref):
+        out_ref[...] = pages_ref[...]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec(blk, lambda i, idx: (i, *zeros)),         # pages
+            pl.BlockSpec(blk, lambda i, idx: (idx[i], *zeros)),    # pool (aliased)
+        ],
+        out_specs=pl.BlockSpec(blk, lambda i, idx: (idx[i], *zeros)),
+    )
+    return pl.pallas_call(
+        scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},  # pool -> out (operand idx incl. prefetch)
+        interpret=interpret,
+    )(idx.astype(jnp.int32), pages, pool)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for page gather/scatter."""
+import jax.numpy as jnp
+
+
+def page_gather_ref(pool, idx):
+    return pool[idx]
+
+
+def page_scatter_ref(pool, idx, pages):
+    return pool.at[idx].set(pages)

@@ -1,0 +1,29 @@
+"""jit'd public wrapper for paged decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .paged_attention import paged_attention_pooled
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                    block_table: jnp.ndarray, lengths: jnp.ndarray, *,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """q: [B, Hq, D] decode queries; k/v_pool: [n_slots, page, Hkv, D];
+    block_table: [B, n_pages]; lengths: [B].  Returns [B, Hq, D]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Hq, D = q.shape
+    Hkv = k_pool.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+    qg = (q * scale).reshape(B, Hkv, G, D)
+    out = paged_attention_pooled(qg, k_pool, v_pool,
+                                 block_table.astype(jnp.int32),
+                                 lengths.astype(jnp.int32),
+                                 interpret=interpret)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the paged decode attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                        v_pool: jnp.ndarray, block_table: jnp.ndarray,
+                        lengths: jnp.ndarray) -> jnp.ndarray:
+    """Same signature as paged_attention_pooled (q pre-scaled)."""
+    B, Hkv, G, D = q.shape
+    n_pages = block_table.shape[1]
+    page = k_pool.shape[1]
+    # gather pages -> dense [B, n_pages*page, Hkv, D]
+    k = k_pool[block_table].reshape(B, n_pages * page, Hkv, D)
+    v = v_pool[block_table].reshape(B, n_pages * page, Hkv, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    pos = jnp.arange(n_pages * page)[None, None, None, :]
+    s = jnp.where(pos < lengths[:, None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

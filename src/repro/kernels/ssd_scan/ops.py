@@ -1,0 +1,27 @@
+"""jit'd wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128,
+             interpret: bool | None = None):
+    """x: [B, L, H, P]; dt: [B, L, H]; A: [H]; Bm/Cm: [B, L, N].
+    Pads L to a chunk multiple (identity steps: dt=0)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    L0 = x.shape[1]
+    pad = (-L0) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, h = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk, interpret=interpret)
+    return y[:, :L0], h

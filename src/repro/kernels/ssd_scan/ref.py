@@ -1,0 +1,35 @@
+"""Oracle: the models/ssm.py chunked SSD (itself validated against the
+O(1)-state sequential decode recurrence in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, chunk):
+    """Same signature as ssd_scan_pallas (Bm/Cm: [B, L, N], G=1)."""
+    y, h = ssd_chunked(x, dt, A, Bm[:, :, None, :], Cm[:, :, None, :], chunk)
+    return y, h
+
+
+def ssd_sequential_ref(x, dt, A, Bm, Cm):
+    """Slow O(L) sequential recurrence — the ground-truth definition."""
+    import jax
+    Bsz, L, H, P = x.shape
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        dec = jnp.exp(dtt * A)                       # [B,H]
+        h = h * dec[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhnp", dtt, bt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, Bm.shape[-1], P), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h

@@ -1,0 +1,110 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+Grid: (B, n_chunks) — chunks are innermost and TPU grids run sequentially,
+so the inter-chunk recurrent state h [H, N, P] lives in VMEM scratch and
+carries across chunk iterations (reset at chunk 0 of each batch).  This
+fuses the three phases of SSD (intra-chunk attention-form, chunk-state
+accumulation, inter-chunk recurrence) into one pass over HBM: x/dt/B/C are
+each read exactly once, vs. 3+ reads for the unfused jnp composition.
+
+VMEM residency per chunk (Q=128, H<=128, P=64, N<=128):
+  x block Q*H*P (~4 MB f32), B/C blocks Q*N (tiny), state H*N*P (~4 MB),
+  decay tables Q*H — comfortably inside the 16 MB v5e VMEM with double
+  buffering on the streamed (Thrashing-class) x/B/C blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, hout_ref, h_scr, *, chunk: int):
+    ic = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ic == 0)
+    def _reset():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)     # [Q, H, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)   # [Q, H]
+    A = a_ref[...].astype(jnp.float32)      # [H]
+    Bm = b_ref[0, 0].astype(jnp.float32)    # [Q, N]   (G=1)
+    Cm = c_ref[0, 0].astype(jnp.float32)    # [Q, N]
+
+    Q = chunk
+    dA = dt * A                              # [Q, H]
+    dA_cs = jnp.cumsum(dA, axis=0)           # [Q, H]
+
+    # intra-chunk: att[h,i,j] = (C_i.B_j) exp(dAcs_i - dAcs_j) dt_j, j<=i
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # [Q, Q]
+    seg = dA_cs[:, None, :] - dA_cs[None, :, :]                  # [Q, Q, H]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tri = iota_j <= iota_i
+    att = jnp.where(tri[:, :, None], CB[:, :, None] * jnp.exp(seg), 0.0)
+    att = att * dt[None, :, :]                                   # [Q, Q, H]
+    # y_diag[i,h,p] = sum_j att[i,j,h] x[j,h,p]
+    y_diag = jnp.einsum("ijh,jhp->ihp", att, x)
+
+    # inter-chunk output using incoming state
+    h_prev = h_scr[...]                                          # [H, N, P]
+    y_off = jnp.einsum("qn,hnp->qhp", Cm, h_prev) * jnp.exp(dA_cs)[..., None]
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: h = h*exp(sum dA) + sum_j exp(dA_sum - dAcs_j) dt_j B_j x_j
+    dA_sum = dA_cs[-1, :]                                        # [H]
+    w = jnp.exp(dA_sum[None, :] - dA_cs) * dt                    # [Q, H]
+    states = jnp.einsum("qh,qn,qhp->hnp", w, Bm, x)
+    h_new = h_prev * jnp.exp(dA_sum)[:, None, None] + states
+    h_scr[...] = h_new
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_scan_pallas(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                    Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                    *, interpret: bool = False):
+    """x: [B, L, H, P]; dt: [B, L, H] (post-softplus); A: [H] (negative);
+    Bm/Cm: [B, L, N] (G=1).  L % chunk == 0.
+    Returns (y [B, L, H, P] f32, h_final [B, H, N, P] f32)."""
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = L // chunk
+    assert L % chunk == 0
+
+    xq = x.reshape(Bsz, nc, chunk, H, P)
+    dtq = dt.reshape(Bsz, nc, chunk, H)
+    Bq = Bm.reshape(Bsz, nc, chunk, N)
+    Cq = Cm.reshape(Bsz, nc, chunk, N)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, h_fin = pl.pallas_call(
+        kernel,
+        grid=(Bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, H, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, H), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, H, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, H, N, P), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, nc, chunk, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, N, P), jnp.float32)],
+        interpret=interpret,
+    )(xq, dtq, A, Bq, Cq)
+    return y.reshape(Bsz, L, H, P), h_fin

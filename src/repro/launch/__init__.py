@@ -1,0 +1,8 @@
+"""Launcher: mesh construction, dry-run, train/serve drivers.
+
+NOTE: dryrun must be run as a fresh process (`python -m repro.launch.dryrun`)
+because it sets XLA_FLAGS before jax initializes.
+"""
+from . import mesh
+
+__all__ = ["mesh"]

@@ -1,0 +1,292 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 placeholder devices and extract roofline inputs.
+
+MUST set XLA_FLAGS before any jax import (jax locks the device count at
+first init) — hence the first two lines.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmoe_1b_7b --shape train_4k \
+      [--multi-pod] [--out results.json]
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, cells, get_arch  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import make_mesh_info, make_production_mesh  # noqa: E402
+from repro.launch.train import init_opt_shardings, make_train_step  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+# HLO collective-traffic accounting (ring-algorithm per-chip approximations;
+# see DESIGN.md Sec. 7):  kind -> (which shapes, multiplier)
+_SHAPE_RE = re.compile(r"(?:bf16|f16|f32|f64|f8\w*|u8|u16|u32|u64|s8|s16|s32|s64|pred)\[[0-9,]*\]")
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "u8": 1, "s8": 1,
+                "u16": 2, "s16": 2, "u32": 4, "s32": 4, "u64": 8, "s64": 8,
+                "pred": 1}
+
+
+def _shape_bytes(tok: str) -> int:
+    dt, dims = tok.split("[")
+    dims = dims.rstrip("]")
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    base = 1
+    for k, v in _DTYPE_BYTES.items():
+        if dt.startswith(k):
+            base = v
+            break
+    return n * base
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-chip collective traffic from optimized HLO text."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"=\s+(\S+)\s+(all-reduce|all-gather|reduce-scatter|"
+                      r"all-to-all|collective-permute)(-start)?\(", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        lhs, rhs = line.split("=", 1)
+        # output shapes: tokens before the op name; operand shapes: after '('
+        pre, _, post = rhs.partition("(")
+        out_bytes = sum(_shape_bytes(t) for t in _SHAPE_RE.findall(pre))
+        in_bytes = sum(_shape_bytes(t) for t in
+                       _SHAPE_RE.findall(post.split("replica_groups")[0]))
+        if kind == "all-reduce":
+            traffic = 2 * out_bytes
+        elif kind == "all-gather":
+            traffic = out_bytes
+        elif kind == "reduce-scatter":
+            traffic = in_bytes
+        elif kind == "all-to-all":
+            traffic = in_bytes
+        else:  # collective-permute
+            traffic = out_bytes
+        out[kind] += traffic
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+_OP_RE = re.compile(r"^\s*%?\S+ = (\S+?)\[([0-9,]*)\]\S* ([\w-]+)\(")
+
+
+def parse_op_bytes(hlo_text: str) -> dict:
+    """Output-byte totals for backend-artifact ops.  The CPU backend has no
+    native bf16 compute, so it wraps every bf16 dot in convert-to-f32 (+
+    layout copies); a TPU MXU consumes bf16 directly.  The roofline
+    subtracts these from the memory term (EXPERIMENTS.md §Roofline)."""
+    agg = {"convert": 0, "copy": 0, "bitcast": 0, "transpose": 0,
+           "all_ops": 0}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        base = 1
+        for k, v in _DTYPE_BYTES.items():
+            if dt.startswith(k):
+                base = v
+                break
+        b = n * base
+        agg["all_ops"] += b
+        if op in agg:
+            agg[op] += b
+    return agg
+
+
+def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+               seq_shard: bool = True, save_hlo: bool = False,
+               analysis: bool = False, q_chunk: int | None = None,
+               kv_int8: bool = False, unstack: bool = False,
+               tag: str = "") -> dict:
+    cfg = get_arch(arch_id)
+    from dataclasses import replace as _replace
+    if q_chunk:
+        cfg = _replace(cfg, attn_q_chunk=q_chunk)
+    if kv_int8:
+        cfg = _replace(cfg, kv_cache_quant=True)
+    serve_unstacked = unstack and SHAPES[shape_name].kind != "train"
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mi = make_mesh_info(mesh, seq_shard=seq_shard)
+
+    pstructs = S.param_struct(cfg, unstacked=serve_unstacked)
+    psh, pspecs = S.param_shardings(cfg, mi, unstacked=serve_unstacked)
+
+    analysis_scale = 1  # multiply analysis flops/collectives by this
+    t0 = time.time()
+    if shape.kind == "train":
+        ostructs = jax.eval_shape(lambda: adamw.init(pstructs))
+        osh = init_opt_shardings(cfg, mi)
+        if analysis:
+            # unrolled, single-microbatch lowering: no while loops, so HLO
+            # cost totals are exact; scale by the real microbatch count.
+            plan = S.plan_microbatches(cfg, shape, mi)
+            analysis_scale = plan.n_micro
+            bspecs, bsh = S.train_input_specs(cfg, shape, mi, force_n_micro=1)
+            step = make_train_step(cfg, mi, unrolled=True)
+        else:
+            bspecs, bsh = S.train_input_specs(cfg, shape, mi)
+            step = make_train_step(cfg, mi)
+        jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
+                         donate_argnums=(0, 1))
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(pstructs, ostructs, bspecs)
+    elif shape.kind == "prefill":
+        plan = S.plan_microbatches(cfg, shape, mi)
+        bspecs, bsh = S.prefill_input_specs(cfg, shape, mi)
+
+        def serve_prefill(params, batch):
+            return T.prefill(params, cfg, batch, plan.cache_len, mi,
+                             unrolled=analysis or bool(q_chunk))
+
+        jitted = jax.jit(serve_prefill, in_shardings=(psh, bsh))
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(pstructs, bspecs)
+    else:  # decode / long_decode
+        state, sspecs, ssh, tok, tsh = S.decode_input_specs(cfg, shape, mi)
+
+        def serve_step(params, st, batch):
+            return T.decode_step(params, cfg, st, batch, mi)
+
+        jitted = jax.jit(serve_step, in_shardings=(psh, ssh, tsh),
+                         donate_argnums=(1,))
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(pstructs, state, tok)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(mem, attr):
+            mem_d[attr] = int(getattr(mem, attr))
+    cost = compiled.cost_analysis() or {}
+    cost_d = {k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float)) and (
+                  k in ("flops", "bytes accessed", "optimal_seconds")
+                  or k.startswith("bytes accessed"))}
+    text = compiled.as_text()
+    coll = parse_collectives(text)
+    op_bytes = parse_op_bytes(text)
+
+    result = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.devices.size,
+        "kind": shape.kind,
+        "analysis": analysis, "analysis_scale": analysis_scale,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_d, "cost": cost_d, "collectives": coll,
+        "op_bytes": op_bytes,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if save_hlo:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        hlo_path = RESULTS_DIR / f"{arch_id}__{shape_name}__{result['mesh']}.hlo"
+        hlo_path.write_text(text)
+        result["hlo_file"] = str(hlo_path)
+    return result
+
+
+def run_and_save(arch_id: str, shape_name: str, *, multi_pod: bool,
+                 seq_shard: bool = True, save_hlo: bool = False,
+                 analysis: bool = False, q_chunk: int | None = None,
+                 kv_int8: bool = False, unstack: bool = False,
+                 tag: str = "") -> dict:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    suffix = ("__analysis" if analysis else "") + (f"__{tag}" if tag else "")
+    out_path = RESULTS_DIR / f"{arch_id}__{shape_name}__{mesh_tag}{suffix}.json"
+    try:
+        res = lower_cell(arch_id, shape_name, multi_pod=multi_pod,
+                         seq_shard=seq_shard, save_hlo=save_hlo,
+                         analysis=analysis, q_chunk=q_chunk,
+                         kv_int8=kv_int8, unstack=unstack)
+        res["status"] = "ok"
+    except Exception as e:  # record the failure for triage
+        res = {"arch": arch_id, "shape": shape_name, "mesh": mesh_tag,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    out_path.write_text(json.dumps(res, indent=1))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--analysis", action="store_true",
+                    help="unrolled lowering with exact cost totals")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--unstack", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    todo = cells() if args.all else [(args.arch, args.shape)]
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    suffix = "__analysis" if args.analysis else ""
+    for arch_id, shape_name in todo:
+        if args.skip_existing:
+            p = RESULTS_DIR / f"{arch_id}__{shape_name}__{mesh_tag}{suffix}.json"
+            if p.exists() and json.loads(p.read_text()).get("status") == "ok":
+                print(f"[   skip] {arch_id} {shape_name} {mesh_tag}")
+                continue
+        t0 = time.time()
+        res = run_and_save(arch_id, shape_name, multi_pod=args.multi_pod,
+                           seq_shard=not args.no_seq_shard,
+                           save_hlo=args.save_hlo, analysis=args.analysis,
+                           q_chunk=args.q_chunk, kv_int8=args.kv_int8,
+                           unstack=args.unstack, tag=args.tag)
+        status = res.get("status")
+        extra = ""
+        if status == "ok":
+            extra = (f"flops={res['cost'].get('flops', 0):.3g} "
+                     f"coll={res['collectives']['total_bytes']:.3g}B "
+                     f"compile={res['compile_s']}s")
+        else:
+            extra = res.get("error", "")[:200]
+        print(f"[{time.time()-t0:7.1f}s] {arch_id} {shape_name} "
+              f"{res.get('mesh')}: {status} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every
+(architecture x input shape x mesh) dry-run cell — weak-type-correct,
+shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.parallel import sharding as sh
+
+PARAM_DTYPE = jnp.bfloat16
+ACT_DTYPE = jnp.bfloat16
+CACHE_PAD = 512  # decode caches get seq_len + CACHE_PAD slots (512 keeps
+                 # cache_len divisible by every seq-sharding group size)
+
+
+@dataclass(frozen=True)
+class RuntimePlan:
+    n_micro: int          # gradient-accumulation microbatches (train)
+    micro_batch: int      # global tokens-batch per microbatch
+    cache_len: int = 0    # decode cache capacity
+
+
+def plan_microbatches(cfg: ArchConfig, shape: ShapeConfig,
+                      mi: sh.MeshInfo) -> RuntimePlan:
+    """Pick grad-accum so the per-device microbatch is 1-2 sequences —
+    the activation-memory knob for big models (DESIGN.md Sec. 3.3)."""
+    if shape.kind != "train":
+        return RuntimePlan(1, shape.global_batch,
+                           cache_len=shape.seq_len + CACHE_PAD)
+    per_dev = 1 if cfg.d_model * cfg.n_layers >= 3072 * 32 else 2
+    micro = max(mi.n_data * per_dev, 1)
+    micro = min(micro, shape.global_batch)
+    while shape.global_batch % micro:
+        micro -= 1
+    return RuntimePlan(shape.global_batch // micro, micro)
+
+
+# --- inputs ------------------------------------------------------------------
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeConfig, mi: sh.MeshInfo,
+                      force_n_micro: int | None = None) -> tuple[dict, dict]:
+    """(ShapeDtypeStructs, shardings) for the [n_micro, Bm, S] batch."""
+    plan = plan_microbatches(cfg, shape, mi)
+    nm, bm, S = plan.n_micro, plan.micro_batch, shape.seq_len
+    if force_n_micro is not None:
+        nm = force_n_micro
+    dp = P(None, mi.dp_axes, None)
+    specs: dict[str, Any] = {
+        "labels": jax.ShapeDtypeStruct((nm, bm, S), jnp.int32)}
+    shards: dict[str, Any] = {"labels": NamedSharding(mi.mesh, dp)}
+    if cfg.input_mode == "embeds":
+        specs["embeds"] = jax.ShapeDtypeStruct((nm, bm, S, cfg.d_model),
+                                               ACT_DTYPE)
+        shards["embeds"] = NamedSharding(mi.mesh, P(None, mi.dp_axes, None, None))
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((nm, bm, S), jnp.int32)
+        shards["tokens"] = NamedSharding(mi.mesh, dp)
+    return specs, shards
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig, mi: sh.MeshInfo):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "embeds":
+        specs = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), ACT_DTYPE)}
+        shards = {"embeds": NamedSharding(mi.mesh, P(mi.dp_axes, None, None))}
+    else:
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        shards = {"tokens": NamedSharding(mi.mesh, P(mi.dp_axes, None))}
+    return specs, shards
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig, mi: sh.MeshInfo):
+    """Decode-state + one-token-batch stand-ins.
+
+    decode_32k: batch over data axes, cache seq over model.
+    long_500k (batch=1): cache seq over *all* axes — the whole pod holds
+    one sequence's KV (distributed flash-decode)."""
+    B, S = shape.global_batch, shape.seq_len
+    cache_len = S + CACHE_PAD
+    long_ctx = shape.kind == "long_decode"
+
+    state = jax.eval_shape(
+        lambda: T.init_decode_state(cfg, B, cache_len, dtype=ACT_DTYPE,
+                                    start_pos=S))
+
+    batch_axes = () if long_ctx else mi.dp_axes
+    seq_axes = (tuple(mi.dp_axes) + (mi.model_axis,)) if long_ctx \
+        else (mi.model_axis,)
+
+    def kv_spec(arr):
+        # [B, W, Hkv, Dh]: ring buffers (W small) replicate on seq
+        W = arr.shape[1]
+        seq = seq_axes if W >= 4096 else None
+        return P(batch_axes or None, seq, None, None)
+
+    def pos_spec(arr):
+        W = arr.shape[1]
+        seq = seq_axes if W >= 4096 else None
+        return P(batch_axes or None, seq)
+
+    def attn_specs(c):
+        d = {"k": kv_spec(c["k"]), "v": kv_spec(c["v"]),
+             "pos": pos_spec(c["pos"])}
+        if "k_scale" in c:
+            d["k_scale"] = pos_spec(c["k_scale"])
+            d["v_scale"] = pos_spec(c["v_scale"])
+        return d
+
+    state_specs = {
+        "positions": P(batch_axes or None),
+        "attn": [attn_specs(c) for c in state["attn"]],
+        "mamba": [{"h": P(batch_axes or None, mi.model_axis, None, None),
+                   "conv": P(batch_axes or None, None, mi.model_axis)}
+                  for _ in state["mamba"]],
+    }
+    state_shards = jax.tree.map(
+        lambda s: NamedSharding(mi.mesh, s), state_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    if cfg.input_mode == "embeds":
+        tok = {"embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model), ACT_DTYPE)}
+        tok_sh = {"embeds": NamedSharding(mi.mesh,
+                                          P(batch_axes or None, None, None))}
+    else:
+        tok = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        tok_sh = {"tokens": NamedSharding(mi.mesh, P(batch_axes or None, None))}
+    return state, state_specs, state_shards, tok, tok_sh
+
+
+def param_struct(cfg: ArchConfig, dtype=PARAM_DTYPE, unstacked: bool = False):
+    """ShapeDtypeStructs of the param tree (no allocation)."""
+    fn = (lambda: T.unstack_params(
+              T.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype),
+              cfg.n_layers)) if unstacked else \
+        (lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype))
+    return jax.eval_shape(fn)
+
+
+def param_shardings(cfg: ArchConfig, mi: sh.MeshInfo, unstacked: bool = False):
+    specs = sh.param_specs(cfg, mi)
+    if unstacked:
+        def drop_lead(p):
+            return P(*p[1:]) if len(p) > 0 else p
+        lay = jax.tree.map(drop_lead, specs["layers"],
+                           is_leaf=lambda x: isinstance(x, P))
+        specs = {**specs, "layers": [lay] * cfg.n_layers}
+    return jax.tree.map(lambda s: NamedSharding(mi.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P)), specs

@@ -1,0 +1,173 @@
+"""Training-step assembly: gradient accumulation (lax.scan over
+microbatches), fp32 ZeRO-sharded grad accumulators, AdamW update, donated
+buffers — plus the runnable single-host training driver used by the
+examples and integration tests.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import Checkpointer
+from repro.configs import SHAPES, get_arch, smoke
+from repro.configs.base import ArchConfig
+from repro.data import Prefetcher, ShardInfo, SyntheticLM
+from repro.models import transformer as T
+from repro.optim import adamw, cosine_with_warmup
+from repro.parallel import sharding as sh
+
+
+def make_train_step(cfg: ArchConfig, mi: sh.MeshInfo | None, *,
+                    lr_fn=None, clip_norm: float = 1.0,
+                    weight_decay: float = 0.1, unrolled: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch leaves have leading [n_micro, micro_batch, ...]; grads accumulate
+    in fp32 across the microbatch scan (ZeRO-sharded when mi is given).
+
+    unrolled=True: analysis mode — python-loop layers and (when n_micro==1)
+    skip the microbatch scan entirely, so the lowered HLO has no while
+    loops and cost_analysis totals are exact (see launch/dryrun.py).
+    """
+    if lr_fn is None:
+        lr_fn = lambda step: 3e-4
+
+    zspecs = None
+    if mi is not None:
+        pspecs = sh.param_specs(cfg, mi)
+        pstructs = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+        zspecs = adamw.zero_specs(pstructs, pspecs, mi.dp_axes, mi.n_data)
+
+    def zconstrain(tree):
+        if mi is None or zspecs is None:
+            return tree
+        leaves, treedef = jax.tree.flatten(tree)
+        spec_leaves = treedef.flatten_up_to(zspecs)
+        return treedef.unflatten([
+            jax.lax.with_sharding_constraint(x, NamedSharding(mi.mesh, s))
+            for x, s in zip(leaves, spec_leaves)])
+
+    def train_step(params, opt_state, batch):
+        n_micro = jax.tree.leaves(batch)[0].shape[0]
+
+        def micro(carry, mb):
+            gacc, loss_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                T.loss_fn, has_aux=True)(params, cfg, mb, mi, unrolled)
+            g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
+            g = zconstrain(g)
+            return (g, loss_acc + metrics["ce_loss"]), None
+
+        gacc0 = zconstrain(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        if n_micro == 1 and unrolled:
+            mb0 = jax.tree.map(lambda x: x[0], batch)
+            (grads, loss_sum), _ = micro((gacc0, jnp.float32(0.0)), mb0)
+        else:
+            (grads, loss_sum), _ = jax.lax.scan(
+                micro, (gacc0, jnp.float32(0.0)), batch)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        lr = lr_fn(opt_state.step)
+        new_params, new_opt, om = adamw.update(
+            grads, opt_state, params, lr=lr, clip_norm=clip_norm,
+            weight_decay=weight_decay)
+        if mi is not None:
+            pspecs_ = sh.param_specs(cfg, mi)
+            leaves, treedef = jax.tree.flatten(new_params)
+            spec_leaves = treedef.flatten_up_to(pspecs_)
+            new_params = treedef.unflatten([
+                jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mi.mesh, s))
+                for x, s in zip(leaves, spec_leaves)])
+        metrics = {"loss": loss_sum / n_micro, "lr": lr, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_opt_shardings(cfg: ArchConfig, mi: sh.MeshInfo):
+    """NamedShardings for AdamWState (ZeRO-sharded moments)."""
+    pstructs = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = sh.param_specs(cfg, mi)
+    zspecs = adamw.zero_specs(pstructs, pspecs, mi.dp_axes, mi.n_data)
+    mk = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mi.mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return adamw.AdamWState(step=NamedSharding(mi.mesh, P()),
+                            m=mk(zspecs), v=mk(zspecs))
+
+
+# --- single-host driver (examples / integration tests) -------------------------
+
+def train_loop(cfg: ArchConfig, *, steps: int = 100, global_batch: int = 8,
+               seq_len: int = 64, n_micro: int = 2, lr: float = 1e-3,
+               ckpt_dir: str | None = None, ckpt_every: int = 50,
+               seed: int = 0, memos_cfg=None, log_every: int = 10,
+               resume: bool = True, crash_at: int | None = None):
+    """Runnable training driver with checkpoint/restart and (for MoE archs)
+    memos expert tiering.  Returns the loss history."""
+    source = SyntheticLM(cfg.vocab, seq_len, global_batch, seed=seed,
+                         input_mode=cfg.input_mode, d_model=cfg.d_model)
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw.init(params)
+    lr_fn = partial(cosine_with_warmup, peak_lr=lr, warmup=10, total=steps)
+    step_fn = jax.jit(make_train_step(cfg, None, lr_fn=lr_fn))
+
+    ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+    start = 0
+    if ckpt and resume and ckpt.latest_step() is not None:
+        (params, opt), start, _ = ckpt.restore((params, opt))
+        start = int(start)
+
+    losses = []
+    for step in range(start, steps):
+        raw = source.batch(step)
+        batch = {k: np.reshape(v, (n_micro, v.shape[0] // n_micro,
+                                   *v.shape[1:]))
+                 for k, v in raw.items()}
+        params, opt, m = step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+        if log_every and step % log_every == 0:
+            print(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                  f"gnorm {float(m['grad_norm']):.3f}")
+        if ckpt and (step + 1) % ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt))
+        if crash_at is not None and step + 1 == crash_at:
+            if ckpt:
+                ckpt.wait()
+            raise RuntimeError(f"simulated crash at step {step + 1}")
+    if ckpt:
+        ckpt.save(steps, (params, opt), block=True)
+    return losses, params, opt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe_1b_7b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke(cfg)
+    losses, _, _ = train_loop(cfg, steps=args.steps,
+                              global_batch=args.batch, seq_len=args.seq,
+                              ckpt_dir=args.ckpt)
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,279 @@
+"""Attention: GQA with RoPE / M-RoPE, causal + sliding-window masks,
+qk-norm, QKV bias; prefill and decode (dense or paged KV) paths.
+
+Shapes:  x [B, S, d];  q [B, S, Hq, Dh];  k/v [B, S, Hkv, Dh].
+The window parameter is a *traced scalar* so local/global layer patterns
+(gemma3 5:1) run through one trace with a per-layer window array instead
+of distinct branches.
+
+All einsums keep the head axis explicit so the `model` mesh axis can shard
+either the head count or (when heads don't divide the axis) the head_dim —
+interleaved-pair RoPE keeps rotation pairs contiguous under Dh sharding.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+NEG_INF = -2.0e38
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray            # [d, Hq, Dh]
+    wk: jnp.ndarray            # [d, Hkv, Dh]
+    wv: jnp.ndarray            # [d, Hkv, Dh]
+    wo: jnp.ndarray            # [Hq, Dh, d]
+    bq: jnp.ndarray | None     # [Hq, Dh] or None  (qwen2 QKV bias)
+    bk: jnp.ndarray | None
+    bv: jnp.ndarray | None
+    q_norm: jnp.ndarray | None  # [Dh] qk_norm scales (qwen3)
+    k_norm: jnp.ndarray | None
+
+
+def init_attn_params(key, d_model: int, n_heads: int, n_kv_heads: int,
+                     d_head: int, *, qkv_bias: bool = False,
+                     qk_norm: bool = False, dtype=jnp.float32) -> AttnParams:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    return AttnParams(
+        wq=(jax.random.normal(k1, (d_model, n_heads, d_head)) * s).astype(dtype),
+        wk=(jax.random.normal(k2, (d_model, n_kv_heads, d_head)) * s).astype(dtype),
+        wv=(jax.random.normal(k3, (d_model, n_kv_heads, d_head)) * s).astype(dtype),
+        wo=(jax.random.normal(k4, (n_heads, d_head, d_model)) * s).astype(dtype),
+        bq=jnp.zeros((n_heads, d_head), dtype) if qkv_bias else None,
+        bk=jnp.zeros((n_kv_heads, d_head), dtype) if qkv_bias else None,
+        bv=jnp.zeros((n_kv_heads, d_head), dtype) if qkv_bias else None,
+        q_norm=jnp.ones((d_head,), dtype) if qk_norm else None,
+        k_norm=jnp.ones((d_head,), dtype) if qk_norm else None,
+    )
+
+
+def project_qkv(p: AttnParams, x: jnp.ndarray,
+                cos: jnp.ndarray, sin: jnp.ndarray):
+    """Project + (optional bias, qk-norm) + RoPE."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, p.wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, p.wv)
+    if p.bq is not None:
+        q = q + p.bq
+        k = k + p.bk
+        v = v + p.bv
+    if p.q_norm is not None:
+        q = layers.rms_norm(q, p.q_norm)
+        k = layers.rms_norm(k, p.k_norm)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+               window: jnp.ndarray | int | None) -> jnp.ndarray:
+    """Additive mask bias [.., Sq, Sk]: causal + optional sliding window.
+
+    window is a traced scalar (tokens of look-back); <=0 or None = full
+    causal. Positions may be batched ([B, S]) or flat ([S])."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    ok = dk <= dq
+    if window is not None:
+        w = jnp.asarray(window)
+        in_win = (dq - dk) < jnp.where(w > 0, w, jnp.iinfo(jnp.int32).max)
+        ok = ok & in_win
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         mask_bias: jnp.ndarray, *, soft_cap: float | None = None,
+         q_chunk: int | None = None, unrolled: bool = False) -> jnp.ndarray:
+    """Scaled dot-product attention, KV-expansion form (train/prefill).
+
+    q: [B, Sq, Hq, Dh]; k/v: [B, Sk, Hkv, Dh]; mask_bias: [B|1, Sq, Sk].
+    GQA KV is expanded to Hq heads so every einsum is uniformly sharded on
+    the q-head axis under TP (the expansion is a broadcast-slice per shard,
+    free of collectives; Sk here is the activation length, so the extra
+    bytes are small — decode uses the grouped form below instead).
+
+    q_chunk (§Perf iteration 1): flash-style query chunking — only a
+    [B, H, q_chunk, Sk] logits block materializes at a time (the full
+    softmax row lives within a chunk, so no online-softmax state is
+    needed), and jax.checkpoint on the chunk body keeps the backward pass
+    from saving any logits.  ``unrolled=True`` python-loops the chunks so
+    dry-run cost analysis counts them exactly; deployment uses lax.scan.
+    The Pallas flash kernel (kernels/flash_attention) is the TPU runtime
+    equivalent with the same blocking.
+    """
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    scale = Dh ** -0.5
+    kf = k.astype(jnp.float32)
+
+    def dense(qc: jnp.ndarray, mb: jnp.ndarray) -> jnp.ndarray:
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32) * scale,
+                            kf)
+        if soft_cap is not None:
+            logits = jnp.tanh(logits / soft_cap) * soft_cap
+        logits = logits + mb[:, None, :, :]
+        w = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+    return dense(q, mask_bias)
+
+
+def sdpa_qchunked(q, k, v, positions, *, window=None, soft_cap=None,
+                  q_chunk: int = 1024, unrolled: bool = False):
+    """Query-chunked sdpa: per-chunk mask construction + jax.checkpoint on
+    the chunk body, so neither the [Sq, Sk] mask nor any logits block
+    bigger than [B, H, q_chunk, Sk] ever materializes (fwd or bwd)."""
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    if Sq % q_chunk or Sq <= q_chunk:
+        bias = _mask_bias(positions, positions, window)
+        return sdpa(q, k, v, bias, soft_cap=soft_cap)
+    scale = Dh ** -0.5
+    kf = k.astype(jnp.float32)
+    k_pos = positions
+
+    def body(qc, qpos):
+        logits = jnp.einsum("bqhd,bkhd->bhqk",
+                            qc.astype(jnp.float32) * scale, kf)
+        if soft_cap is not None:
+            logits = jnp.tanh(logits / soft_cap) * soft_cap
+        logits = logits + _mask_bias(qpos, k_pos, window)[:, None, :, :]
+        w = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+    body = jax.checkpoint(body)
+    nq = Sq // q_chunk
+    if unrolled:
+        outs = [body(q[:, i * q_chunk:(i + 1) * q_chunk],
+                     positions[:, i * q_chunk:(i + 1) * q_chunk])
+                for i in range(nq)]
+        return jnp.concatenate(outs, axis=1)
+    qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, Hq, Dh), 1, 0)
+    ps = jnp.moveaxis(positions.reshape(B, nq, q_chunk), 1, 0)
+    outs = jax.lax.map(lambda args: body(*args), (qs, ps))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, Dh)
+
+
+def sdpa_grouped(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 mask_bias: jnp.ndarray, *,
+                 soft_cap: float | None = None) -> jnp.ndarray:
+    """Grouped-query form (decode): never expands the KV cache.
+
+    q: [B, Sq, Hq, Dh]; k/v: [B, Sk, Hkv, Dh].  With the cache sequence
+    dim sharded over `model`, the softmax reductions and the PV contraction
+    become tiny cross-shard psums — distributed flash-decode."""
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    scale = Dh ** -0.5
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if soft_cap is not None:
+        logits = jnp.tanh(logits / soft_cap) * soft_cap
+    logits = logits + mask_bias[:, None, None, :, :]
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, Dh)
+
+
+def attention(p: AttnParams, x: jnp.ndarray, positions: jnp.ndarray,
+              cos: jnp.ndarray, sin: jnp.ndarray,
+              *, window: jnp.ndarray | int | None = None,
+              soft_cap: float | None = None,
+              q_chunk: int | None = None,
+              unrolled: bool = False) -> jnp.ndarray:
+    """Full self-attention over x (training / prefill). positions: [B, S]."""
+    q, k, v = project_qkv(p, x, cos, sin)
+    if q_chunk is not None:
+        out = sdpa_qchunked(q, k, v, positions, window=window,
+                            soft_cap=soft_cap, q_chunk=q_chunk,
+                            unrolled=unrolled)
+    else:
+        bias = _mask_bias(positions, positions, window)
+        out = sdpa(q, k, v, bias, soft_cap=soft_cap)
+    return jnp.einsum("bshk,hkd->bsd", out, p.wo), (k, v)
+
+
+def decode_attention(p: AttnParams, x: jnp.ndarray,
+                     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     pos_cache: jnp.ndarray, positions: jnp.ndarray,
+                     cos: jnp.ndarray, sin: jnp.ndarray,
+                     *, window: jnp.ndarray | int | None = None,
+                     soft_cap: float | None = None,
+                     k_scale: jnp.ndarray | None = None,
+                     v_scale: jnp.ndarray | None = None):
+    """One-token decode against a (dense or rolling-window) KV cache.
+
+    x: [B, 1, d]; k/v_cache: [B, Smax, Hkv, Dh]; pos_cache: int32 [B, Smax]
+    giving the *token position* held by each cache slot (-1 = empty);
+    positions: [B, 1] position of the new token.  The write slot is
+    ``position % Smax`` — identity for a full-length cache, a rolling
+    ring-buffer for a sliding-window cache (Smax = window), which is how
+    mixtral SWA / gemma3 local layers bound KV at 500k context.
+
+    With int8 caches (k/v_scale given, per-[B, slot, Hkv] scales), the new
+    token's K/V quantize on write and the attend dequantizes on read —
+    halving decode's dominant HBM term (KV bytes).  On TPU the
+    paged_attention kernel performs the dequant in VMEM; the memos slow
+    tier uses the same trick for cold pages (TierStore.quantize_slow).
+
+    Returns (out [B,1,d], k_cache, v_cache, pos_cache[, k_scale, v_scale]).
+    The Pallas paged kernel (kernels/paged_attention) replaces the attend
+    on TPU serving.
+    """
+    B, _, _ = x.shape
+    Smax = k_cache.shape[1]
+    q, k_new, v_new = project_qkv(p, x, cos, sin)
+    quantized = k_scale is not None
+
+    # scatter-append at the ring slot (not a full-cache rewrite — keeps
+    # decode memory traffic O(B·Hkv·Dh), not O(B·Smax·Hkv·Dh))
+    b_idx = jnp.arange(B)
+    pos = positions[:, 0]
+    slot = pos % Smax
+    if quantized:
+        def q8(u):  # [B, Hkv, Dh] -> int8 + per-head scale
+            s = jnp.max(jnp.abs(u.astype(jnp.float32)), axis=-1) / 127.0
+            s = jnp.maximum(s, 1e-8)
+            return (jnp.clip(jnp.round(u / s[..., None]), -127, 127)
+                    .astype(jnp.int8), s)
+        k8, ks = q8(k_new[:, 0])
+        v8, vs = q8(v_new[:, 0])
+        k_cache = k_cache.at[b_idx, slot].set(k8)
+        v_cache = v_cache.at[b_idx, slot].set(v8)
+        k_scale = k_scale.at[b_idx, slot].set(ks)
+        v_scale = v_scale.at[b_idx, slot].set(vs)
+        k_read = k_cache.astype(jnp.float32) * k_scale[..., None]
+        v_read = v_cache.astype(jnp.float32) * v_scale[..., None]
+    else:
+        k_cache = k_cache.at[b_idx, slot].set(k_new[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[b_idx, slot].set(v_new[:, 0].astype(v_cache.dtype))
+        k_read, v_read = k_cache, v_cache
+    pos_cache = pos_cache.at[b_idx, slot].set(pos.astype(pos_cache.dtype))
+
+    valid = (pos_cache >= 0) & (pos_cache <= pos[:, None])
+    if window is not None:
+        w = jnp.asarray(window)
+        valid = valid & ((pos[:, None] - pos_cache)
+                         < jnp.where(w > 0, w, jnp.iinfo(jnp.int32).max))
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[:, None, :]
+
+    out = sdpa_grouped(q, k_read, v_read, bias, soft_cap=soft_cap)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p.wo)
+    if quantized:
+        return out, k_cache, v_cache, pos_cache, k_scale, v_scale
+    return out, k_cache, v_cache, pos_cache

@@ -1,0 +1,124 @@
+"""Shared neural building blocks: norms, rotary embeddings (incl. M-RoPE),
+gated MLPs, embeddings.
+
+Conventions:
+  * pure functions over explicit param dicts (no framework dependency);
+  * params stacked along a leading layer axis are handled by the caller
+    (lax.scan slices them);
+  * RoPE uses the *interleaved-pair* convention (pairs (2i, 2i+1)), which
+    keeps each rotation pair contiguous so head_dim can be sharded across
+    the `model` mesh axis at any even boundary (DESIGN.md Sec. 3.3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-6,
+             gemma_style: bool = False) -> jnp.ndarray:
+    """RMSNorm; gemma_style multiplies by (1 + scale) as Gemma does."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if gemma_style else scale.astype(jnp.float32)
+    return (x * w).astype(dtype)
+
+
+# --- rotary position embeddings ------------------------------------------------
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for interleaved-pair RoPE.
+
+    positions: [..., S] integer positions.
+    Returns (cos, sin) each [..., S, head_dim/2].
+    """
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Apply interleaved-pair rotation.  x: [..., S, H, D]; cos/sin either
+    [..., S, D/2] (broadcast over heads) or already head-shaped."""
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    xe = x[..., 0::2]
+    xo = x[..., 1::2]
+    if cos.ndim == x.ndim - 1:  # add head axis
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    ye = xe * cos - xo * sin
+    yo = xe * sin + xo * cos
+    y = jnp.stack([ye, yo], axis=-1).reshape(x.shape)
+    return y.astype(orig)
+
+
+def mrope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                 sections: tuple[int, ...]) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Multimodal RoPE (Qwen2-VL): the head_dim/2 frequency slots are split
+    into ``sections`` (temporal, height, width), each rotated by its own
+    position stream.
+
+    positions: [..., S, n_sections] int positions (for text tokens all
+    streams are equal, degenerating to standard RoPE).
+    Returns (cos, sin) each [..., S, head_dim/2].
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # section id per frequency slot
+    sec_id = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])
+    pos = positions[..., sec_id]                       # [..., S, half]
+    ang = pos.astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# --- MLPs ------------------------------------------------------------------
+
+def swiglu_mlp(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+               w_down: jnp.ndarray, *, act=jax.nn.silu) -> jnp.ndarray:
+    """SwiGLU/GeGLU feed-forward: act(x@Wg) * (x@Wu) @ Wd."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", act(g) * u, w_down)
+
+
+def gelu_mlp(x: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray) -> jnp.ndarray:
+    """Plain 2-matrix FFN (musicgen-style)."""
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(
+        jnp.einsum("...d,df->...f", x, w_up)), w_down)
+
+
+# --- embedding / unembedding ---------------------------------------------------
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray,
+          *, scale_by_sqrt_dim: bool = False) -> jnp.ndarray:
+    out = jnp.take(table, tokens, axis=0)
+    if scale_by_sqrt_dim:
+        out = out * jnp.sqrt(jnp.asarray(table.shape[-1], out.dtype))
+    return out
+
+
+def unembed(x: jnp.ndarray, table_or_head: jnp.ndarray, *, tied: bool) -> jnp.ndarray:
+    if tied:  # table: [V, d]
+        return jnp.einsum("...d,vd->...v", x, table_or_head)
+    return jnp.einsum("...d,dv->...v", x, table_or_head)
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          *, valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token cross-entropy, stable, fp32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if valid is not None:
+        v = valid.astype(jnp.float32)
+        return jnp.sum(nll * v) / jnp.maximum(jnp.sum(v), 1.0)
+    return jnp.mean(nll)

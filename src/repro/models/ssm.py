@@ -1,0 +1,266 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD forward for train/prefill (O(L·Q) intra-chunk matmuls + an
+O(L/Q) inter-chunk scan) and an O(1)-state decode step.  The intra-chunk
+block-matmul is the compute hot-spot and has a Pallas kernel
+(kernels/ssd_scan); this module is the pure-jnp implementation used as the
+oracle and the dry-run lowering path.
+
+Layout: d_inner = expand * d_model; heads H = d_inner / headdim P;
+B/C shared across heads within G groups (G=1 here); state size N.
+
+Sharding: heads are sharded over the `model` mesh axis (H % |model| == 0
+for the assigned archs); B/C are group-shared and replicated; the SSM
+state [B, H, N, P] shards on H.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MambaParams(NamedTuple):
+    in_proj_z: jnp.ndarray    # [d, d_inner]
+    in_proj_x: jnp.ndarray    # [d, d_inner]
+    in_proj_B: jnp.ndarray    # [d, G*N]
+    in_proj_C: jnp.ndarray    # [d, G*N]
+    in_proj_dt: jnp.ndarray   # [d, H]
+    conv_w: jnp.ndarray       # [K, conv_ch]  depthwise over (x ‖ B ‖ C)
+    conv_b: jnp.ndarray       # [conv_ch]
+    dt_bias: jnp.ndarray      # [H]
+    A_log: jnp.ndarray        # [H]
+    D: jnp.ndarray            # [H]
+    norm: jnp.ndarray         # [d_inner]  gated RMSNorm scale
+    out_proj: jnp.ndarray     # [d_inner, d]
+
+
+class MambaSpec(NamedTuple):
+    d_model: int
+    d_inner: int
+    headdim: int
+    n_heads: int
+    d_state: int
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def conv_ch(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def make_spec(d_model: int, *, expand: int = 2, headdim: int = 64,
+              d_state: int = 128, d_conv: int = 4, chunk: int = 128) -> MambaSpec:
+    d_inner = expand * d_model
+    return MambaSpec(d_model=d_model, d_inner=d_inner, headdim=headdim,
+                     n_heads=d_inner // headdim, d_state=d_state,
+                     d_conv=d_conv, chunk=chunk)
+
+
+def init_mamba_params(key, spec: MambaSpec, dtype=jnp.float32) -> MambaParams:
+    ks = jax.random.split(key, 6)
+    d, di, H = spec.d_model, spec.d_inner, spec.n_heads
+    gn = spec.n_groups * spec.d_state
+    s = d ** -0.5
+    return MambaParams(
+        in_proj_z=(jax.random.normal(ks[0], (d, di)) * s).astype(dtype),
+        in_proj_x=(jax.random.normal(ks[1], (d, di)) * s).astype(dtype),
+        in_proj_B=(jax.random.normal(ks[2], (d, gn)) * s).astype(dtype),
+        in_proj_C=(jax.random.normal(ks[3], (d, gn)) * s).astype(dtype),
+        in_proj_dt=(jax.random.normal(ks[4], (d, H)) * s).astype(dtype),
+        conv_w=(jax.random.normal(ks[5], (spec.d_conv, spec.conv_ch)) * 0.1
+                ).astype(dtype),
+        conv_b=jnp.zeros((spec.conv_ch,), dtype),
+        dt_bias=jnp.full((H,), -4.0, dtype),  # softplus(-4) ~ 0.018
+        A_log=jnp.zeros((H,), dtype),         # A = -exp(0) = -1
+        D=jnp.ones((H,), dtype),
+        norm=jnp.ones((di,), dtype),
+        out_proj=(jax.random.normal(key, (di, d)) * di ** -0.5).astype(dtype),
+    )
+
+
+def _causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                           ) -> jnp.ndarray:
+    """x: [B, L, C]; w: [K, C] depthwise causal conv + silu."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                h0: jnp.ndarray | None = None):
+    """Chunked SSD scan.
+
+    x:  [B, L, H, P]   dt: [B, L, H] (post-softplus)
+    A:  [H] (negative)  Bm/Cm: [B, L, G, N]
+    Returns (y [B, L, H, P], h_final [B, H, N, P]).
+    """
+    Bsz, L, H, Pd = x.shape
+    G = Bm.shape[2]
+    hpg = H // G
+    Q = chunk
+    L0 = L
+    if L % Q:  # pad to a chunk multiple; padded steps are identity
+        pad = Q - L % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 -> decay=1, no input
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        L = L + pad
+    nC = L // Q
+
+    f32 = jnp.float32
+    xq = x.reshape(Bsz, nC, Q, H, Pd).astype(f32)
+    dtq = dt.reshape(Bsz, nC, Q, H).astype(f32)
+    Bq = Bm.reshape(Bsz, nC, Q, G, N := Bm.shape[-1]).astype(f32)
+    Cq = Cm.reshape(Bsz, nC, Q, G, N).astype(f32)
+
+    dA = dtq * A.astype(f32)                       # [B, nC, Q, H]
+    dA_cs = jnp.cumsum(dA, axis=2)                 # inclusive cumsum
+
+    # --- intra-chunk (diagonal blocks) -------------------------------------
+    # att[b,c,h,i,j] = (C_i · B_j) * exp(dA_cs[i] - dA_cs[j]) * dt[j], j<=i
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cq, Bq)  # [B,nC,G,Q,Q]
+    CB = jnp.repeat(CB, hpg, axis=2)               # expand groups -> heads
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]   # [B,nC,Q,Q,H]
+    seg = jnp.transpose(seg, (0, 1, 4, 2, 3))      # [B,nC,H,Q,Q]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    att = jnp.where(tri, CB * jnp.exp(seg), 0.0)
+    att = att * jnp.transpose(dtq, (0, 1, 3, 2))[:, :, :, None, :]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", att, xq)
+
+    # --- chunk states -------------------------------------------------------
+    # S_c = sum_j exp(dA_sum - dA_cs[j]) * dt_j * B_j ⊗ x_j   [B,nC,H,N,P]
+    dA_sum = dA_cs[:, :, -1:, :]                   # [B,nC,1,H]
+    decay_to_end = jnp.exp(dA_sum - dA_cs)         # [B,nC,Q,H]
+    # B per head: [B,nC,Q,H,N]
+    Bh = jnp.repeat(Bq, hpg, axis=3) if hpg > 1 else Bq
+    Bh = Bh.reshape(Bsz, nC, Q, H, N)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp",
+                        decay_to_end * dtq, Bh, xq)
+
+    # --- inter-chunk recurrence (scan over chunks) ---------------------------
+    chunk_decay = jnp.exp(dA_sum[:, :, 0, :])      # [B,nC,H]
+
+    def step(h, inp):
+        s_c, dec = inp                             # [B,H,N,P], [B,H]
+        h_new = h * dec[:, :, None, None] + s_c
+        return h_new, h                            # emit state *before* chunk
+
+    h_init = (jnp.zeros((Bsz, H, N, Pd), f32) if h0 is None
+              else h0.astype(f32))
+    h_fin, h_prev = jax.lax.scan(
+        step, h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)            # [B,nC,H,N,P]
+
+    # --- inter-chunk output: C_i · h_prev * exp(dA_cs[i]) --------------------
+    Ch = jnp.repeat(Cq, hpg, axis=3) if hpg > 1 else Cq
+    Ch = Ch.reshape(Bsz, nC, Q, H, N)
+    y_off = jnp.einsum("bcqhn,bchnp->bcqhp", Ch, h_prev)
+    y_off = y_off * jnp.exp(dA_cs)[..., None]
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, Pd)[:, :L0]
+    return y, h_fin
+
+
+def mamba_forward(p: MambaParams, spec: MambaSpec, x: jnp.ndarray,
+                  *, h0=None, conv0=None, return_state: bool = False):
+    """Full Mamba-2 block over x [B, L, d] -> [B, L, d]."""
+    Bsz, L, d = x.shape
+    H, Pd, N, G = spec.n_heads, spec.headdim, spec.d_state, spec.n_groups
+
+    z = jnp.einsum("bld,de->ble", x, p.in_proj_z)
+    xs = jnp.einsum("bld,de->ble", x, p.in_proj_x)
+    Bp = jnp.einsum("bld,de->ble", x, p.in_proj_B)
+    Cp = jnp.einsum("bld,de->ble", x, p.in_proj_C)
+    dt = jnp.einsum("bld,dh->blh", x, p.in_proj_dt)
+
+    # depthwise conv is per-channel, so convolve x / B / C separately with
+    # static slices of the shared conv weight: x stays `model`-sharded on
+    # its channels, B/C stay replicated — no concat, no all-gather.
+    di, gn = spec.d_inner, G * N
+    conv_tail_raw = None
+    if return_state:
+        conv_tail_raw = jnp.concatenate(
+            [xs[:, -(spec.d_conv - 1):], Bp[:, -(spec.d_conv - 1):],
+             Cp[:, -(spec.d_conv - 1):]], axis=-1)
+
+    def conv_part(u, lo, hi, ctx=None):
+        w, b = p.conv_w[:, lo:hi], p.conv_b[lo:hi]
+        if ctx is not None:
+            u2 = jnp.concatenate([ctx, u], axis=1)
+            return _causal_depthwise_conv(u2, w, b)[:, ctx.shape[1]:]
+        return _causal_depthwise_conv(u, w, b)
+
+    c0 = (None, None, None) if conv0 is None else (
+        conv0[..., :di], conv0[..., di:di + gn], conv0[..., di + gn:])
+    xs = conv_part(xs, 0, di, c0[0])
+    Bp = conv_part(Bp, di, di + gn, c0[1])
+    Cp = conv_part(Cp, di + gn, di + 2 * gn, c0[2])
+
+    xh = xs.reshape(Bsz, L, H, Pd)
+    Bm = Bp.reshape(Bsz, L, G, N)
+    Cm = Cp.reshape(Bsz, L, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias.astype(jnp.float32))
+    A = -jnp.exp(p.A_log.astype(jnp.float32))
+
+    y, h_fin = ssd_chunked(xh, dt, A, Bm, Cm, spec.chunk, h0)
+    y = y + xh.astype(jnp.float32) * p.D.astype(jnp.float32)[:, None]
+    y = y.reshape(Bsz, L, spec.d_inner)
+
+    # gated RMSNorm then out-projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p.norm.astype(jnp.float32)
+    out = jnp.einsum("ble,ed->bld", y.astype(x.dtype), p.out_proj)
+    if return_state:
+        return out, (h_fin, conv_tail_raw)
+    return out
+
+
+def mamba_decode_step(p: MambaParams, spec: MambaSpec, x: jnp.ndarray,
+                      h: jnp.ndarray, conv_state: jnp.ndarray):
+    """One-token decode.  x: [B, 1, d]; h: [B, H, N, P];
+    conv_state: [B, d_conv-1, conv_ch] rolling raw xBC context.
+    Returns (out [B,1,d], h, conv_state)."""
+    Bsz = x.shape[0]
+    H, Pd, N, G = spec.n_heads, spec.headdim, spec.d_state, spec.n_groups
+
+    z = jnp.einsum("bld,de->ble", x, p.in_proj_z)[:, 0]
+    xs = jnp.einsum("bld,de->ble", x, p.in_proj_x)[:, 0]
+    Bp = jnp.einsum("bld,de->ble", x, p.in_proj_B)[:, 0]
+    Cp = jnp.einsum("bld,de->ble", x, p.in_proj_C)[:, 0]
+    dt = jnp.einsum("bld,dh->blh", x, p.in_proj_dt)[:, 0]
+
+    xbc = jnp.concatenate([xs, Bp, Cp], axis=-1)      # [B, conv_ch]
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p.conv_w) + p.conv_b
+    conv_out = jax.nn.silu(conv_out)
+    conv_state = window[:, 1:, :]
+
+    xs = conv_out[..., :spec.d_inner].reshape(Bsz, H, Pd).astype(jnp.float32)
+    Bm = conv_out[..., spec.d_inner:spec.d_inner + G * N].reshape(Bsz, G, N)
+    Cm = conv_out[..., spec.d_inner + G * N:].reshape(Bsz, G, N)
+    hpg = H // G
+    Bh = jnp.repeat(Bm, hpg, axis=1).astype(jnp.float32)   # [B, H, N]
+    Ch = jnp.repeat(Cm, hpg, axis=1).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias.astype(jnp.float32))
+    A = -jnp.exp(p.A_log.astype(jnp.float32))
+    dec = jnp.exp(dt * A)                                   # [B, H]
+    h = h * dec[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, Bh, xs)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+    y = y + xs * p.D.astype(jnp.float32)[:, None]
+    y = y.reshape(Bsz, spec.d_inner)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p.norm.astype(jnp.float32)
+    out = jnp.einsum("be,ed->bd", y.astype(x.dtype), p.out_proj)
+    return out[:, None, :], h, conv_state

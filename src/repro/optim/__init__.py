@@ -1,0 +1,4 @@
+from . import adamw
+from .schedule import cosine_with_warmup
+
+__all__ = ["adamw", "cosine_with_warmup"]

@@ -1,0 +1,90 @@
+"""AdamW with global-norm clipping, ZeRO-sharded states, and optional
+bf16 moment compression (distributed-optimization memory trick).
+
+The optimizer state spec is derived from the param spec by additionally
+sharding one unsharded dimension over the data axes (ZeRO-1): states are
+elementwise, so any dim works — we pick the first divisible one (usually
+the stacked layer dim).  Gradient accumulators reuse the same specs
+(ZeRO-2-style).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any      # pytree like params (fp32 or bf16)
+    v: Any
+
+
+def init(params, *, compress_moments: bool = False) -> AdamWState:
+    dt = jnp.bfloat16 if compress_moments else jnp.float32
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(z, params),
+                      v=jax.tree.map(z, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads, state: AdamWState, params, *, lr, b1: float = 0.9,
+           b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+           clip_norm: float | None = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if clip_norm is not None:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_m, new_v), {"grad_norm": gnorm}
+
+
+# --- ZeRO state specs -----------------------------------------------------------
+
+def zero_spec(shape: tuple[int, ...], pspec: P, dp_axes: tuple[str, ...],
+              n_data: int) -> P:
+    """Shard one additional (currently unsharded, divisible) dim over data."""
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, (dim, cur) in enumerate(zip(shape, entries)):
+        if cur is None and dim % n_data == 0 and dim > 0:
+            entries[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            return P(*entries)
+    return P(*entries)  # nothing divisible: keep param spec
+
+
+def zero_specs(param_shapes, param_specs, dp_axes, n_data):
+    leaves_s, treedef = jax.tree.flatten(param_shapes)
+    leaves_p = treedef.flatten_up_to(param_specs)
+    return treedef.unflatten(
+        [zero_spec(s.shape, p, dp_axes, n_data)
+         for s, p in zip(leaves_s, leaves_p)])

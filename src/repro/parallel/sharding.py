@@ -1,0 +1,180 @@
+"""Sharding policy: logical-axis rules mapping every parameter / activation
+to a PartitionSpec over the production mesh (DESIGN.md Sec. 3.3).
+
+Two attention-parallelism modes, picked per arch:
+
+  * ``megatron`` — heads divide the `model` axis: q/k/v/o sharded on heads
+    (KV expanded to Hq so GQA shards uniformly), MLP column/row split,
+    activations sequence-sharded between blocks (Megatron-SP) in training.
+  * ``context``  — heads do NOT divide the axis (qwen2.5-14b 40H,
+    musicgen 24H): attention weights replicated (or FSDP-sharded over
+    `data`), activations sequence-sharded over `model`; attention
+    all-gathers the (small, GQA) K/V; MLP stays column/row split.
+
+Decode always sequence-shards the KV cache over `model` (distributed
+flash-decode: softmax over a sharded axis reduces to tiny cross-shard
+max/sum reductions) and batch-shards over the data axes.
+
+ZeRO: optimizer state and grad accumulators are sharded over
+(data x model) regardless of the param spec (see optim/).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class MeshInfo:
+    mesh: Mesh
+    dp_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    seq_shard: bool = True          # Megatron-SP activations between blocks
+
+    @property
+    def n_model(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def n_data(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.dp_axes)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def attn_mode(cfg: ArchConfig, mi: MeshInfo) -> str:
+    if cfg.layout == "mamba":
+        return "none"
+    return "megatron" if cfg.n_heads % mi.n_model == 0 else "context"
+
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    return -(-vocab // multiple) * multiple
+
+
+# --- parameter specs ---------------------------------------------------------
+
+def param_specs(cfg: ArchConfig, mi: MeshInfo, *, fsdp_attn: bool = False):
+    """Build the PartitionSpec pytree matching init_params' structure."""
+    M = mi.model_axis
+    mode = attn_mode(cfg, mi)
+
+    def attn_spec():
+        if mode == "megatron":
+            # kv heads shard over `model` only when they divide it; smaller
+            # GQA kv projections are replicated (KV expands to Hq heads
+            # inside sdpa, a collective-free broadcast-slice per shard).
+            kv = M if cfg.n_kv_heads % mi.n_model == 0 else None
+            s = {
+                "wq": P(None, None, M, None), "wk": P(None, None, kv, None),
+                "wv": P(None, None, kv, None), "wo": P(None, M, None, None),
+            }
+            biases = {"bq": P(None, M, None), "bk": P(None, kv, None),
+                      "bv": P(None, kv, None)}
+            qk = P(None, None)
+        else:  # context: replicated (optionally FSDP over data on d_model)
+            r = P(None, mi.dp_axes[-1] if fsdp_attn else None, None, None)
+            s = {"wq": r, "wk": r, "wv": r,
+                 "wo": P(None, None, None,
+                         mi.dp_axes[-1] if fsdp_attn else None)}
+            b = P(None, None, None)
+            biases = {"bq": b, "bk": b, "bv": b}
+            qk = P(None, None)
+        if cfg.qkv_bias:
+            s |= biases
+        if cfg.qk_norm:
+            s |= {"q_norm": qk, "k_norm": qk}
+        return s
+
+    def mlp_spec():
+        if cfg.mlp_kind == "gelu":
+            return {"w_up": P(None, None, M), "w_down": P(None, M, None)}
+        return {"w_gate": P(None, None, M), "w_up": P(None, None, M),
+                "w_down": P(None, M, None)}
+
+    def moe_spec():
+        if cfg.n_experts >= mi.n_model and cfg.n_experts % mi.n_model == 0:
+            return {"w_router": P(None, None, None),
+                    "w_gate": P(None, M, None, None),
+                    "w_up": P(None, M, None, None),
+                    "w_down": P(None, M, None, None)}
+        return {"w_router": P(None, None, None),
+                "w_gate": P(None, None, None, M),
+                "w_up": P(None, None, None, M),
+                "w_down": P(None, None, M, None)}
+
+    def mamba_spec():
+        # heads (d_inner blocks) shard over model; B/C/dt small -> replicated
+        return {
+            "in_proj_z": P(None, None, M), "in_proj_x": P(None, None, M),
+            "in_proj_B": P(None, None, None), "in_proj_C": P(None, None, None),
+            "in_proj_dt": P(None, None, None),
+            "conv_w": P(None, None, None), "conv_b": P(None, None),
+            "dt_bias": P(None, None), "A_log": P(None, None),
+            "D": P(None, None), "norm": P(None, M),
+            "out_proj": P(None, M, None),
+        }
+
+    norm = P(None, None)  # [L, d]
+    layers: dict = {}
+    if cfg.layout == "mamba":
+        layers = {"ln": norm, "mamba": mamba_spec()}
+    elif cfg.layout == "hybrid":
+        layers = {"ln": norm, "mamba": mamba_spec()}
+    else:
+        layers = {"ln1": norm, "ln2": norm, "attn": attn_spec()}
+        if cfg.is_moe:
+            layers["moe"] = moe_spec()
+        else:
+            layers["mlp"] = mlp_spec()
+        if cfg.gemma_norm:
+            layers["ln1_post"] = norm
+            layers["ln2_post"] = norm
+
+    specs: dict = {"layers": layers, "final_norm": P(None)}
+    if cfg.layout == "hybrid":
+        sa = {k: v if not isinstance(v, dict) else v
+              for k, v in attn_spec().items()}
+        # shared block specs have no leading layer axis: drop first dim
+        def drop_lead(p: P) -> P:
+            return P(*p[1:])
+        specs["shared"] = {
+            "ln1": P(None), "ln2": P(None),
+            "attn": {k: drop_lead(v) for k, v in attn_spec().items()},
+            "mlp": {k: drop_lead(v) for k, v in mlp_spec().items()},
+        }
+    if cfg.tie_embeddings:
+        specs["embed"] = P(M, None)          # vocab-sharded; one-hot lookup
+    else:
+        specs["embed"] = P(None, M)          # d-sharded; plain take
+        specs["lm_head"] = P(None, M)        # padded vocab sharded
+    return specs
+
+
+# --- activation specs ----------------------------------------------------------
+
+def act_spec(cfg: ArchConfig, mi: MeshInfo, *, seq: bool) -> P:
+    """[B, S, d] activations between blocks."""
+    dp = P(mi.dp_axes)
+    if seq and mi.seq_shard and cfg.layout not in ("mamba",):
+        return P(mi.dp_axes, mi.model_axis, None)
+    return P(mi.dp_axes, None, None)
+
+
+def kv_cache_spec(mi: MeshInfo) -> P:
+    """[B, S, Hkv, Dh] decode cache: batch over data, seq over model
+    (distributed flash-decode)."""
+    return P(mi.dp_axes, mi.model_axis, None, None)
+
+
+def constrain(x, mi: MeshInfo | None, spec: P):
+    if mi is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, mi.sharding(spec))

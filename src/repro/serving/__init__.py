@@ -1,0 +1,6 @@
+from .engine import PagedServingEngine, ServeConfig
+from .kv_cache import PagedKVCache, PagedKVConfig
+from .scheduler import ContinuousBatcher, Request
+
+__all__ = ["PagedServingEngine", "ServeConfig", "PagedKVCache",
+           "PagedKVConfig", "ContinuousBatcher", "Request"]

@@ -1,0 +1,255 @@
+"""Paged serving engine: continuous batching + memos-managed KV tiering.
+
+The decode path reads KV through block tables over the memos HBM pool
+(paged_attention kernel), charges SysMon with the exact page-access
+stream, and lets the periodic memos loop (Fig. 10) migrate pages between
+HBM and host:
+
+  * running sequences touch all their pages every step  -> hot  -> stay;
+  * the tail page is written every step                  -> WD   -> stay;
+  * preempted / finished-prefix pages go quiet           -> cold -> host;
+  * resumed sequences eagerly promote their pages (paper's eager mode).
+
+The jitted step writes the new token's K/V into the pool *before*
+attention (exact self-attention; the pool buffer is donated), so engine
+outputs are bit-comparable to the model-level dense decode path — tested
+in tests/test_serving.py.
+
+Supports every ``layout == "attn"`` arch (dense + MoE); MoE expert
+hotness is accumulated per step for the expert-tiering benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import sysmon as sysmon_mod
+from repro.core.memos import MemosConfig, MemosManager
+from repro.core.placement import FAST
+from repro.kernels.paged_attention import paged_attention
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serving.kv_cache import PagedKVCache, PagedKVConfig
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+@dataclass
+class ServeConfig:
+    page_size: int = 16
+    max_batch: int = 4
+    fast_slots: int = 48
+    slow_slots: int = 512
+    memos_interval: int = 8
+    max_pages_per_seq: int = 64
+    memos_enabled: bool = True
+
+
+class PagedServingEngine:
+    def __init__(self, cfg: ArchConfig, params: dict, scfg: ServeConfig):
+        assert cfg.layout == "attn", "paged engine serves attention archs"
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.kv = PagedKVCache(PagedKVConfig(
+            n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, page_size=scfg.page_size,
+            fast_slots=scfg.fast_slots, slow_slots=scfg.slow_slots))
+        store = self.kv.store
+        self.sysmon = sysmon_mod.init(
+            scfg.slow_slots, n_banks=store.cfg.n_banks,
+            n_slabs=store.cfg.n_slabs)
+        self.memos = MemosManager(store, MemosConfig(
+            interval=scfg.memos_interval, adaptive_interval=False))
+        self.batcher = ContinuousBatcher(scfg.max_batch)
+        self.step_count = 0
+        self.expert_counts = (np.zeros(cfg.n_experts, np.int64)
+                              if cfg.is_moe else None)
+        self.tokens_out = 0
+        self.rid = 0
+        self._decode_fn = jax.jit(self._decode_batch, donate_argnums=(5,))
+
+    # -- request API -----------------------------------------------------------
+    def submit(self, prompt: list[int], max_new: int) -> Request:
+        req = Request(self.rid, list(prompt), max_new, arrival=self.step_count)
+        req.tokens = []          # processed tokens (prompt-consumed + generated)
+        req.generated = []       # type: ignore[attr-defined]
+        self.rid += 1
+        self.batcher.submit(req)
+        return req
+
+    # -- page management ---------------------------------------------------------
+    def _ensure_page(self, req: Request) -> bool:
+        need = req.pos // self.scfg.page_size + 1
+        while len(req.pages) < need:
+            pid = self.kv.new_page(FAST)
+            if pid is None:
+                return False
+            req.pages.append(pid)
+        tail = req.pages[need - 1]
+        if not self.kv.is_resident(tail):
+            self.memos.engine.migrate_locked([tail], FAST)
+        return self.kv.is_resident(tail)
+
+    def _promote(self, req: Request) -> bool:
+        cold = [p for p in req.pages if not self.kv.is_resident(p)]
+        if cold:
+            self.memos.engine.migrate_locked(cold, FAST)
+        return all(self.kv.is_resident(p) for p in req.pages)
+
+    def _make_room(self) -> bool:
+        return self.batcher.preempt_lowest() is not None
+
+    # -- jitted model compute ------------------------------------------------------
+    def _decode_batch(self, params, tokens, positions, block_tables,
+                      lengths, fast_pool):
+        """tokens [B,1] i32; positions [B]; block_tables [B,P] fast-slot
+        ids; lengths [B] (incl. current token); fast_pool donated.
+        Returns (logits [B, Vp], expert_counts|0, new fast_pool)."""
+        cfg = self.cfg
+        page = self.scfg.page_size
+        B = tokens.shape[0]
+        h = T.embed_in(params, cfg, {"tokens": tokens}, None)
+        cos, sin = L.rope_angles(positions[:, None], cfg.head_dim,
+                                 cfg.rope_theta)
+        b_idx = jnp.arange(B)
+        slot = block_tables[b_idx, positions // page]
+        off = positions % page
+        counts_acc = (jnp.zeros((cfg.n_experts,), jnp.int32)
+                      if cfg.is_moe else jnp.int32(0))
+        for l in range(cfg.n_layers):
+            lp = T._tree_slice(params["layers"], l)
+            x = L.rms_norm(h, lp["ln1"], eps=cfg.norm_eps,
+                           gemma_style=cfg.gemma_norm)
+            p = T._attn_from_dict(lp["attn"])
+            q, k, v = attn_mod.project_qkv(p, x, cos, sin)
+            dtype = fast_pool.dtype
+            fast_pool = fast_pool.at[slot, l, 0, off].set(
+                k[:, 0].astype(dtype))
+            fast_pool = fast_pool.at[slot, l, 1, off].set(
+                v[:, 0].astype(dtype))
+            out = paged_attention(q[:, 0], fast_pool[:, l, 0],
+                                  fast_pool[:, l, 1], block_tables, lengths)
+            out = jnp.einsum("bhk,hkd->bd", out.reshape(
+                B, cfg.n_heads, cfg.head_dim), p.wo)[:, None, :]
+            h = h + out
+            h, counts, _ = T._ffn_block(lp, cfg, h, None)
+            if cfg.is_moe and counts is not None:
+                counts_acc = counts_acc + counts
+        h = L.rms_norm(h, params["final_norm"], eps=cfg.norm_eps,
+                       gemma_style=cfg.gemma_norm)
+        logits = T.logits_out(params, cfg, h)[:, 0]
+        return logits, counts_acc, fast_pool
+
+    # -- main loop -----------------------------------------------------------------
+    def step(self) -> dict:
+        # 1) admit / resume; make room by preempting if promotion fails
+        while True:
+            admitted = self.batcher.admit()
+            if not admitted:
+                break
+            ok = True
+            for req in admitted:
+                if req.start_step is None:
+                    req.start_step = self.step_count
+                if not (self._promote(req) and self._ensure_page(req)):
+                    ok = False
+            if not ok and not self._make_room():
+                break
+
+        active = list(self.batcher.active)
+        stats = {"step": self.step_count, "active": len(active)}
+        if not active:
+            self.step_count += 1
+            return stats
+
+        for req in list(active):
+            while not self._ensure_page(req):
+                if not self._make_room():
+                    raise RuntimeError("HBM+host pools exhausted")
+            if req.preempted:       # got preempted while making room
+                active.remove(req)
+        if not active:
+            self.step_count += 1
+            return stats
+
+        B = len(active)
+        P = self.scfg.max_pages_per_seq
+        page = self.scfg.page_size
+        tokens = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B,), np.int32)
+        block_tables = np.zeros((B, P), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        for i, req in enumerate(active):
+            seq = req.prompt + req.generated
+            tokens[i, 0] = seq[req.pos]
+            positions[i] = req.pos
+            lengths[i] = req.pos + 1
+            for j, pid in enumerate(req.pages[:P]):
+                block_tables[i, j] = self.kv.fast_slot(pid)
+
+        # 2) jitted decode: KV write into the pool + paged attention
+        store = self.kv.store
+        logits, ecounts, store.fast_pool = self._decode_fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(block_tables), jnp.asarray(lengths),
+            store.fast_pool)
+        if self.expert_counts is not None:
+            self.expert_counts += np.asarray(ecounts, np.int64)
+
+        # 3) advance sequences / sample
+        nxt = np.asarray(jnp.argmax(logits[:, :self.cfg.vocab], axis=-1))
+        for i, req in enumerate(active):
+            pos_i = int(positions[i])             # pre-advance position
+            tail = req.pages[pos_i // page]
+            store.version[tail] += 1              # dirty bit for migration
+            store.writes_to[FAST] += 1
+            req.tokens.append(int(tokens[i, 0]))
+            if pos_i + 1 >= len(req.prompt):      # logits predict a new token
+                req.generated.append(int(nxt[i]))
+                self.tokens_out += 1
+            done = len(req.generated) >= req.max_new
+            if done:
+                self.batcher.finish(req, self.step_count)
+                for pid in req.pages:
+                    self.kv.free_page(pid)
+                req.pages = []
+
+        # 4) SysMon charging: exact page-access stream
+        touched = [pid for req in active for pid in req.pages]
+        tails = [req.pages[min(req.pos // page, len(req.pages) - 1)]
+                 for req in active if req.pages]
+        if touched:
+            self.sysmon = sysmon_mod.record(
+                self.sysmon, jnp.asarray(touched, jnp.int32), is_write=False)
+            store.reads_from[FAST] += len(touched)
+        if tails:
+            self.sysmon = sysmon_mod.record(
+                self.sysmon, jnp.asarray(tails, jnp.int32), is_write=True)
+
+        # 5) memos loop (hot pages stay; cold/preempted pages drain to host)
+        if self.scfg.memos_enabled:
+            self.sysmon, report = self.memos.maybe_step(self.sysmon)
+            if report is not None:
+                stats["memos"] = {
+                    "migrated": report.migrations.migrated,
+                    "to_fast": report.migrations.to_fast,
+                    "to_slow": report.migrations.to_slow,
+                }
+                for req in self.batcher.active:
+                    self._promote(req)
+
+        self.step_count += 1
+        stats["tokens_out"] = self.tokens_out
+        stats.update(self.kv.occupancy())
+        return stats
+
+    def run(self, max_steps: int = 10_000) -> list[dict]:
+        hist = []
+        while not self.batcher.all_done() and self.step_count < max_steps:
+            hist.append(self.step())
+        return hist

@@ -1,0 +1,95 @@
+"""Paged KV cache on top of the memos TierStore.
+
+Logical page = one ``page_size``-token span of one sequence, payload
+[L, 2(K/V), page, Hkv, Dh] across all layers (pages migrate between HBM
+and host as a unit, like the OS paper's 4 KB pages).  The TierStore's
+sub-buddy allocator places pages by color (bank = pool-slot stripe =
+HBM-controller analogue); block tables map (sequence, span) -> logical
+page -> physical fast-pool slot for the paged_attention kernel.
+
+SysMon charging: every decode step reads all pages of active sequences
+and writes the tail page — the exact access stream (no sampling error),
+DESIGN.md Sec. 2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import FAST, SLOW
+from repro.core.tiers import NO_SLOT, TierConfig, TierStore
+
+
+@dataclass
+class PagedKVConfig:
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    page_size: int = 16
+    fast_slots: int = 64          # HBM pool capacity (pages)
+    slow_slots: int = 512         # host pool capacity
+    dtype: object = jnp.float32
+
+
+class PagedKVCache:
+    def __init__(self, cfg: PagedKVConfig):
+        self.cfg = cfg
+        shape = (cfg.n_layers, 2, cfg.page_size, cfg.n_kv_heads, cfg.head_dim)
+        self.store = TierStore(TierConfig(
+            n_pages=cfg.slow_slots, fast_slots=cfg.fast_slots,
+            slow_slots=cfg.slow_slots, page_shape=shape, dtype=cfg.dtype))
+        self._free_ids = list(range(cfg.slow_slots - 1, -1, -1))
+
+    # -- logical page lifecycle ------------------------------------------------
+    def new_page(self, tier: int = FAST) -> int | None:
+        if not self._free_ids:
+            return None
+        pid = self._free_ids.pop()
+        if not self.store.allocate(pid, tier):
+            if tier == FAST and self.store.allocate(pid, SLOW):
+                return pid            # HBM full: land on host, promote later
+            self._free_ids.append(pid)
+            return None
+        return pid
+
+    def free_page(self, pid: int) -> None:
+        self.store.release(pid)
+        self._free_ids.append(pid)
+
+    def is_resident(self, pid: int) -> bool:
+        return int(self.store.tier[pid]) == FAST and \
+            int(self.store.slot[pid]) != NO_SLOT
+
+    def fast_slot(self, pid: int) -> int:
+        assert self.is_resident(pid), f"page {pid} not HBM-resident"
+        return int(self.store.slot[pid])
+
+    # -- data access -------------------------------------------------------------
+    def write_token_kv(self, pid: int, layer_kv: jnp.ndarray,
+                       offset: int) -> None:
+        """layer_kv: [L, 2, Hkv, Dh] for one token at in-page ``offset``.
+        Fast path writes straight into the pool slot; bumps the version
+        (the dirty bit for optimistic migration)."""
+        slot = int(self.store.slot[pid])
+        assert slot != NO_SLOT
+        if int(self.store.tier[pid]) == FAST:
+            self.store.fast_pool = self.store.fast_pool.at[
+                slot, :, :, offset].set(layer_kv.astype(self.store.cfg.dtype))
+            self.store.writes_to[FAST] += 1
+        else:
+            page = self.store._slow_read(slot)
+            page[:, :, offset] = np.asarray(layer_kv, np.float32)
+            self.store._slow_write(slot, page)
+            self.store.writes_to[SLOW] += 1
+        self.store.version[pid] += 1
+
+    def layer_pools(self, layer: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(k_pool, v_pool) views [n_fast_slots, page, Hkv, Dh] for the
+        paged_attention kernel."""
+        return (self.store.fast_pool[:, layer, 0],
+                self.store.fast_pool[:, layer, 1])
+
+    def occupancy(self) -> dict:
+        return self.store.occupancy()

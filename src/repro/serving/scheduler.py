@@ -1,0 +1,92 @@
+"""Continuous-batching scheduler with memos-aware preemption.
+
+Requests stream in; the scheduler packs up to ``max_batch`` sequences into
+decode slots.  When the HBM page pool can't host a new sequence's pages,
+the lowest-priority *running* sequence is preempted: its pages stop being
+touched, SysMon sees them go cold/RD, and the memos loop migrates them to
+the host tier (lazy path) — freeing HBM without an explicit eviction
+policy.  On resume the engine requests an *eager* promotion of the
+sequence's pages (paper Sec. 6.3's eager mode is exactly this user-driven
+path).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    arrival: int = 0
+    # runtime state
+    tokens: list[int] = field(default_factory=list)   # processed tokens
+    generated: list[int] = field(default_factory=list)
+    pages: list[int] = field(default_factory=list)   # logical page ids
+    slot: int | None = None
+    done: bool = False
+    preempted: bool = False
+    start_step: int | None = None
+    finish_step: int | None = None
+
+    @property
+    def pos(self) -> int:
+        return len(self.tokens)
+
+
+class ContinuousBatcher:
+    def __init__(self, max_batch: int):
+        self.max_batch = max_batch
+        self.waiting: deque[Request] = deque()
+        self.running: dict[int, Request] = {}   # slot -> request
+        self.preempted: deque[Request] = deque()
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def free_slots(self) -> list[int]:
+        return [s for s in range(self.max_batch) if s not in self.running]
+
+    def admit(self) -> list[Request]:
+        """Admit resumed-then-new requests into free slots (FIFO)."""
+        admitted = []
+        for slot in self.free_slots():
+            src = self.preempted if self.preempted else self.waiting
+            if not src:
+                break
+            req = src.popleft()
+            req.slot = slot
+            req.preempted = False
+            self.running[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def preempt_lowest(self) -> Request | None:
+        """Preempt the most recently admitted running sequence (LIFO keeps
+        older sequences' latency bounded — max-slowdown QoS metric)."""
+        if not self.running:
+            return None
+        slot = max(self.running, key=lambda s: self.running[s].start_step or 0)
+        req = self.running.pop(slot)
+        req.slot = None
+        req.preempted = True
+        self.preempted.append(req)
+        return req
+
+    def finish(self, req: Request, step: int) -> None:
+        if req.slot is not None:
+            self.running.pop(req.slot, None)
+        req.slot = None
+        req.done = True
+        req.finish_step = step
+        self.finished.append(req)
+
+    @property
+    def active(self) -> list[Request]:
+        return list(self.running.values())
+
+    def all_done(self) -> bool:
+        return not (self.waiting or self.running or self.preempted)

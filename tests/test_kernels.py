@@ -1,0 +1,138 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.hotness_update import sysmon_pass, sysmon_pass_ref
+from repro.kernels.page_gather import (page_gather, page_gather_ref,
+                                       page_scatter, page_scatter_ref)
+from repro.kernels.paged_attention import paged_attention, paged_attention_ref
+from repro.kernels.ssd_scan import ssd_scan, ssd_scan_ref, ssd_sequential_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# --- flash attention ----------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+    (2, 128, 4, 2, 64), (1, 256, 4, 4, 64), (2, 96, 8, 2, 80),
+    (1, 64, 6, 3, 128),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 32), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, Hq, Hkv, D, causal, window, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (B, S, Hq, D), dtype)
+    k = jax.random.normal(k2, (B, S, Hkv, D), dtype)
+    v = jax.random.normal(k3, (B, S, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=64, bk=64, interpret=True)
+    qf = (q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+          * jnp.asarray(D ** -0.5, dtype))
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    ref = flash_attention_ref(qf, kf, vf, causal=causal, window=window)
+    ref = ref.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+# --- paged decode attention -----------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,page,n_pages", [
+    (3, 8, 2, 64, 16, 4), (2, 4, 4, 128, 8, 8), (1, 16, 2, 64, 32, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(B, Hq, Hkv, D, page, n_pages, dtype):
+    n_slots = B * n_pages + 7
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+    kp = jax.random.normal(ks[1], (n_slots, page, Hkv, D), dtype)
+    vp = jax.random.normal(ks[2], (n_slots, page, Hkv, D), dtype)
+    bt = jax.random.permutation(ks[3], n_slots)[:B * n_pages]
+    bt = bt.reshape(B, n_pages).astype(jnp.int32)
+    lengths = jnp.asarray(
+        np.random.RandomState(0).randint(1, page * n_pages + 1, B), jnp.int32)
+    out = paged_attention(q, kp, vp, bt, lengths, interpret=True)
+    G = Hq // Hkv
+    qg = (q * jnp.asarray(D ** -0.5, dtype)).reshape(B, Hkv, G, D)
+    ref = paged_attention_ref(qg, kp, vp, bt, lengths).reshape(B, Hq, D)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+# --- SSD scan ---------------------------------------------------------------
+
+@pytest.mark.parametrize("B,L,H,P,N,chunk", [
+    (2, 64, 4, 8, 16, 16), (1, 128, 8, 16, 32, 32), (2, 48, 2, 8, 8, 16),
+])
+def test_ssd_scan_sweep(B, L, H, P, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    y, h = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    yr, hr = ssd_scan_ref(x, dt, A, Bm, Cm, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               atol=1e-4, rtol=1e-4)
+    # also against the sequential ground truth
+    ys, hs = ssd_sequential_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ys),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_scan_padding():
+    """Non-multiple L pads with identity steps."""
+    B, L, H, P, N = 1, 37, 2, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    y, _ = ssd_scan(x, dt, A, Bm, Cm, chunk=16, interpret=True)
+    ys, _ = ssd_sequential_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ys),
+                               atol=1e-3, rtol=1e-3)
+
+
+# --- page gather / scatter ------------------------------------------------------
+
+@pytest.mark.parametrize("n_slots,k,shape", [(32, 4, (8, 4)), (64, 16, (16,)),
+                                             (16, 16, (4, 4, 2))])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+def test_page_gather_scatter(n_slots, k, shape, dtype):
+    pool = jnp.arange(n_slots * int(np.prod(shape))).reshape(
+        (n_slots, *shape)).astype(dtype)
+    idx = jax.random.permutation(jax.random.PRNGKey(4), n_slots)[:k]
+    idx = idx.astype(jnp.int32)
+    out = page_gather(pool, idx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(page_gather_ref(pool, idx)))
+    pages = (jnp.ones((k, *shape)) * 7).astype(dtype)
+    new = page_scatter(pool.copy(), idx, pages, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(new), np.asarray(page_scatter_ref(pool, idx, pages)))
+
+
+# --- fused SysMon pass -----------------------------------------------------------
+
+@pytest.mark.parametrize("n,block", [(300, 128), (1024, 256), (17, 64)])
+def test_sysmon_pass_kernel(n, block):
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    reads = jax.random.randint(ks[0], (n,), 0, 10)
+    writes = jax.random.randint(ks[1], (n,), 0, 10)
+    hist = jax.random.randint(ks[2], (n,), 0, 256)
+    wd, nh, fut = sysmon_pass(reads, writes, hist, block=block, interpret=True)
+    wdr, nhr, futr = sysmon_pass_ref(reads, writes, hist)
+    np.testing.assert_array_equal(np.asarray(wd), np.asarray(wdr))
+    np.testing.assert_array_equal(np.asarray(nh), np.asarray(nhr))
+    np.testing.assert_array_equal(np.asarray(fut), np.asarray(futr))

@@ -1,0 +1,114 @@
+"""Migration engine + TierStore properties: bit-exact moves, optimistic
+dirty-discard, conservation of pages, memos end-to-end loop."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import sysmon
+from repro.core.memos import MemosConfig, MemosManager
+from repro.core.migration import MigrationEngine
+from repro.core.placement import FAST, SLOW
+from repro.core.tiers import NO_SLOT, TierConfig, TierStore
+
+
+def make_store(n=32, fast=16, slow=64, quantize=False):
+    s = TierStore(TierConfig(n_pages=n, fast_slots=fast, slow_slots=slow,
+                             page_shape=(4,), quantize_slow=quantize))
+    for p in range(n):
+        assert s.allocate(p, SLOW)
+        s.write_page(p, np.full(4, float(p), np.float32))
+    return s
+
+
+def test_move_preserves_contents_bitexact():
+    s = make_store()
+    eng = MigrationEngine(s)
+    eng.migrate_locked(range(8), FAST)
+    for p in range(8):
+        assert s.tier[p] == FAST
+        np.testing.assert_array_equal(s.read_page(p), np.full(4, float(p)))
+    eng.migrate_locked(range(8), SLOW)
+    for p in range(8):
+        assert s.tier[p] == SLOW
+        np.testing.assert_array_equal(s.read_page(p), np.full(4, float(p)))
+
+
+def test_optimistic_discards_dirty_pages():
+    s = make_store()
+    eng = MigrationEngine(s, max_retries=0)
+    def writer():
+        s.write_page(1, np.zeros(4, np.float32))
+    stats = eng.migrate_optimistic([0, 1, 2], FAST, concurrent_writer=writer)
+    assert stats.dirty_discards == 1
+    assert s.tier[0] == FAST and s.tier[2] == FAST
+    assert s.tier[1] == SLOW          # dirtied mid-copy: not committed
+    np.testing.assert_array_equal(s.read_page(1), np.zeros(4))
+
+
+def test_optimistic_retries_dirty_pages():
+    s = make_store()
+    eng = MigrationEngine(s, max_retries=2)
+    def writer():
+        s.write_page(1, np.full(4, 42.0, np.float32))
+    stats = eng.migrate_optimistic([0, 1], FAST, concurrent_writer=writer)
+    assert stats.migrated == 2        # retried after the discard
+    assert s.tier[1] == FAST
+    np.testing.assert_array_equal(s.read_page(1), np.full(4, 42.0))
+
+
+@given(st.lists(st.integers(0, 31), min_size=1, max_size=40, unique=True),
+       st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_migration_conservation(pages, to_fast):
+    """Every logical page stays allocated exactly once; contents survive."""
+    s = make_store()
+    eng = MigrationEngine(s)
+    dst = FAST if to_fast else SLOW
+    eng.migrate_locked(pages, dst)
+    assert (s.slot != NO_SLOT).all()
+    slots = [(int(s.tier[p]), int(s.slot[p])) for p in range(32)]
+    assert len(set(slots)) == 32, "two pages share a physical slot"
+    for p in range(32):
+        np.testing.assert_array_equal(s.read_page(p), np.full(4, float(p)))
+
+
+def test_quantized_slow_tier_roundtrip():
+    """int8 'soft-NVM' tier: lossy but bounded error."""
+    s = make_store(quantize=True)
+    data = np.linspace(-1, 1, 4).astype(np.float32)
+    s.write_page(3, data)
+    out = s.read_page(3)
+    assert np.max(np.abs(out - data)) < 1.0 / 127 + 1e-6
+
+
+def test_capacity_bound_respected():
+    s = make_store(n=32, fast=4)
+    eng = MigrationEngine(s)
+    stats = eng.migrate_locked(range(32), FAST)
+    assert stats.migrated <= 4
+    assert (np.asarray(s.tier) == FAST).sum() <= 4
+
+
+def test_memos_loop_moves_hot_to_fast_and_cold_back():
+    s = make_store(n=32, fast=8)
+    mgr = MemosManager(s, MemosConfig(interval=1, adaptive_interval=False))
+    sm = sysmon.init(32, 4, 4)
+    # phase 1: pages 0..3 written hot
+    for _ in range(8):
+        sm = sysmon.record(sm, jnp.arange(4), is_write=True)
+    sm, rep = mgr.maybe_step(sm)
+    assert all(s.tier[p] == FAST for p in range(4))
+    # phase 2: pages 0..3 go cold; 8..11 hot now.  After enough passes the
+    # WD history decays and the cold pages drain back to the slow tier.
+    for _ in range(10):
+        for _ in range(8):
+            sm = sysmon.record(sm, jnp.arange(8, 12), is_write=True)
+        sm, rep = mgr.maybe_step(sm)
+    assert all(s.tier[p] == FAST for p in range(8, 12))
+    assert all(s.tier[p] == SLOW for p in range(4)), \
+        np.asarray(s.tier[:12]).tolist()
+    # contents intact after all the shuffling
+    for p in range(32):
+        np.testing.assert_array_equal(s.read_page(p), np.full(4, float(p)))

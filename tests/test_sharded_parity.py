@@ -1,0 +1,25 @@
+"""Sharding gate: sharded-vs-unsharded numerical parity on a small mesh.
+
+Runs in a subprocess because it needs 8 placeholder XLA devices (the rest
+of the suite must see 1 device).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+HELPER = Path(__file__).parent / "helpers" / "sharded_gate.py"
+
+
+@pytest.mark.slow
+def test_sharded_parity_small_mesh():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, str(HELPER)], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    print(proc.stdout)
+    print(proc.stderr[-2000:] if proc.stderr else "")
+    assert proc.returncode == 0, "sharded parity subprocess failed"
+    assert "ALL SHARDED PARITY CHECKS PASSED" in proc.stdout
