@@ -1,0 +1,119 @@
+"""Migration bandwidth: batched device-resident engine vs numpy reference.
+
+Measures achieved migration throughput (pages/s and GB/s) for a full
+promotion + demotion round trip over the fast pool, old path vs new:
+
+  * reference — `MigrationEngine`, the per-page host loop (one
+    device<->host hop and one pool update per page);
+  * batched   — `BatchedMigrationEngine`, one planned bulk move per
+    direction (Pallas page_gather/scatter on TPU, XLA gather/scatter
+    elsewhere) with chunked double-buffered host<->device staging.
+
+The acceptance bar for the engine refactor is batched >= 5x reference on a
+512-page fast pool.  Results land in benchmarks/results/migration_bw.json
+(consumed by benchmarks/fill_perf.py).
+
+Usage:  PYTHONPATH=src python benchmarks/migration_bw.py [--fast-slots 512]
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def build_store(n_pages, fast_slots, page_shape):
+    import jax.numpy as jnp
+    from repro.core.placement import SLOW
+    from repro.core.tiers import TierConfig, TierStore
+    s = TierStore(TierConfig(n_pages=n_pages, fast_slots=fast_slots,
+                             slow_slots=n_pages, page_shape=page_shape,
+                             dtype=jnp.float32))
+    rng = np.random.RandomState(0)
+    fill = rng.standard_normal((n_pages, *page_shape)).astype(np.float32)
+    for p in range(n_pages):
+        assert s.allocate(p, SLOW)
+    s.slow_write_batch(np.arange(n_pages), fill)
+    return s
+
+
+def round_trip(engine, pages):
+    """Promote `pages` slow->fast (locked path), then demote them back
+    fast->slow (optimistic path) — the memos pass's two bulk directions."""
+    from repro.core.placement import FAST, SLOW
+    st1 = engine.migrate_locked(pages, FAST)
+    st2 = engine.migrate_optimistic(pages, SLOW)
+    assert st1.migrated == len(pages) and st2.migrated == len(pages), \
+        (st1, st2)
+    return st1.bytes_moved + st2.bytes_moved
+
+
+def measure(kind, store, pages, repeats, chunk_pages):
+    from repro.core.migration import make_engine
+    kw = {"chunk_pages": chunk_pages} if kind == "batched" else {}
+    engine = make_engine(store, kind, **kw)
+    if kind == "batched":
+        round_trip(engine, pages)        # warm up compile caches
+    best, nbytes = float("inf"), 0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        nbytes = round_trip(engine, pages)
+        best = min(best, time.perf_counter() - t0)
+    n_moved = 2 * len(pages)             # pages cross the bus twice
+    return {
+        "seconds": best,
+        "pages_moved": n_moved,
+        "pages_per_s": n_moved / best,
+        "gb_per_s": nbytes / best / 1e9,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast-slots", type=int, default=512)
+    ap.add_argument("--page-shape", type=int, nargs="+", default=[16, 4, 64],
+                    help="per-page payload shape (f32); default ~16 KiB/page")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--ref-repeats", type=int, default=1,
+                    help="reference-engine repeats (the slow baseline)")
+    ap.add_argument("--chunk-pages", type=int, default=64)
+    ap.add_argument("--out", type=Path,
+                    default=ROOT / "benchmarks" / "results" / "migration_bw.json")
+    args = ap.parse_args()
+
+    n_pages = 2 * args.fast_slots
+    shape = tuple(args.page_shape)
+    pages = np.arange(args.fast_slots)
+    page_kib = int(np.prod(shape)) * 4 / 1024
+
+    print(f"migration_bw: fast pool {args.fast_slots} pages x {page_kib:.1f} "
+          f"KiB, round trip = {2 * len(pages)} page moves")
+    results = {}
+    for kind, reps in (("reference", args.ref_repeats),
+                       ("batched", args.repeats)):
+        store = build_store(n_pages, args.fast_slots, shape)
+        results[kind] = measure(kind, store, pages, reps, args.chunk_pages)
+        r = results[kind]
+        print(f"  {kind:9s}: {r['seconds'] * 1e3:8.1f} ms  "
+              f"{r['pages_per_s']:12.0f} pages/s  {r['gb_per_s']:6.2f} GB/s")
+
+    speedup = (results["batched"]["pages_per_s"]
+               / results["reference"]["pages_per_s"])
+    results["speedup"] = speedup
+    results["config"] = {"fast_slots": args.fast_slots,
+                         "page_shape": list(shape),
+                         "page_kib": page_kib}
+    print(f"  speedup  : {speedup:.1f}x "
+          f"({'meets' if speedup >= 5 else 'BELOW'} the 5x bar)")
+
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(results, indent=2))
+    print(f"wrote {args.out}")
+    return 0 if speedup >= 5 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

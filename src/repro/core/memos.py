@@ -21,7 +21,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from . import sysmon as sysmon_mod
-from .migration import MigrationEngine, MigrationStats
+from .migration import MigrationStats, make_engine
 from .placement import FAST, SLOW, BandwidthBalancer, plan
 from .tiers import TierStore
 
@@ -35,6 +35,7 @@ class MemosConfig:
     interval_growth: float = 1.5  # grow when patterns are stable (Sec. 7.4)
     interval_max: int = 256
     stability_threshold: float = 0.02  # fraction of pages changing target
+    engine: str = "batched"       # "batched" (device bulk) | "reference"
 
 
 @dataclass
@@ -52,7 +53,7 @@ class MemosManager:
     def __init__(self, store: TierStore, cfg: MemosConfig | None = None):
         self.store = store
         self.cfg = cfg or MemosConfig()
-        self.engine = MigrationEngine(store)
+        self.engine = make_engine(store, self.cfg.engine)
         self.balancer = BandwidthBalancer(self.cfg.fast_bw_bound)
         self.interval = self.cfg.interval
         self._last_target: np.ndarray | None = None

@@ -1,31 +1,51 @@
-"""Data-migration engine (paper Sec. 6.3, Fig. 10 step 4).
+"""Migration engines (paper Sec. 6.3, Fig. 10 step 4): plan/execute split.
 
-Two migration paths, matching the paper:
+Migration is two phases with a narrow interface between them:
 
-  * ``locked``     — CPU-style synchronous per-page copy under a lock
-                     (serving writes to the batch are fenced).  Preferred
-                     for small batches of hot/WD pages moving slow->fast.
-  * ``optimistic`` — unlocked DMA-style bulk copy: snapshot per-page
-                     version counters, copy the whole batch without
-                     blocking writers, then commit only pages whose version
-                     did not advance during the copy (the paper's post-hoc
-                     dirty-bit check); dirtied pages are retried on the
-                     next iteration ("the migration engine works
-                     iteratively").  Preferred for bulk cold/RD fast->slow
+  * **plan** (host) — the memos pass walks the hotness list, picks each
+    page's destination slot per Algorithm 2 (coldest bank, then coldest
+    non-reserved slab; reserved-slab routing for Thrashing/Rarely-touched
+    pages), and reserves the slots in the sub-buddy allocator.  The output
+    is a ``MigrationPlan``: parallel arrays of (page, src slot, dst slot)
+    plus a per-page version snapshot for the dirty check.
+  * **execute** (device) — the plan is applied as bulk data movement.
+
+Two engines implement execute:
+
+  * ``MigrationEngine`` — the numpy **reference** implementation: a
+    host-side per-page copy loop.  Retained as the parity oracle
+    (tests/test_batched_migration.py) and as the slow baseline in
+    benchmarks/migration_bw.py.
+  * ``BatchedMigrationEngine`` — the **device-resident** fast path.  One
+    bulk move per direction: evicted fast-pool pages are packed into a
+    contiguous staging buffer by the ``kernels/page_gather`` Pallas kernel
+    (XLA gather off-TPU) and streamed to the host slow tier through
+    chunked, double-buffered async device→host copies; promoted pages are
+    staged host→device the same way and scattered into their planned
+    slots with a donated pool buffer, so the whole batch costs one
+    compiled dispatch per chunk instead of one per page.
+
+Both engines expose the same two paths, matching the paper:
+
+  * ``locked``     — synchronous copy, commit unconditionally; used for
+                     small batches of hot/WD pages moving slow->fast.
+  * ``optimistic`` — unlocked DMA-style copy: snapshot per-page version
+                     counters, copy without blocking writers, commit only
+                     pages whose version did not advance mid-copy (the
+                     paper's post-hoc dirty-bit check), retry dirtied
+                     pages iteratively.  Used for bulk cold/RD fast->slow
                      moves, which are rarely dirtied mid-copy.
 
-Two scheduling modes: ``lazy`` (default, move when the memos loop fires)
-and ``eager`` (callers move pages immediately on request).
-
-Placement of the destination slot follows Algorithm 2: coldest bank, then
-coldest non-reserved slab with free rows (per the frequency tables of the
-current pass), so migrations simultaneously rebalance bank and slab load.
+The engines make identical allocator calls in identical order, so for the
+same inputs they produce identical tier/slot tables and pool contents —
+that equivalence is what the parity suite pins down.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Callable, Iterable
 
+import jax
 import numpy as np
 
 from . import placement
@@ -51,53 +71,179 @@ class MigrationStats:
         self.to_slow += other.to_slow
 
 
+# =============================================================================
+# slot targeting (Algorithm 2) — shared by both engines
+# =============================================================================
+
+def target_color(store: TierStore, dst_tier: int,
+                 bank_freq: np.ndarray | None,
+                 slab_freq: np.ndarray | None,
+                 reuse_class: int | None = None) -> tuple[int | None, int | None]:
+    """color = bank*n_slabs + slab, per Algorithm 2 + reserved-slab rules."""
+    cfg = store.alloc[dst_tier].cfg
+    if bank_freq is None or slab_freq is None:
+        return None, None
+    forced_slab = (placement.slab_for_reuse_class(reuse_class)
+                   if reuse_class is not None else None)
+
+    # fold the monitor's bank/slab frequency space onto the allocator's
+    # (the monitor tracks logical banks = device shards, which may be a
+    # different cardinality from the slot pool's color geometry)
+    def fold(freq: np.ndarray, n: int) -> np.ndarray:
+        out = np.zeros(n, dtype=np.float64)
+        for i, v in enumerate(np.asarray(freq)):
+            out[i % n] += v
+        return out
+
+    bfreq = fold(bank_freq, cfg.n_banks)
+    sfreq = fold(slab_freq, cfg.n_slabs)
+
+    def rows_free(bank: int, slab: int) -> bool:
+        # optimistic probe; the allocator falls back to any color when
+        # the exact color is exhausted (see TierStore.move_page)
+        return True
+
+    if forced_slab is not None:
+        bank = int(np.argmin(bfreq))
+        slab = forced_slab % cfg.n_slabs
+        return bank * cfg.n_slabs + slab, cfg.n_colors - 1
+    reserved = tuple(r for r in (placement.RESERVED_THRASH_SLAB,
+                                 placement.RESERVED_RARE_SLAB)
+                     if r < cfg.n_slabs) if cfg.n_slabs > 2 else ()
+    got = placement.coldest_bank_and_slab(bfreq, sfreq, rows_free,
+                                          reserved=reserved)
+    if got is None:
+        return None, None
+    bank, slab = got
+    return bank * cfg.n_slabs + slab, cfg.n_colors - 1
+
+
+def _alloc_target_slot(store: TierStore, dst_tier: int,
+                       bank_freq: np.ndarray | None,
+                       slab_freq: np.ndarray | None,
+                       reuse_class: int | None) -> int | None:
+    """Reserve one destination slot per Algorithm 2, falling back to any
+    color when the targeted slab walk is exhausted (capacity is the real
+    bound, not color)."""
+    color, mask = target_color(store, dst_tier, bank_freq, slab_freq,
+                               reuse_class)
+    slot = store.alloc[dst_tier].alloc(0, color, mask)
+    if slot is None and color is not None:
+        slot = store.alloc[dst_tier].alloc(0, None)
+    return slot
+
+
+# =============================================================================
+# plans
+# =============================================================================
+
+@dataclass
+class MigrationPlan:
+    """A reserved, executable bulk move in one direction.
+
+    ``pages[i]`` moves ``src_slots[i]`` (in the source tier) ->
+    ``dst_slots[i]`` (reserved in ``dst_tier``).  ``trivial`` counts pages
+    that were requested but already sit in ``dst_tier`` (the locked path
+    reports them as migrated without moving data, like the reference).
+    """
+    dst_tier: int
+    pages: np.ndarray       # int64 [k]
+    src_slots: np.ndarray   # int64 [k]
+    dst_slots: np.ndarray   # int64 [k]
+    trivial: int = 0
+
+    @property
+    def src_tier(self) -> int:
+        return FAST if self.dst_tier == SLOW else SLOW
+
+    def __len__(self) -> int:
+        return int(self.pages.size)
+
+
+def plan_locked(store: TierStore, pages: Iterable[int], dst_tier: int,
+                bank_freq: np.ndarray | None = None,
+                slab_freq: np.ndarray | None = None,
+                reuse_class: np.ndarray | None = None) -> MigrationPlan:
+    """Phase 1 for the locked path: reserve destination slots for every
+    movable page, in hotness-list order (allocator call sequence identical
+    to the reference engine's, so both engines land pages in the same
+    slots)."""
+    bank_freq = None if bank_freq is None else np.array(bank_freq)
+    mv_pages: list[int] = []
+    src_slots: list[int] = []
+    dst_slots: list[int] = []
+    planned: dict[int, int] = {}            # page -> reserved dst slot
+    trivial = 0
+
+    def account(slot: int) -> None:
+        # account the move so subsequent picks spread across banks
+        if bank_freq is not None:
+            cfg = store.alloc[dst_tier].cfg
+            bank_freq[cfg.bank_of(slot) % len(bank_freq)] += 1
+
+    for p in pages:
+        p = int(p)
+        cur_slot = planned.get(p, int(store.slot[p]))
+        if int(store.tier[p]) == dst_tier or p in planned:
+            # already there (or already planned this batch): the reference
+            # reports these as migrated without moving data
+            trivial += 1
+            account(cur_slot)
+            continue
+        if cur_slot == NO_SLOT:
+            continue                        # released page: nothing to move
+        rc = None if reuse_class is None else int(reuse_class[p])
+        new_slot = _alloc_target_slot(store, dst_tier, bank_freq, slab_freq, rc)
+        if new_slot is None:
+            continue
+        mv_pages.append(p)
+        src_slots.append(cur_slot)
+        dst_slots.append(new_slot)
+        planned[p] = new_slot
+        account(new_slot)
+    return MigrationPlan(
+        dst_tier=dst_tier,
+        pages=np.asarray(mv_pages, np.int64),
+        src_slots=np.asarray(src_slots, np.int64),
+        dst_slots=np.asarray(dst_slots, np.int64),
+        trivial=trivial,
+    )
+
+
+def execute_decision(engine, decision: placement.PlacementDecision,
+                     bank_freq: np.ndarray | None = None,
+                     slab_freq: np.ndarray | None = None,
+                     reuse_class: np.ndarray | None = None) -> MigrationStats:
+    """Direction routing shared by both engines (Sec. 6.3 observed
+    asymmetry): slow->fast hot/WD pages take the locked path (small, must
+    be consistent *now*); fast->slow bulk cold/RD pages take the
+    optimistic DMA path."""
+    st = MigrationStats()
+    hl = decision.hotness_list
+    to_fast = [p for p in hl if decision.target_tier[p] == FAST]
+    to_slow = [p for p in hl if decision.target_tier[p] == SLOW]
+    st.merge(engine.migrate_locked(to_fast, FAST, bank_freq, slab_freq,
+                                   reuse_class))
+    st.merge(engine.migrate_optimistic(to_slow, SLOW, bank_freq, slab_freq,
+                                       reuse_class))
+    return st
+
+
+# =============================================================================
+# reference engine (numpy per-page loop) — the parity oracle
+# =============================================================================
+
 class MigrationEngine:
     def __init__(self, store: TierStore, *, max_retries: int = 3):
         self.store = store
         self.max_retries = max_retries
         self.stats = MigrationStats()
 
-    # -- slot targeting (Algorithm 2) ----------------------------------------
     def _target_color(self, dst_tier: int, bank_freq: np.ndarray | None,
                       slab_freq: np.ndarray | None,
                       reuse_class: int | None = None) -> tuple[int | None, int | None]:
-        """color = bank*n_slabs + slab, per Algorithm 2 + reserved-slab rules."""
-        cfg = self.store.alloc[dst_tier].cfg
-        if bank_freq is None or slab_freq is None:
-            return None, None
-        forced_slab = (placement.slab_for_reuse_class(reuse_class)
-                       if reuse_class is not None else None)
-
-        # fold the monitor's bank/slab frequency space onto the allocator's
-        # (the monitor tracks logical banks = device shards, which may be a
-        # different cardinality from the slot pool's color geometry)
-        def fold(freq: np.ndarray, n: int) -> np.ndarray:
-            out = np.zeros(n, dtype=np.float64)
-            for i, v in enumerate(np.asarray(freq)):
-                out[i % n] += v
-            return out
-
-        bfreq = fold(bank_freq, cfg.n_banks)
-        sfreq = fold(slab_freq, cfg.n_slabs)
-
-        def rows_free(bank: int, slab: int) -> bool:
-            # optimistic probe; the allocator falls back to any color when
-            # the exact color is exhausted (see TierStore.move_page)
-            return True
-
-        if forced_slab is not None:
-            bank = int(np.argmin(bfreq))
-            slab = forced_slab % cfg.n_slabs
-            return bank * cfg.n_slabs + slab, cfg.n_colors - 1
-        reserved = tuple(r for r in (placement.RESERVED_THRASH_SLAB,
-                                     placement.RESERVED_RARE_SLAB)
-                         if r < cfg.n_slabs) if cfg.n_slabs > 2 else ()
-        got = placement.coldest_bank_and_slab(bfreq, sfreq, rows_free,
-                                              reserved=reserved)
-        if got is None:
-            return None, None
-        bank, slab = got
-        return bank * cfg.n_slabs + slab, cfg.n_colors - 1
+        return target_color(self.store, dst_tier, bank_freq, slab_freq,
+                            reuse_class)
 
     # -- locked path -----------------------------------------------------------
     def migrate_locked(self, pages: Iterable[int], dst_tier: int,
@@ -140,7 +286,7 @@ class MigrationEngine:
         while the DMA is in flight.
         """
         st = MigrationStats()
-        pending = [int(p) for p in pages
+        pending = [int(p) for p in dict.fromkeys(int(p) for p in pages)
                    if int(self.store.tier[p]) != dst_tier
                    and int(self.store.slot[p]) != NO_SLOT]
         bank_freq = None if bank_freq is None else np.array(bank_freq)
@@ -163,11 +309,8 @@ class MigrationEngine:
                     st.dirty_discards += 1
                     continue
                 rc = None if reuse_class is None else int(reuse_class[p])
-                color, mask = self._target_color(dst_tier, bank_freq,
-                                                 slab_freq, rc)
-                new_slot = self.store.alloc[dst_tier].alloc(0, color, mask)
-                if new_slot is None and color is not None:
-                    new_slot = self.store.alloc[dst_tier].alloc(0, None)
+                new_slot = _alloc_target_slot(self.store, dst_tier, bank_freq,
+                                              slab_freq, rc)
                 if new_slot is None:
                     continue
                 old_tier, old_slot = int(self.store.tier[p]), int(self.store.slot[p])
@@ -196,15 +339,186 @@ class MigrationEngine:
                 bank_freq: np.ndarray | None = None,
                 slab_freq: np.ndarray | None = None,
                 reuse_class: np.ndarray | None = None) -> MigrationStats:
-        """Run a planned migration: slow->fast hot/WD pages take the locked
-        path (small, must be consistent *now*); fast->slow bulk cold/RD
-        pages take the optimistic DMA path."""
+        return execute_decision(self, decision, bank_freq, slab_freq,
+                                reuse_class)
+
+
+# =============================================================================
+# batched device-resident engine — the fast path
+# =============================================================================
+
+class BatchedMigrationEngine:
+    """Executes migration plans as bulk device ops (see module docstring).
+
+    Drop-in for ``MigrationEngine``: same constructor, same
+    ``migrate_locked`` / ``migrate_optimistic`` / ``execute`` signatures,
+    same resulting tier/slot/pool state.  ``chunk_pages`` bounds the
+    staging working set and is the unit of the double-buffered host↔device
+    pipeline: while chunk *i* is converting on the host, chunk *i+1*'s
+    gather/transfer is already in flight (JAX async dispatch +
+    ``copy_to_host_async``).
+    """
+
+    def __init__(self, store: TierStore, *, max_retries: int = 3,
+                 chunk_pages: int = 64):
+        self.store = store
+        self.max_retries = max_retries
+        self.chunk_pages = max(1, int(chunk_pages))
+        self.stats = MigrationStats()
+
+    # -- bulk staging ----------------------------------------------------------
+    def _stage_fast_to_host(self, slots: np.ndarray) -> np.ndarray:
+        """Gather fast-pool slots into contiguous device staging (Pallas
+        page_gather), then stream chunks to the host.  Each chunk's
+        device→host copy is started asynchronously before the next chunk's
+        gather is dispatched, so transfer overlaps packing."""
+        slots = np.asarray(slots, np.int64)
+        if slots.size == 0:
+            return np.zeros((0, *self.store.cfg.page_shape), np.float32)
+        bufs = []
+        for i in range(0, slots.size, self.chunk_pages):
+            g = self.store.gather_fast(slots[i:i + self.chunk_pages])
+            try:
+                g.copy_to_host_async()
+            except AttributeError:      # older jax array types
+                pass
+            bufs.append(g)
+        return np.concatenate([np.asarray(b, np.float32) for b in bufs])
+
+    def _stage_host_to_fast(self, dst_slots: np.ndarray,
+                            values: np.ndarray) -> None:
+        """Scatter host pages into their planned fast-pool slots (Pallas
+        page_scatter, pool donated).  Chunk *i+1*'s host→device transfer is
+        issued before chunk *i*'s scatter blocks, double-buffering the
+        upload."""
+        dst_slots = np.asarray(dst_slots, np.int64)
+        k = dst_slots.size
+        if k == 0:
+            return
+        c = self.chunk_pages
+        nxt = jax.device_put(values[:c])
+        for i in range(0, k, c):
+            cur = nxt
+            if i + c < k:
+                nxt = jax.device_put(values[i + c:i + 2 * c])
+            self.store.scatter_fast(dst_slots[i:i + c], cur)
+
+    # -- plan execution --------------------------------------------------------
+    def execute_plan(self, plan: MigrationPlan) -> MigrationStats:
+        """Apply a reserved plan as one bulk move (locked semantics: commit
+        unconditionally)."""
         st = MigrationStats()
-        hl = decision.hotness_list
-        to_fast = [p for p in hl if decision.target_tier[p] == FAST]
-        to_slow = [p for p in hl if decision.target_tier[p] == SLOW]
-        st.merge(self.migrate_locked(to_fast, FAST, bank_freq, slab_freq,
-                                     reuse_class))
-        st.merge(self.migrate_optimistic(to_slow, SLOW, bank_freq, slab_freq,
-                                         reuse_class))
+        k = len(plan)
+        store = self.store
+        if k:
+            if plan.dst_tier == FAST:
+                staged = store.slow_read_batch(plan.src_slots)
+                self._stage_host_to_fast(plan.dst_slots, staged)
+            else:
+                staged = self._stage_fast_to_host(plan.src_slots)
+                store.slow_write_batch(plan.dst_slots, staged)
+            store.reads_from[plan.src_tier] += k
+            store.commit_moves(plan.pages, plan.dst_tier, plan.dst_slots)
+        st.migrated = k + plan.trivial
+        st.bytes_moved = (k + plan.trivial) * store.page_nbytes
+        if plan.dst_tier == FAST:
+            st.to_fast = st.migrated
+        else:
+            st.to_slow = st.migrated
+        self.stats.merge(st)
         return st
+
+    # -- locked path -----------------------------------------------------------
+    def migrate_locked(self, pages: Iterable[int], dst_tier: int,
+                       bank_freq: np.ndarray | None = None,
+                       slab_freq: np.ndarray | None = None,
+                       reuse_class: np.ndarray | None = None) -> MigrationStats:
+        plan = plan_locked(self.store, pages, dst_tier, bank_freq, slab_freq,
+                           reuse_class)
+        return self.execute_plan(plan)
+
+    # -- optimistic (unlocked DMA) path ---------------------------------------
+    def migrate_optimistic(
+        self, pages: Iterable[int], dst_tier: int,
+        bank_freq: np.ndarray | None = None,
+        slab_freq: np.ndarray | None = None,
+        reuse_class: np.ndarray | None = None,
+        concurrent_writer: Callable[[], None] | None = None,
+    ) -> MigrationStats:
+        """Bulk unlocked copy: stage the whole batch, then commit only pages
+        whose version counter did not advance mid-copy; dirtied pages retry
+        on the next iteration (destination slots are only reserved after
+        the dirty check, so aborted pages reserve nothing)."""
+        st = MigrationStats()
+        store = self.store
+        pending = np.asarray(
+            [int(p) for p in dict.fromkeys(int(p) for p in pages)
+             if int(store.tier[p]) != dst_tier
+             and int(store.slot[p]) != NO_SLOT], np.int64)
+        bank_freq = None if bank_freq is None else np.array(bank_freq)
+        for attempt in range(self.max_retries + 1):
+            if pending.size == 0:
+                break
+            if attempt > 0:
+                st.retries += 1
+            # 1) snapshot versions, 2) unlocked bulk copy to staging
+            vsnap = store.version[pending].copy()
+            src_slots = store.slot[pending].copy()
+            if dst_tier == SLOW:
+                staged = self._stage_fast_to_host(src_slots)
+            else:
+                staged = store.slow_read_batch(src_slots)
+            store.reads_from[FAST if dst_tier == SLOW else SLOW] += pending.size
+            if concurrent_writer is not None:
+                concurrent_writer()
+                concurrent_writer = None  # writer fires once
+            # 3) dirty check + bulk-commit clean pages
+            dirty_mask = store.version[pending] != vsnap
+            st.dirty_discards += int(dirty_mask.sum())
+            clean = np.nonzero(~dirty_mask)[0]
+            commit_idx: list[int] = []
+            dst_slots: list[int] = []
+            for i in clean:
+                rc = (None if reuse_class is None
+                      else int(reuse_class[pending[i]]))
+                s = _alloc_target_slot(store, dst_tier, bank_freq, slab_freq,
+                                       rc)
+                if s is None:
+                    continue          # capacity exhausted: drop, like the ref
+                commit_idx.append(int(i))
+                dst_slots.append(s)
+            if commit_idx:
+                idx = np.asarray(commit_idx, np.int64)
+                slots = np.asarray(dst_slots, np.int64)
+                if dst_tier == SLOW:
+                    store.slow_write_batch(slots, staged[idx])
+                else:
+                    self._stage_host_to_fast(slots, staged[idx])
+                store.commit_moves(pending[idx], dst_tier, slots)
+                st.migrated += idx.size
+                st.bytes_moved += idx.size * store.page_nbytes
+                if dst_tier == FAST:
+                    st.to_fast += idx.size
+                else:
+                    st.to_slow += idx.size
+            pending = pending[dirty_mask]
+        self.stats.merge(st)
+        return st
+
+    # -- policy-selected execution ---------------------------------------------
+    def execute(self, decision: placement.PlacementDecision,
+                bank_freq: np.ndarray | None = None,
+                slab_freq: np.ndarray | None = None,
+                reuse_class: np.ndarray | None = None) -> MigrationStats:
+        return execute_decision(self, decision, bank_freq, slab_freq,
+                                reuse_class)
+
+
+def make_engine(store: TierStore, kind: str = "batched", **kw):
+    """Engine factory: ``"batched"`` (device-resident bulk mover, default)
+    or ``"reference"`` (numpy per-page oracle)."""
+    if kind == "batched":
+        return BatchedMigrationEngine(store, **kw)
+    if kind == "reference":
+        return MigrationEngine(store, **kw)
+    raise ValueError(f"unknown migration engine {kind!r}")

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.page_gather import page_gather, page_scatter
+
 from .allocator import SubBuddyAllocator, SubBuddyConfig
 from .placement import FAST, SLOW
 
@@ -134,6 +136,63 @@ class TierStore:
             return self.slow_pool[slot].astype(np.float32) * self.slow_scale[slot]
         return np.asarray(self.slow_pool[slot], np.float32)
 
+    # -- batched data access (the migration engine's bulk primitives) ----------
+    def gather_fast(self, slots) -> jnp.ndarray:
+        """Pack discontiguous fast-pool slots into one contiguous staging
+        buffer on device (Pallas page_gather on TPU, XLA gather elsewhere)."""
+        return page_gather(self.fast_pool, jnp.asarray(slots, jnp.int32))
+
+    def scatter_fast(self, slots, pages: jnp.ndarray) -> None:
+        """pool[slots[i]] = pages[i]; the pool buffer is donated, slots not
+        referenced pass through untouched."""
+        self.fast_pool = page_scatter(
+            self.fast_pool, jnp.asarray(slots, jnp.int32),
+            pages.astype(self.cfg.dtype))
+
+    def slow_read_batch(self, slots: np.ndarray) -> np.ndarray:
+        """[k, *page_shape] float32 view of slow-pool slots (vectorized
+        dequantize for the soft-NVM tier)."""
+        slots = np.asarray(slots, np.int64)
+        if self.cfg.quantize_slow:
+            pages = self.slow_pool[slots].astype(np.float32)
+            scale = self.slow_scale[slots].reshape(
+                (-1,) + (1,) * len(self.cfg.page_shape))
+            return pages * scale
+        return np.asarray(self.slow_pool[slots], np.float32)
+
+    def slow_write_batch(self, slots: np.ndarray, values: np.ndarray) -> None:
+        """slow_pool[slots[i]] = values[i], quantizing per page when the
+        slow tier is int8 (bit-identical to the per-page _slow_write)."""
+        slots = np.asarray(slots, np.int64)
+        values = np.asarray(values, np.float32)
+        if self.cfg.quantize_slow:
+            axes = tuple(range(1, values.ndim))
+            scale = np.maximum(np.max(np.abs(values), axis=axes), 1e-8) / 127.0
+            q = np.clip(np.round(values / scale.reshape(
+                (-1,) + (1,) * len(self.cfg.page_shape))), -127, 127)
+            self.slow_pool[slots] = q.astype(np.int8)
+            self.slow_scale[slots] = scale.astype(np.float32)
+        else:
+            self.slow_pool[slots] = values
+
+    def commit_moves(self, pages: np.ndarray, dst_tier: int,
+                     new_slots: np.ndarray) -> None:
+        """Flip the page table for an executed bulk move: free the old slots,
+        bind the new ones, account traffic — one vectorized pass over the
+        tier/slot arrays (the allocator free loop is host metadata only)."""
+        pages = np.asarray(pages, np.int64)
+        new_slots = np.asarray(new_slots, np.int64)
+        if pages.size == 0:
+            return
+        src_tier = FAST if dst_tier == SLOW else SLOW
+        assert (self.tier[pages] == src_tier).all(), \
+            "commit_moves: page not in the expected source tier"
+        for s in self.slot[pages]:
+            self.alloc[src_tier].free(int(s), 0)
+        self.tier[pages] = dst_tier
+        self.slot[pages] = new_slots
+        self.traffic[(src_tier, dst_tier)] += self.page_nbytes * pages.size
+
     # -- migration primitive (single page, already-planned) --------------------
     def move_page(self, page: int, dst_tier: int, color: int | None = None,
                   color_mask: int | None = None) -> bool:
@@ -141,6 +200,8 @@ class TierStore:
         src_tier = int(self.tier[page])
         if src_tier == dst_tier:
             return True
+        if int(self.slot[page]) == NO_SLOT:
+            return False                   # released page: nothing to move
         data = self.read_page(page)
         new_slot = self.alloc[dst_tier].alloc(0, color, color_mask)
         if new_slot is None and color is not None:

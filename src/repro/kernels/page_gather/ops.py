@@ -1,22 +1,64 @@
-"""jit'd wrappers for the migration data mover."""
+"""Dispatching wrappers for the migration data mover.
+
+Three execution paths per primitive:
+
+  * TPU            — the Pallas scatter-gather kernel, compiled (the
+                     double-buffered DMA pipeline described in
+                     page_gather.py);
+  * explicit       — ``interpret=True`` runs the same Pallas kernel in
+                     interpreter mode (kernel-parity tests);
+  * other backends — a jitted XLA gather/scatter with identical
+                     semantics.  Interpreter-mode Pallas loops the grid
+                     in Python and is orders of magnitude too slow to be
+                     the batched migration engine's fast path on CPU/GPU
+                     hosts, so auto-dispatch (``interpret=None``) only
+                     picks Pallas on TPU.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from .page_gather import page_gather_pallas, page_scatter_pallas
 
 
 @partial(jax.jit, static_argnames=("interpret",))
-def page_gather(pool, idx, *, interpret: bool | None = None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _gather_pallas(pool, idx, *, interpret: bool):
     return page_gather_pallas(pool, idx, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
-def page_scatter(pool, idx, pages, *, interpret: bool | None = None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _scatter_pallas(pool, idx, pages, *, interpret: bool):
     return page_scatter_pallas(pool, idx, pages, interpret=interpret)
+
+
+@jax.jit
+def _gather_xla(pool, idx):
+    return jnp.take(pool, idx, axis=0)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_xla(pool, idx, pages):
+    return pool.at[idx].set(pages)
+
+
+def page_gather(pool, idx, *, interpret: bool | None = None):
+    """staging[i] = pool[idx[i]].  idx: int [k] -> [k, *page_shape]."""
+    idx = idx.astype(jnp.int32)
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return _gather_xla(pool, idx)
+        interpret = False
+    return _gather_pallas(pool, idx, interpret=interpret)
+
+
+def page_scatter(pool, idx, pages, *, interpret: bool | None = None):
+    """pool[idx[i]] = pages[i]; returns the updated pool (pool donated)."""
+    idx = idx.astype(jnp.int32)
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return _scatter_xla(pool, idx, pages)
+        interpret = False
+    return _scatter_pallas(pool, idx, pages, interpret=interpret)

@@ -7,16 +7,25 @@ set XLA_FLAGS before any jax initialization.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+except ImportError:  # pre-0.5 jax has no explicit axis types
+    AxisType = None
 
 from repro.parallel.sharding import MeshInfo
+
+
+def _mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh_info(mesh, *, seq_shard: bool = True) -> MeshInfo:
@@ -29,5 +38,4 @@ def make_mesh_info(mesh, *, seq_shard: bool = True) -> MeshInfo:
 def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     """Small host-device mesh for CPU sharding tests (needs
     --xla_force_host_platform_device_count >= n_data*n_model)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _mesh((n_data, n_model), ("data", "model"))

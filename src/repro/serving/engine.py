@@ -96,10 +96,21 @@ class PagedServingEngine:
         return self.kv.is_resident(tail)
 
     def _promote(self, req: Request) -> bool:
-        cold = [p for p in req.pages if not self.kv.is_resident(p)]
-        if cold:
+        return self._promote_all([req])
+
+    def _promote_all(self, reqs: list[Request]) -> bool:
+        """Promote every non-resident page of ``reqs`` in one batched
+        migration (single plan->execute bulk move instead of per-request
+        per-page copies)."""
+        pids = [p for req in reqs for p in req.pages]
+        if not pids:
+            return True
+        mask = self.kv.resident_mask(pids)
+        if not mask.all():
+            cold = [p for p, m in zip(pids, mask) if not m]
             self.memos.engine.migrate_locked(cold, FAST)
-        return all(self.kv.is_resident(p) for p in req.pages)
+            mask = self.kv.resident_mask(pids)
+        return bool(mask.all())
 
     def _make_room(self) -> bool:
         return self.batcher.preempt_lowest() is not None
@@ -189,8 +200,9 @@ class PagedServingEngine:
             tokens[i, 0] = seq[req.pos]
             positions[i] = req.pos
             lengths[i] = req.pos + 1
-            for j, pid in enumerate(req.pages[:P]):
-                block_tables[i, j] = self.kv.fast_slot(pid)
+            pg = req.pages[:P]
+            # one vectorized page-table lookup per row (no per-page loop)
+            block_tables[i, :len(pg)] = self.kv.fast_slots_of(pg)
 
         # 2) jitted decode: KV write into the pool + paged attention
         store = self.kv.store
@@ -240,8 +252,9 @@ class PagedServingEngine:
                     "to_fast": report.migrations.to_fast,
                     "to_slow": report.migrations.to_slow,
                 }
-                for req in self.batcher.active:
-                    self._promote(req)
+                # single bulk promotion for every page the memos pass demoted
+                # out from under a still-running sequence
+                self._promote_all(list(self.batcher.active))
 
         self.step_count += 1
         stats["tokens_out"] = self.tokens_out

@@ -66,6 +66,20 @@ class PagedKVCache:
         assert self.is_resident(pid), f"page {pid} not HBM-resident"
         return int(self.store.slot[pid])
 
+    def resident_mask(self, pids) -> np.ndarray:
+        """bool [k]: which of ``pids`` are live in the fast pool."""
+        pids = np.asarray(pids, np.int64)
+        return (self.store.tier[pids] == FAST) & \
+            (self.store.slot[pids] != NO_SLOT)
+
+    def fast_slots_of(self, pids) -> np.ndarray:
+        """int32 [k] fast-pool slots for a batch of logical pages — the
+        vectorized block-table fill (all pages must be HBM-resident)."""
+        pids = np.asarray(pids, np.int64)
+        assert self.resident_mask(pids).all(), \
+            f"non-resident pages in {pids.tolist()}"
+        return self.store.slot[pids].astype(np.int32)
+
     # -- data access -------------------------------------------------------------
     def write_token_kv(self, pid: int, layer_kv: jnp.ndarray,
                        offset: int) -> None:

@@ -1,0 +1,36 @@
+"""Optional-hypothesis shim: property tests skip cleanly when hypothesis
+is not installed (it lives in requirements-dev.txt, not the runtime deps).
+
+    from helpers.optional_hypothesis import given, settings, st
+
+When hypothesis is present these are the real objects.  Otherwise ``given``
+returns a decorator that marks the test skipped, ``settings`` is a no-op,
+and ``st`` yields inert strategy stubs, so modules still collect.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed "
+                                       "(pip install -r requirements-dev.txt)")
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        def __getattr__(self, _name):
+            def strategy(*_a, **_k):
+                return None
+            return strategy
+
+    st = _StrategyStub()
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,289 @@
+"""Parity + invariant suite for the batched device-resident migration engine.
+
+The batched engine (one Pallas/XLA bulk move per direction) must be
+observationally identical to the retained numpy reference engine: same
+tier/slot tables, same pool contents, same dirty-discard behavior, for
+randomized plans.  On top of parity, allocator invariants (no slot
+double-booking, page-table/allocator consistency) and the serving-side
+guarantee that block tables only ever point at live fast slots.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sysmon
+from repro.core.memos import MemosConfig, MemosManager
+from repro.core.migration import (BatchedMigrationEngine, MigrationEngine,
+                                  make_engine, plan_locked)
+from repro.core.placement import FAST, SLOW
+from repro.core.tiers import NO_SLOT, TierConfig, TierStore
+from repro.serving.kv_cache import PagedKVCache, PagedKVConfig
+
+
+def make_store(n=48, fast=16, slow=64, quantize=False, shape=(4,),
+               dtype=jnp.float32, seed=0):
+    s = TierStore(TierConfig(n_pages=n, fast_slots=fast, slow_slots=slow,
+                             page_shape=shape, dtype=dtype,
+                             quantize_slow=quantize))
+    rng = np.random.RandomState(seed)
+    for p in range(n):
+        assert s.allocate(p, SLOW)
+        s.write_page(p, rng.standard_normal(shape).astype(np.float32))
+    return s
+
+
+def assert_state_equal(a: TierStore, b: TierStore):
+    np.testing.assert_array_equal(a.tier, b.tier)
+    np.testing.assert_array_equal(a.slot, b.slot)
+    np.testing.assert_array_equal(a.version, b.version)
+    for p in np.nonzero(a.slot != NO_SLOT)[0]:
+        np.testing.assert_array_equal(a.read_page(int(p)), b.read_page(int(p)),
+                                      err_msg=f"page {p} contents diverge")
+    assert a.traffic == b.traffic
+
+
+def assert_alloc_invariants(s: TierStore):
+    """No slot double-booking; page table consistent with the allocators."""
+    for tier, cap in ((FAST, s.cfg.fast_slots), (SLOW, s.cfg.slow_slots)):
+        live = np.nonzero((s.slot != NO_SLOT) & (s.tier == tier))[0]
+        slots = s.slot[live]
+        assert len(set(slots.tolist())) == live.size, \
+            f"tier {tier}: two pages share a physical slot"
+        assert ((slots >= 0) & (slots < cap)).all()
+        assert s.alloc[tier].n_free == cap - live.size, \
+            f"tier {tier}: allocator free count disagrees with page table"
+
+
+# =============================================================================
+# parity: batched engine vs numpy reference on randomized plans
+# =============================================================================
+
+@pytest.mark.parametrize("quantize", [False, True])
+@pytest.mark.parametrize("chunk", [3, 64])
+def test_locked_parity_randomized(quantize, chunk):
+    ref_s = make_store(quantize=quantize)
+    bat_s = make_store(quantize=quantize)
+    ref = MigrationEngine(ref_s)
+    bat = BatchedMigrationEngine(bat_s, chunk_pages=chunk)
+    rng = np.random.RandomState(1)
+    for round_ in range(12):
+        k = rng.randint(1, 20)
+        pages = rng.choice(48, size=k, replace=False)
+        dst = FAST if rng.rand() < 0.5 else SLOW
+        if rng.rand() < 0.5:
+            bank_freq = rng.randint(0, 10, 8).astype(np.float64)
+            slab_freq = rng.randint(0, 10, 16).astype(np.float64)
+            reuse = rng.randint(0, 3, 48)
+        else:
+            bank_freq = slab_freq = reuse = None
+        st_r = ref.migrate_locked(pages, dst, bank_freq, slab_freq, reuse)
+        st_b = bat.migrate_locked(pages, dst, bank_freq, slab_freq, reuse)
+        assert (st_r.migrated, st_r.to_fast, st_r.to_slow) == \
+            (st_b.migrated, st_b.to_fast, st_b.to_slow), f"round {round_}"
+        assert_state_equal(ref_s, bat_s)
+        assert_alloc_invariants(bat_s)
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_optimistic_parity_randomized(quantize):
+    ref_s = make_store(quantize=quantize)
+    bat_s = make_store(quantize=quantize)
+    ref = MigrationEngine(ref_s, max_retries=2)
+    bat = BatchedMigrationEngine(bat_s, max_retries=2, chunk_pages=5)
+    rng = np.random.RandomState(2)
+    for round_ in range(12):
+        k = rng.randint(1, 20)
+        pages = rng.choice(48, size=k, replace=False)
+        dst = FAST if rng.rand() < 0.5 else SLOW
+        dirty = rng.choice(pages, size=min(3, k), replace=False)
+        val = rng.standard_normal(4).astype(np.float32)
+
+        def writer_for(store):
+            def writer():
+                for p in dirty:
+                    store.write_page(int(p), val)
+            return writer
+
+        st_r = ref.migrate_optimistic(pages, dst,
+                                      concurrent_writer=writer_for(ref_s))
+        st_b = bat.migrate_optimistic(pages, dst,
+                                      concurrent_writer=writer_for(bat_s))
+        assert (st_r.migrated, st_r.dirty_discards, st_r.retries) == \
+            (st_b.migrated, st_b.dirty_discards, st_b.retries), f"round {round_}"
+        assert_state_equal(ref_s, bat_s)
+        assert_alloc_invariants(bat_s)
+
+
+def test_optimistic_dirty_page_not_committed():
+    s = make_store()
+    eng = BatchedMigrationEngine(s, max_retries=0)
+    before = s.read_page(1).copy()
+
+    def writer():
+        s.write_page(1, np.zeros(4, np.float32))
+
+    stats = eng.migrate_optimistic([0, 1, 2], FAST, concurrent_writer=writer)
+    assert stats.dirty_discards == 1
+    assert s.tier[0] == FAST and s.tier[2] == FAST
+    assert s.tier[1] == SLOW            # dirtied mid-copy: not committed
+    np.testing.assert_array_equal(s.read_page(1), np.zeros(4))
+    assert not np.array_equal(before, np.zeros(4))
+
+
+def test_bf16_pool_parity():
+    """Lossy fast-pool dtype: both engines apply the identical cast."""
+    ref_s = make_store(dtype=jnp.bfloat16)
+    bat_s = make_store(dtype=jnp.bfloat16)
+    ref = MigrationEngine(ref_s)
+    bat = BatchedMigrationEngine(bat_s, chunk_pages=4)
+    pages = list(range(0, 14))
+    ref.migrate_locked(pages, FAST)
+    bat.migrate_locked(pages, FAST)
+    assert_state_equal(ref_s, bat_s)
+
+
+def test_memos_pass_parity_end_to_end():
+    """A full memos loop (plan -> migrate -> balance) drives both engines to
+    the same hierarchy state."""
+    stores = {k: make_store(n=32, fast=8) for k in ("reference", "batched")}
+    mgrs = {k: MemosManager(s, MemosConfig(interval=1, adaptive_interval=False,
+                                           engine=k))
+            for k, s in stores.items()}
+    assert isinstance(mgrs["batched"].engine, BatchedMigrationEngine)
+    assert isinstance(mgrs["reference"].engine, MigrationEngine)
+    sms = {k: sysmon.init(32, 4, 4) for k in stores}
+    rng = np.random.RandomState(3)
+    for step in range(12):
+        hot = rng.choice(32, size=6, replace=False).astype(np.int32)
+        reports = {}
+        for k in stores:
+            sms[k] = sysmon.record(sms[k], jnp.asarray(hot), is_write=True)
+            sms[k], reports[k] = mgrs[k].maybe_step(sms[k])
+        r, b = reports["reference"], reports["batched"]
+        assert (r is None) == (b is None)
+        if r is not None:
+            assert r.n_marked == b.n_marked
+            assert (r.migrations.migrated, r.migrations.to_fast,
+                    r.migrations.to_slow) == \
+                (b.migrations.migrated, b.migrations.to_fast,
+                 b.migrations.to_slow), f"step {step}"
+        assert_state_equal(stores["reference"], stores["batched"])
+        assert_alloc_invariants(stores["batched"])
+
+
+# =============================================================================
+# plans
+# =============================================================================
+
+def test_plan_reserves_slots_and_counts_trivial():
+    s = make_store(n=16, fast=4)
+    free_before = s.alloc[FAST].n_free
+    plan = plan_locked(s, range(8), FAST)
+    # capacity-bounded: only 4 destination slots exist
+    assert len(plan) == 4 and plan.trivial == 0
+    assert s.alloc[FAST].n_free == free_before - 4
+    assert (s.tier[plan.pages] == SLOW).all()     # plan does not move data
+    eng = BatchedMigrationEngine(s)
+    st = eng.execute_plan(plan)
+    assert st.migrated == 4 and (s.tier[plan.pages] == FAST).all()
+    np.testing.assert_array_equal(s.slot[plan.pages], plan.dst_slots)
+    # re-planning pages already in FAST reports them trivially migrated
+    plan2 = plan_locked(s, plan.pages, FAST)
+    assert len(plan2) == 0 and plan2.trivial == 4
+    assert eng.execute_plan(plan2).migrated == 4
+    assert_alloc_invariants(s)
+
+
+def test_released_pages_are_skipped_not_corrupted():
+    """Pages freed between planning inputs and the migrate call (slot ==
+    NO_SLOT) must be skipped by both engines, leaving state untouched."""
+    ref_s, bat_s = make_store(), make_store()
+    for s in (ref_s, bat_s):
+        s.release(3)
+        s.release(5)
+    pages = [2, 3, 4, 5, 6]
+    st_r = MigrationEngine(ref_s).migrate_locked(pages, FAST)
+    st_b = BatchedMigrationEngine(bat_s).migrate_locked(pages, FAST)
+    assert st_r.migrated == st_b.migrated == 3
+    assert_state_equal(ref_s, bat_s)
+    assert bat_s.slot[3] == NO_SLOT and bat_s.slot[5] == NO_SLOT
+    assert_alloc_invariants(bat_s)
+
+
+def test_duplicate_pages_in_one_batch():
+    """A page id repeated in one locked batch moves once; the repeat counts
+    as a trivial (already-there) migration, matching the reference."""
+    ref_s, bat_s = make_store(), make_store()
+    bank = np.zeros(8)
+    bank_r, bank_b = bank.copy(), bank.copy()
+    slab = np.ones(16)
+    st_r = MigrationEngine(ref_s).migrate_locked([5, 5, 7], FAST,
+                                                 bank_r, slab)
+    st_b = BatchedMigrationEngine(bat_s).migrate_locked([5, 5, 7], FAST,
+                                                        bank_b, slab)
+    assert st_r.migrated == st_b.migrated == 3
+    assert_state_equal(ref_s, bat_s)
+    assert_alloc_invariants(bat_s)
+
+
+def test_duplicate_pages_optimistic_batch():
+    """Repeated page ids in one optimistic batch are deduped (first
+    occurrence wins) by both engines."""
+    ref_s, bat_s = make_store(), make_store()
+    MigrationEngine(ref_s).migrate_locked([3], FAST)
+    BatchedMigrationEngine(bat_s).migrate_locked([3], FAST)
+    st_r = MigrationEngine(ref_s).migrate_optimistic([3, 3], SLOW)
+    st_b = BatchedMigrationEngine(bat_s).migrate_optimistic([3, 3], SLOW)
+    assert st_r.migrated == st_b.migrated == 1
+    assert_state_equal(ref_s, bat_s)
+    assert_alloc_invariants(bat_s)
+
+
+def test_capacity_bound_respected_batched():
+    s = make_store(n=32, fast=4)
+    eng = BatchedMigrationEngine(s)
+    stats = eng.migrate_locked(range(32), FAST)
+    assert stats.migrated <= 4
+    assert (np.asarray(s.tier) == FAST).sum() <= 4
+    assert_alloc_invariants(s)
+
+
+# =============================================================================
+# serving: block tables always point at live fast slots
+# =============================================================================
+
+def test_block_tables_point_at_live_fast_slots():
+    kv = PagedKVCache(PagedKVConfig(n_layers=2, n_kv_heads=2, head_dim=8,
+                                    page_size=4, fast_slots=8, slow_slots=32))
+    eng = make_engine(kv.store, "batched")
+    pids = [kv.new_page(FAST) for _ in range(12)]
+    assert all(p is not None for p in pids)
+    resident = [p for p in pids if kv.is_resident(p)]
+    overflow = [p for p in pids if not kv.is_resident(p)]
+    assert len(resident) == 8 and len(overflow) == 4   # HBM full -> host
+
+    slots = kv.fast_slots_of(resident)
+    assert len(set(slots.tolist())) == len(resident)   # no double-booking
+    assert ((slots >= 0) & (slots < 8)).all()
+    assert (kv.store.tier[resident] == FAST).all()
+
+    # demote half, promote the overflow: the vectorized block-table fill
+    # must only ever be offered live fast slots
+    eng.migrate_optimistic(resident[:4], SLOW)
+    eng.migrate_locked(overflow, FAST)
+    live = [p for p in pids if kv.is_resident(p)]
+    slots = kv.fast_slots_of(live)
+    assert len(set(slots.tolist())) == len(live)
+    assert ((slots >= 0) & (slots < 8)).all()
+    with pytest.raises(AssertionError):
+        kv.fast_slots_of(resident[:4])                 # demoted: must refuse
+    assert_alloc_invariants(kv.store)
+
+
+def test_resident_mask_matches_scalar_path():
+    kv = PagedKVCache(PagedKVConfig(n_layers=1, n_kv_heads=1, head_dim=4,
+                                    page_size=2, fast_slots=4, slow_slots=16))
+    pids = [kv.new_page(FAST) for _ in range(8)]
+    mask = kv.resident_mask(pids)
+    np.testing.assert_array_equal(mask,
+                                  [kv.is_resident(p) for p in pids])

@@ -3,8 +3,7 @@ placement, migration, tiering, cost model)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from helpers.optional_hypothesis import given, settings, st
 
 from repro.core import costmodel, patterns, placement, predictor, sysmon
 from repro.core.allocator import SubBuddyAllocator, SubBuddyConfig

@@ -3,8 +3,7 @@ dirty-discard, conservation of pages, memos end-to-end loop."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from helpers.optional_hypothesis import given, settings, st
 
 from repro.core import sysmon
 from repro.core.memos import MemosConfig, MemosManager
