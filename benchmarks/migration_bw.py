@@ -80,6 +80,9 @@ def main():
     ap.add_argument("--ref-repeats", type=int, default=1,
                     help="reference-engine repeats (the slow baseline)")
     ap.add_argument("--chunk-pages", type=int, default=64)
+    ap.add_argument("--no-check", action="store_true",
+                    help="always exit 0 (CI smoke on tiny pools, where the "
+                         "5x bar is not meaningful)")
     ap.add_argument("--out", type=Path,
                     default=ROOT / "benchmarks" / "results" / "migration_bw.json")
     args = ap.parse_args()
@@ -106,13 +109,17 @@ def main():
     results["config"] = {"fast_slots": args.fast_slots,
                          "page_shape": list(shape),
                          "page_kib": page_kib}
+    # record the execution environment so trajectory comparisons across
+    # machines / revisions aren't apples-to-oranges
+    from repro.core.migration import bench_env
+    results["env"] = bench_env()
     print(f"  speedup  : {speedup:.1f}x "
           f"({'meets' if speedup >= 5 else 'BELOW'} the 5x bar)")
 
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(results, indent=2))
     print(f"wrote {args.out}")
-    return 0 if speedup >= 5 else 1
+    return 0 if speedup >= 5 or args.no_check else 1
 
 
 if __name__ == "__main__":

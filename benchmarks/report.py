@@ -1,16 +1,24 @@
-"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
-dry-run artifacts and the §Perf comparison rows from tagged runs.
+"""Benchmark result aggregation.
 
-  PYTHONPATH=src python -m benchmarks.report
+Primary mode: collect every ``benchmarks/results/*.json`` (migration_bw,
+wear_energy, ...) into one markdown summary table so trajectory runs
+render together:
+
+  PYTHONPATH=src python -m benchmarks.report [--out benchmarks/results/summary.md]
+
+Legacy mode (when EXPERIMENTS.md exists): regenerate its §Dry-run /
+§Roofline tables from the dry-run artifacts.
 """
 from __future__ import annotations
 
+import argparse
 import json
 from pathlib import Path
 
 from .roofline import DRYRUN, cell_terms
 
 ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "benchmarks" / "results"
 
 
 def dryrun_table() -> str:
@@ -100,7 +108,63 @@ def perf_rows(cells_tags: list[tuple[str, str, str, str]]) -> str:
     return "\n".join(out)
 
 
+def _scalar_rows(obj, prefix: str = "", depth: int = 2) -> list[tuple[str, str]]:
+    """Flatten the scalar leaves of a result dict to (metric, value) rows;
+    nested dicts recurse ``depth`` levels, lists/deep structure are elided."""
+    rows = []
+    for k, v in obj.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, bool):
+            rows.append((key, "yes" if v else "no"))
+        elif isinstance(v, float):
+            rows.append((key, f"{v:.6g}"))
+        elif isinstance(v, int):
+            rows.append((key, str(v)))
+        elif isinstance(v, str):
+            rows.append((key, v))
+        elif isinstance(v, dict) and depth > 0:
+            rows.extend(_scalar_rows(v, f"{key}.", depth - 1))
+    return rows
+
+
+def results_table(results_dir: Path = RESULTS) -> str:
+    """One markdown table over every result JSON in ``results_dir``."""
+    lines = ["# Benchmark results", ""]
+    files = sorted(p for p in results_dir.glob("*.json"))
+    if not files:
+        lines.append("_no result JSONs found_")
+    for f in files:
+        try:
+            r = json.loads(f.read_text())
+        except (json.JSONDecodeError, OSError) as e:
+            lines += [f"## {f.name}", "", f"_unreadable: {e}_", ""]
+            continue
+        lines += [f"## {f.name}", "", "| metric | value |", "|---|---|"]
+        rows = (_scalar_rows(r) if isinstance(r, dict)
+                else [("(non-dict payload)", type(r).__name__)])
+        lines += [f"| {k} | {v} |" for k, v in rows]
+        lines.append("")
+    return "\n".join(lines)
+
+
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", type=Path, default=RESULTS / "summary.md",
+                    help="markdown summary destination")
+    ap.add_argument("--results-dir", type=Path, default=RESULTS)
+    args = ap.parse_args()
+
+    table = results_table(args.results_dir)
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(table)
+    print(f"results summary ({len(table.splitlines())} lines) "
+          f"written to {args.out}")
+
+    if (ROOT / "EXPERIMENTS.md").exists():
+        _legacy_experiments_tables()
+
+
+def _legacy_experiments_tables():
     import re as _re
     exp = (ROOT / "EXPERIMENTS.md").read_text()
     table = ("<!-- ROOFLINE-TABLE-START -->\n" + roofline_table()

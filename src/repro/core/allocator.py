@@ -189,6 +189,28 @@ class SubBuddyAllocator:
             order += 1
         self._push(start, order)
 
+    def check_consistency(self) -> None:
+        """Bookkeeping invariants (test support): the free-block set and the
+        allocation set partition the pool exactly, ``n_free`` matches the
+        free-block set, and live free-list entries are indexed under their
+        block's color.  Raises AssertionError on violation."""
+        assert self.n_free == sum(1 << o for _, o in self._free_blocks), \
+            "n_free disagrees with the free-block set"
+        covered: set[int] = set()
+        for start, order in self._free_blocks | self._allocated:
+            span = set(range(start, start + (1 << order)))
+            assert not (span & covered), \
+                f"block ({start}, {order}) overlaps another live block"
+            covered |= span
+        assert covered == set(range(self.cfg.n_pages)), \
+            "free + allocated blocks do not cover the pool exactly"
+        for order, bucket in enumerate(self.free_lists):
+            for color, dq in bucket.items():
+                for start in dq:
+                    if (start, order) in self._free_blocks:   # skip stale
+                        assert self.cfg.color_of(start) == color, \
+                            f"block {start} filed under wrong color {color}"
+
     def alloc_pages(self, n: int, color: int | None = None,
                     color_mask: int | None = None) -> list[int] | None:
         """Allocate n order-0 pages (not necessarily contiguous)."""

@@ -53,6 +53,36 @@ WEAR_BLOCK_BYTES = 64
 LEVELING_EFFICIENCY = 0.95  # Start-Gap
 
 
+def startgap_interval(efficiency: float = LEVELING_EFFICIENCY) -> int:
+    """Demand writes between Start-Gap moves for a target leveling
+    efficiency: each gap move spends overhead on 1/(interval+1) of the
+    write stream, so efficiency = interval / (interval + 1)."""
+    assert 0.0 < efficiency < 1.0
+    return max(1, round(efficiency / (1.0 - efficiency)))
+
+
+def page_access_energy_nj(m: MediumParams, page_bytes: int,
+                          is_write: bool) -> float:
+    """Energy for one page-granular access: Table-1 energies are per
+    64 B array access, and a page access touches each of its wear blocks
+    once."""
+    per_access = m.write_energy_nj if is_write else m.read_energy_nj
+    return (page_bytes / WEAR_BLOCK_BYTES) * per_access
+
+
+def lifetime_years_from_wear(wear_writes: float, elapsed_s: float,
+                             m: MediumParams = NVM,
+                             efficiency: float = 1.0) -> float:
+    """Lifetime projection from *measured* wear: ``wear_writes`` writes
+    landed on a wear block over ``elapsed_s`` seconds; extrapolate to the
+    time that block hits endurance.  The online counterpart of
+    ``nvm_lifetime_years`` (which models the write stream analytically)."""
+    if m.endurance is None or wear_writes <= 0 or elapsed_s <= 0:
+        return float("inf")
+    rate = wear_writes / elapsed_s
+    return efficiency * m.endurance / rate / SECONDS_PER_YEAR
+
+
 @dataclass
 class AccessCounts:
     reads: float = 0.0

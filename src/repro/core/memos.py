@@ -10,6 +10,11 @@ Ties SysMon -> predictor -> placement -> migration together:
        destination slots via Algorithm 2 (coldest bank x coldest slab)
     5. bandwidth balancing: spill RD (then coolest WD) pages to the slow
        channel while the fast channel is saturated
+    6. NVM telemetry (Sec. 7.1): close the energy/lifetime accounting
+       window; when the projected lifetime from the live wear counters
+       drops below ``lifetime_horizon_years``, the *next* pass plans with
+       a wear penalty — WD pages are pinned/promoted to the fast tier and
+       excluded from bandwidth spills until the projection recovers.
 
 Overhead controls from Sec. 7.4 are exposed: sampling subset fraction and
 an adaptively growing interval once patterns stabilize.
@@ -36,6 +41,11 @@ class MemosConfig:
     interval_max: int = 256
     stability_threshold: float = 0.02  # fraction of pages changing target
     engine: str = "batched"       # "batched" (device bulk) | "reference"
+    # NVM wear feedback (Sec. 7.1): act when the projected lifetime from
+    # live wear counters drops below the horizon; None disables feedback.
+    lifetime_horizon_years: float | None = None
+    wear_penalty: float = 4.0     # HL-ranking boost for WD pages under pressure
+    pass_window_s: float = 1.0    # notional wall-clock span of one pass
 
 
 @dataclass
@@ -47,6 +57,8 @@ class MemosReport:
     slow_pages: int
     bank_imbalance: float
     spilled: int = 0
+    nvm: object | None = None     # NvmReport for this pass (wear tracked)
+    wear_pressure: bool = False   # wear penalty applied to this pass's plan
 
 
 class MemosManager:
@@ -55,9 +67,15 @@ class MemosManager:
         self.cfg = cfg or MemosConfig()
         self.engine = make_engine(store, self.cfg.engine)
         self.balancer = BandwidthBalancer(self.cfg.fast_bw_bound)
+        self.meter = None
+        if store.wear is not None:
+            # lazy import: repro.nvm depends on core.costmodel
+            from repro.nvm.energy import EnergyMeter
+            self.meter = EnergyMeter(store, window_s=self.cfg.pass_window_s)
         self.interval = self.cfg.interval
         self._last_target: np.ndarray | None = None
         self._steps_since = 0
+        self._last_pass_step = 0
         self.reports: list[MemosReport] = []
         self.step_count = 0
 
@@ -77,9 +95,17 @@ class MemosManager:
         # 1-2) close the pass; classification + prediction happen on device
         sm_state, summary = sysmon_mod.end_pass(sm_state)
 
-        # 3) plan: mark will-be-migrated, rank HL
+        # 3) plan: mark will-be-migrated, rank HL; under NVM wear pressure
+        # (projected lifetime below the horizon) WD pages get the penalty
+        # term: pinned to fast, ranked first, excluded from spills
+        wear_pressure = False
+        if self.meter is not None and self.cfg.lifetime_horizon_years:
+            wear_pressure = (self.meter.project_lifetime()
+                             < self.cfg.lifetime_horizon_years)
+        penalty = self.cfg.wear_penalty if wear_pressure else 0.0
         current = self.store.tier.copy()
-        decision = plan(summary, current, max_migrations=self.cfg.max_migrations)
+        decision = plan(summary, current, max_migrations=self.cfg.max_migrations,
+                        wear_penalty=penalty)
 
         bank_freq = np.asarray(summary.bank_freq)
         slab_freq = np.asarray(summary.slab_freq)
@@ -93,7 +119,8 @@ class MemosManager:
         if self.balancer.update(fast_bw_util):
             cands = self.balancer.spill_candidates(
                 np.asarray(summary.wd_code), np.asarray(summary.hotness),
-                self.store.tier, n=self.cfg.max_migrations or 64)
+                self.store.tier, n=self.cfg.max_migrations or 64,
+                exclude_wd=wear_pressure)
             st = self.engine.migrate_optimistic(cands, SLOW, bank_freq,
                                                 slab_freq, reuse)
             spilled = st.migrated
@@ -109,6 +136,17 @@ class MemosManager:
                 self.interval = self.cfg.interval
         self._last_target = tgt
 
+        # 6) close the NVM telemetry window (energy + lifetime projection);
+        # scale the window by the steps this pass actually covered so
+        # adaptive interval growth doesn't inflate the apparent wear rate
+        nvm = None
+        if self.meter is not None:
+            steps = self.step_count - self._last_pass_step
+            window = (self.cfg.pass_window_s * steps / self.cfg.interval
+                      if steps > 0 else self.cfg.pass_window_s)
+            nvm = self.meter.end_pass(window_s=window)
+        self._last_pass_step = self.step_count
+
         report = MemosReport(
             step=self.step_count,
             migrations=stats,
@@ -117,6 +155,8 @@ class MemosManager:
             slow_pages=int((self.store.tier == SLOW).sum()),
             bank_imbalance=float(np.std(bank_freq)),
             spilled=spilled,
+            nvm=nvm,
+            wear_pressure=wear_pressure,
         )
         self.reports.append(report)
         return sm_state, report

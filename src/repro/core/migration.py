@@ -52,6 +52,21 @@ from . import placement
 from .placement import FAST, SLOW
 from .tiers import TierStore, NO_SLOT
 
+# Bump when engine semantics / data layout change; recorded in benchmark
+# result JSONs so trajectory comparisons across machines and revisions
+# aren't apples-to-oranges.
+ENGINE_VERSION = "2.0"  # 1.x: per-page reference loop; 2.x: batched bulk
+                        # mover + NVM wear accounting on the slow path
+
+
+def bench_env() -> dict:
+    """Execution-environment record shared by every benchmark result JSON."""
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "engine_version": ENGINE_VERSION,
+    }
+
 
 @dataclass
 class MigrationStats:

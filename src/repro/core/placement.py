@@ -37,32 +37,49 @@ class PlacementDecision(NamedTuple):
 
 
 def target_tier(wd_code: np.ndarray, hot: np.ndarray, future: np.ndarray,
-                reuse_class: np.ndarray) -> np.ndarray:
-    """Apply the three channel-allocation principles per page."""
+                reuse_class: np.ndarray,
+                wear_penalty: float = 0.0) -> np.ndarray:
+    """Apply the three channel-allocation principles per page.
+
+    ``wear_penalty > 0`` signals wear pressure (projected NVM lifetime
+    below the horizon, Sec. 7.1): every currently-WD page is steered to
+    the fast tier regardless of hotness, so the write stream stops
+    consuming NVM endurance — the paper's 40X lifetime mechanism.
+    """
     fast = hot | (future == predictor.WD_FREQ_H) | (future == predictor.WD_FREQ_L)
     # RD-intensive or cold pages may stay slow even if moderately touched;
     # thrashing RD streams explicitly stay slow (they are served through the
     # reserved slab and NVM reads are cheap) unless they are write-heavy.
     rd_stream = (wd_code != patterns.WD) & (reuse_class == patterns.THRASHING)
     fast = fast & ~rd_stream
+    if wear_penalty > 0:
+        fast = fast | (wd_code == patterns.WD)
     return np.where(fast, FAST, SLOW).astype(np.int8)
 
 
-def plan(summary, current_tier: np.ndarray, *, max_migrations: int | None = None
-         ) -> PlacementDecision:
-    """Fig. 10 steps 2-3: decide targets, mark migrations, rank the HL."""
+def plan(summary, current_tier: np.ndarray, *, max_migrations: int | None = None,
+         wear_penalty: float = 0.0) -> PlacementDecision:
+    """Fig. 10 steps 2-3: decide targets, mark migrations, rank the HL.
+
+    Under wear pressure (``wear_penalty > 0``) WD pages additionally get a
+    ranking boost so their promotions win the migration budget, and the
+    target-tier rule pins them to the fast tier (see ``target_tier``).
+    """
     wd_code = np.asarray(summary.wd_code)
     hot = np.asarray(summary.hot)
     future = np.asarray(summary.future)
     reuse = np.asarray(summary.reuse_class)
     hotness = np.asarray(summary.hotness)
 
-    tgt = target_tier(wd_code, hot, future, reuse)
+    tgt = target_tier(wd_code, hot, future, reuse, wear_penalty)
     migrate = tgt != current_tier
+    score = hotness.astype(np.float64)
+    if wear_penalty > 0:
+        score = score + wear_penalty * (wd_code == patterns.WD)
 
     ids = np.nonzero(migrate)[0]
-    # priority: WD_FREQ_H (2) > WD_FREQ_L (1) > UN_WD (0), then hotness desc.
-    order = np.lexsort((-hotness[ids], -future[ids]))
+    # priority: WD_FREQ_H (2) > WD_FREQ_L (1) > UN_WD (0), then score desc.
+    order = np.lexsort((-score[ids], -future[ids]))
     hl = ids[order].astype(np.int32)
     if max_migrations is not None:
         hl = hl[:max_migrations]
@@ -130,13 +147,18 @@ class BandwidthBalancer:
         return self.spilling
 
     def spill_candidates(self, wd_code: np.ndarray, hotness: np.ndarray,
-                         current_tier: np.ndarray, n: int) -> np.ndarray:
-        """Pick n pages to spill: RD pages first, then coolest WD ones."""
+                         current_tier: np.ndarray, n: int,
+                         exclude_wd: bool = False) -> np.ndarray:
+        """Pick n pages to spill: RD pages first, then coolest WD ones.
+        ``exclude_wd`` keeps write-dominated pages off the slow channel
+        entirely — set while the memos pass is under NVM wear pressure."""
         in_fast = current_tier == FAST
         rd = in_fast & (wd_code == patterns.RD)
-        wd = in_fast & (wd_code == patterns.WD)
         rd_ids = np.nonzero(rd)[0]
         rd_ids = rd_ids[np.argsort(hotness[rd_ids])]
+        if exclude_wd:
+            return rd_ids[:n].astype(np.int32)
+        wd = in_fast & (wd_code == patterns.WD)
         wd_ids = np.nonzero(wd)[0]
         wd_ids = wd_ids[np.argsort(hotness[wd_ids])]
         return np.concatenate([rd_ids, wd_ids])[:n].astype(np.int32)

@@ -14,6 +14,14 @@ dirty-bit check (Sec. 6.3).
 
 Slot allocation inside each pool goes through the color-aware SubBuddy
 allocator so bank/slab-targeted placement (Algorithm 2) is honored.
+
+NVM wear telemetry (Sec. 7.1): slow-pool slot ids handed out by the
+allocator are *logical*; the ``repro.nvm`` wear tracker maps them to
+physical rows through a remap table, charges a per-physical-slot write
+counter on every slow-tier write (single-page and batched paths alike —
+this is where migration demotion commits get accounted), and lets the
+Start-Gap leveler rotate the physical rows without the allocator, page
+table, or migration engines noticing.
 """
 from __future__ import annotations
 
@@ -41,6 +49,9 @@ class TierConfig:
     n_banks: int = 32
     n_slabs: int = 16
     quantize_slow: bool = False  # int8-quantize cold pages (soft-NVM analogue)
+    track_wear: bool = True      # per-slot NVM wear counters (Sec. 7.1)
+    wear_leveling: bool = True   # Start-Gap rotation over the slow pool
+    gap_write_interval: int | None = None  # None -> costmodel 95% target
 
 
 class TierStore:
@@ -79,6 +90,17 @@ class TierStore:
         self.traffic = {(FAST, SLOW): 0, (SLOW, FAST): 0}
         self.writes_to = {FAST: 0, SLOW: 0}
         self.reads_from = {FAST: 0, SLOW: 0}
+        # NVM wear telemetry + Start-Gap leveling over the slow pool
+        # (lazy import: repro.nvm pulls in the cost model, which sits next
+        # to this module in the core package)
+        self.wear = self.leveler = None
+        if cfg.track_wear:
+            from repro.nvm.leveling import StartGapLeveler
+            from repro.nvm.wear import NvmWear
+            self.wear = NvmWear(cfg.slow_slots)
+            if cfg.wear_leveling:
+                self.leveler = StartGapLeveler(self.wear,
+                                               cfg.gap_write_interval)
 
     # -- page lifecycle -----------------------------------------------------
     @property
@@ -122,19 +144,35 @@ class TierStore:
             return np.asarray(self.fast_pool[s], np.float32)
         return self._slow_read(s)
 
+    def _phys_slow(self, slots: np.ndarray) -> np.ndarray:
+        """Logical slow-pool slots -> physical rows (wear-leveling remap)."""
+        return slots if self.wear is None else self.wear.phys(slots)
+
+    def _account_slow_writes(self, phys: np.ndarray) -> None:
+        """Charge wear counters and drive the Start-Gap leveler after data
+        has landed on the given physical rows."""
+        if self.wear is None:
+            return
+        self.wear.record_phys(phys)
+        if self.leveler is not None:
+            self.leveler.note_writes(self, np.asarray(phys).size)
+
     def _slow_write(self, slot: int, value: np.ndarray) -> None:
+        p = slot if self.wear is None else self.wear.phys_one(slot)
         if self.cfg.quantize_slow:
             scale = max(float(np.max(np.abs(value))), 1e-8) / 127.0
-            self.slow_pool[slot] = np.clip(
+            self.slow_pool[p] = np.clip(
                 np.round(value / scale), -127, 127).astype(np.int8)
-            self.slow_scale[slot] = scale
+            self.slow_scale[p] = scale
         else:
-            self.slow_pool[slot] = value
+            self.slow_pool[p] = value
+        self._account_slow_writes(np.asarray([p]))
 
     def _slow_read(self, slot: int) -> np.ndarray:
+        p = slot if self.wear is None else self.wear.phys_one(slot)
         if self.cfg.quantize_slow:
-            return self.slow_pool[slot].astype(np.float32) * self.slow_scale[slot]
-        return np.asarray(self.slow_pool[slot], np.float32)
+            return self.slow_pool[p].astype(np.float32) * self.slow_scale[p]
+        return np.asarray(self.slow_pool[p], np.float32)
 
     # -- batched data access (the migration engine's bulk primitives) ----------
     def gather_fast(self, slots) -> jnp.ndarray:
@@ -152,7 +190,7 @@ class TierStore:
     def slow_read_batch(self, slots: np.ndarray) -> np.ndarray:
         """[k, *page_shape] float32 view of slow-pool slots (vectorized
         dequantize for the soft-NVM tier)."""
-        slots = np.asarray(slots, np.int64)
+        slots = self._phys_slow(np.asarray(slots, np.int64))
         if self.cfg.quantize_slow:
             pages = self.slow_pool[slots].astype(np.float32)
             scale = self.slow_scale[slots].reshape(
@@ -163,7 +201,7 @@ class TierStore:
     def slow_write_batch(self, slots: np.ndarray, values: np.ndarray) -> None:
         """slow_pool[slots[i]] = values[i], quantizing per page when the
         slow tier is int8 (bit-identical to the per-page _slow_write)."""
-        slots = np.asarray(slots, np.int64)
+        slots = self._phys_slow(np.asarray(slots, np.int64))
         values = np.asarray(values, np.float32)
         if self.cfg.quantize_slow:
             axes = tuple(range(1, values.ndim))
@@ -174,6 +212,7 @@ class TierStore:
             self.slow_scale[slots] = scale.astype(np.float32)
         else:
             self.slow_pool[slots] = values
+        self._account_slow_writes(slots)
 
     def commit_moves(self, pages: np.ndarray, dst_tier: int,
                      new_slots: np.ndarray) -> None:

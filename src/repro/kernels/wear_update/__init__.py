@@ -1,0 +1,4 @@
+from .ops import wear_update
+from .ref import wear_update_ref
+
+__all__ = ["wear_update", "wear_update_ref"]

@@ -1,0 +1,60 @@
+"""Dispatching wrapper for the wear-counter scatter-add.
+
+Same three execution paths as ``kernels/page_gather``:
+
+  * TPU            — the blocked Pallas histogram kernel, compiled;
+  * explicit       — ``interpret=True`` runs the Pallas kernel in
+                     interpreter mode (kernel-parity tests);
+  * other backends — a jitted XLA ``at[].add`` scatter with identical
+                     integer semantics (bit-exact: integer adds are
+                     associative), since interpreter-mode Pallas loops
+                     the grid in Python and is too slow for the
+                     TierStore write path on CPU/GPU hosts.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .wear_update import wear_update_pallas
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def _wear_pallas(wear, ids, amount, *, block: int, interpret: bool):
+    return wear_update_pallas(wear, ids, amount, block=block,
+                              interpret=interpret)
+
+
+@jax.jit
+def _wear_xla(wear, ids, amount):
+    return wear.at[ids].add(amount)
+
+
+def wear_update(wear, slot_ids, amount=None, *, valid=None, block: int = 512,
+                interpret: bool | None = None):
+    """wear[slot_ids[i]] += amount[i]; returns the updated int32 counters.
+
+    slot_ids are clipped in-bounds; ``valid`` (bool [k]) zeroes masked
+    events so padded id lists stay jit-friendly.  ``amount`` defaults to
+    one write per event.
+    """
+    wear = jnp.asarray(wear, jnp.int32)
+    ids = jnp.clip(jnp.asarray(slot_ids, jnp.int32).reshape(-1), 0,
+                   wear.shape[0] - 1)
+    if amount is None:
+        amount = jnp.ones(ids.shape, jnp.int32)
+    amount = jnp.broadcast_to(jnp.asarray(amount, jnp.int32).reshape(-1),
+                              ids.shape)
+    if valid is not None:
+        amount = jnp.where(jnp.asarray(valid).reshape(-1), amount, 0)
+    if ids.shape[0] == 0:
+        return wear
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return _wear_xla(wear, ids, amount)
+        interpret = False
+    # shrink the block for small pools, but keep it lane-aligned (128)
+    block = min(block, -(-wear.shape[0] // 128) * 128)
+    return _wear_pallas(wear, ids, amount, block=block, interpret=interpret)

@@ -1,0 +1,13 @@
+"""Numpy oracle for the wear-counter scatter-add."""
+import numpy as np
+
+
+def wear_update_ref(wear, slot_ids, amount=None):
+    """wear[slot_ids[i]] += amount[i] (duplicates accumulate); returns a new
+    int32 array.  ``amount`` defaults to all-ones."""
+    wear = np.asarray(wear, np.int32).copy()
+    slot_ids = np.asarray(slot_ids, np.int64)
+    if amount is None:
+        amount = np.ones_like(slot_ids, np.int32)
+    np.add.at(wear, slot_ids, np.asarray(amount, np.int32))
+    return wear

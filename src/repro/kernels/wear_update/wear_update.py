@@ -1,0 +1,71 @@
+"""Wear-counter scatter-add Pallas TPU kernel (NVM telemetry, Sec. 7.1).
+
+Every write that lands on the slow (NVM-analogue) tier must bump that
+physical slot's wear counter — the online signal behind the paper's
+lifetime projection and wear-leveling feedback.  The update is a
+scatter-add over a histogram array:
+
+    wear[slot_ids[i]] += amount[i]        for every write event i
+
+Same layout discipline as ``kernels/hotness_update``: a 1-D grid over
+blocked spans of the counter array, everything in int32 VPU lanes.  A
+scatter is race-prone across grid steps, so each step instead *owns* one
+counter block and reduces the full event list against it — a [block, k]
+compare/select/sum that reads the event arrays once per block and writes
+each counter exactly once (deterministic, bit-exact vs. the numpy
+oracle).  Event lists are short (one entry per page write in a pass), so
+k stays in the hundreds while the block dimension rides the lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wear_kernel(ids_ref, amt_ref, wear_ref, out_ref, *, block: int):
+    i = pl.program_id(0)
+    base = i * block
+    # counters owned by this grid step, as a [block, 1] column
+    slots = base + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)
+    ids = ids_ref[...].astype(jnp.int32).reshape(1, -1)    # [1, k]
+    amt = amt_ref[...].astype(jnp.int32).reshape(1, -1)
+    hits = jnp.where(slots == ids, amt, 0)                 # [block, k]
+    out_ref[...] = wear_ref[...] + jnp.sum(hits, axis=1)
+
+
+def wear_update_pallas(wear: jnp.ndarray, slot_ids: jnp.ndarray,
+                       amount: jnp.ndarray, *, block: int = 512,
+                       interpret: bool = False) -> jnp.ndarray:
+    """wear: int32 [n]; slot_ids/amount: int32 [k].  Returns wear with
+    ``amount[i]`` added at ``slot_ids[i]`` (duplicates accumulate).
+    Out-of-range ids must be masked by the caller via ``amount == 0``."""
+    n = wear.shape[0]
+    pad = (-n) % block
+    if pad:
+        wear = jnp.pad(wear, (0, pad))
+    k = slot_ids.shape[0]
+    kpad = (-k) % 128
+    if kpad:
+        # padded events point at a real slot but carry zero amount
+        slot_ids = jnp.pad(slot_ids, (0, kpad))
+        amount = jnp.pad(amount, (0, kpad))
+    nblocks = wear.shape[0] // block
+    kernel = functools.partial(_wear_kernel, block=block)
+    kfull = slot_ids.shape[0]
+    out = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((kfull,), lambda i: (0,)),   # every step sees all ids
+            pl.BlockSpec((kfull,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((wear.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(slot_ids.astype(jnp.int32), amount.astype(jnp.int32),
+      wear.astype(jnp.int32))
+    return out[:n]

@@ -1,0 +1,26 @@
+"""NVM wear & energy telemetry subsystem (paper Sec. 7.1, Table 1).
+
+Closes the loop from slow-tier writes to placement policy:
+
+  wear      — WearState pytree (per-physical-slot counters + remap) and
+              the NvmWear host tracker, fed by the kernels/wear_update
+              scatter-add on every slow-tier write
+  leveling  — Start-Gap-style gap rotation over the slow pool (remap
+              rewrite; the rest of the system keeps logical slot ids)
+  energy    — per-pass energy/lifetime accounting (EnergyMeter ->
+              NvmReport) on the Table-1 MediumParams constants
+
+``MemosManager`` consumes the wear-rate signal: when the projected
+lifetime drops below the configured horizon, WD pages pick up a
+wear-penalty term in placement ranking and are steered to the fast tier
+— the paper's 40X lifetime mechanism.
+"""
+from .wear import NvmWear, WearState, init_wear, record_writes
+from .leveling import LevelingStats, StartGapLeveler
+from .energy import EnergyMeter, NvmReport
+
+__all__ = [
+    "NvmWear", "WearState", "init_wear", "record_writes",
+    "LevelingStats", "StartGapLeveler",
+    "EnergyMeter", "NvmReport",
+]

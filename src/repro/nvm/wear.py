@@ -1,0 +1,146 @@
+"""Per-slot NVM wear telemetry (paper Sec. 7.1, Table 1 endurance).
+
+The slow tier is the NVM-channel analogue: every write that lands there
+consumes cell endurance.  This module keeps the online record of that
+consumption:
+
+  * ``WearState`` — a device pytree of per-*physical*-slot write counters
+    plus the logical->physical remap table that the Start-Gap leveler
+    (``nvm/leveling.py``) rotates underneath the page store;
+  * ``record_writes`` — the counter update, a ``kernels/wear_update``
+    Pallas scatter-add (XLA fallback off-TPU);
+  * ``NvmWear`` — the host-side tracker owned by ``TierStore``: it maps
+    logical slow-pool slots through the remap, charges the counters on
+    every slow-tier write (single-page and batched paths), and exposes
+    the wear distribution to the energy model and the placement policy.
+
+Wear granularity: the paper models 64 B wear blocks; a page write touches
+each of its blocks exactly once, so per-slot write counts equal per-block
+write counts within that slot — one counter per slot suffices for max/mean
+wear and the lifetime projection.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.wear_update import wear_update
+
+
+class WearState(NamedTuple):
+    """Device-resident wear telemetry (a jax pytree).
+
+    wear  : int32 [n_slots] — writes absorbed by each *physical* slot
+    remap : int32 [n_slots] — logical slot -> physical slot (a permutation;
+            identity until the leveler starts rotating the pool)
+    """
+
+    wear: jnp.ndarray
+    remap: jnp.ndarray
+
+    @property
+    def n_slots(self) -> int:
+        return self.wear.shape[0]
+
+
+def init_wear(n_slots: int) -> WearState:
+    return WearState(
+        wear=jnp.zeros((n_slots,), jnp.int32),
+        remap=jnp.arange(n_slots, dtype=jnp.int32),
+    )
+
+
+def record_writes(state: WearState, phys_slots, amount=None,
+                  valid=None) -> WearState:
+    """Charge write events onto physical slots (scatter-add kernel)."""
+    return state._replace(
+        wear=wear_update(state.wear, jnp.asarray(phys_slots, jnp.int32),
+                         amount, valid=valid))
+
+
+class NvmWear:
+    """Host-side wear tracker for one slow pool.
+
+    Keeps the ``WearState`` pytree plus numpy mirrors of the remap (and
+    its inverse) so the TierStore's host read/write paths can translate
+    logical slots without a device round-trip.  Write events accumulate
+    in a host-side pending buffer (the TierStore write path must not pay
+    a device dispatch per page) and are flushed into the device counters
+    through the ``wear_update`` scatter-add whenever the telemetry is
+    read — one kernel call per pass instead of one per write.
+    """
+
+    def __init__(self, n_slots: int):
+        self.state = init_wear(n_slots)
+        self._remap = np.arange(n_slots, dtype=np.int64)   # logical -> phys
+        self._inv = np.arange(n_slots, dtype=np.int64)     # phys -> logical
+        self._pending = np.zeros(n_slots, np.int64)        # unflushed events
+        self.writes_total = 0        # app + migration writes (not leveling)
+        self.leveling_writes = 0     # extra writes spent rotating the pool
+
+    @property
+    def n_slots(self) -> int:
+        return self.state.n_slots
+
+    # -- logical -> physical translation --------------------------------------
+    def phys(self, slots) -> np.ndarray:
+        return self._remap[np.asarray(slots, np.int64)]
+
+    def phys_one(self, slot: int) -> int:
+        return int(self._remap[slot])
+
+    # -- counter updates -------------------------------------------------------
+    def record_phys(self, phys_slots, *, leveling: bool = False) -> None:
+        p = np.asarray(phys_slots, np.int64)
+        np.add.at(self._pending, p, 1)
+        if leveling:
+            self.leveling_writes += int(p.size)
+        else:
+            self.writes_total += int(p.size)
+
+    def flush(self) -> WearState:
+        """Push pending host-side events into the device counters (one
+        ``wear_update`` scatter-add) and return the up-to-date state."""
+        ids = np.nonzero(self._pending)[0]
+        if ids.size:
+            self.state = record_writes(self.state, ids,
+                                       amount=self._pending[ids])
+            self._pending[ids] = 0
+        return self.state
+
+    # -- leveler hook -----------------------------------------------------------
+    def swap_phys(self, a: int, b: int) -> None:
+        """Swap which logical slots map to physical ``a`` and ``b`` (the
+        leveler swaps the pool rows; this keeps the remap in sync)."""
+        la, lb = int(self._inv[a]), int(self._inv[b])
+        self._remap[la], self._remap[lb] = b, a
+        self._inv[a], self._inv[b] = lb, la
+        self.state = self.state._replace(
+            remap=jnp.asarray(self._remap, jnp.int32))
+
+    # -- telemetry readout -------------------------------------------------------
+    def wear_counts(self) -> np.ndarray:
+        """int64 [n_slots] per-physical-slot write counts (host copy)."""
+        return np.asarray(self.flush().wear, np.int64)
+
+    def max_wear(self) -> int:
+        return int(self.wear_counts().max(initial=0))
+
+    def mean_wear(self) -> float:
+        w = self.wear_counts()
+        return float(w.mean()) if w.size else 0.0
+
+    def check(self) -> None:
+        """Invariants: remap is a permutation and matches its inverse and
+        the device copy."""
+        self.flush()
+        n = self.n_slots
+        assert sorted(self._remap.tolist()) == list(range(n)), \
+            "remap is not a permutation"
+        assert (self._inv[self._remap] == np.arange(n)).all(), \
+            "remap inverse out of sync"
+        np.testing.assert_array_equal(
+            np.asarray(self.state.remap, np.int64), self._remap,
+            err_msg="device remap out of sync with host mirror")

@@ -47,6 +47,8 @@ class ServeConfig:
     memos_interval: int = 8
     max_pages_per_seq: int = 64
     memos_enabled: bool = True
+    # NVM wear feedback horizon (years); None = telemetry only, no feedback
+    lifetime_horizon_years: float | None = None
 
 
 class PagedServingEngine:
@@ -64,7 +66,8 @@ class PagedServingEngine:
             scfg.slow_slots, n_banks=store.cfg.n_banks,
             n_slabs=store.cfg.n_slabs)
         self.memos = MemosManager(store, MemosConfig(
-            interval=scfg.memos_interval, adaptive_interval=False))
+            interval=scfg.memos_interval, adaptive_interval=False,
+            lifetime_horizon_years=scfg.lifetime_horizon_years))
         self.batcher = ContinuousBatcher(scfg.max_batch)
         self.step_count = 0
         self.expert_counts = (np.zeros(cfg.n_experts, np.int64)
@@ -251,7 +254,15 @@ class PagedServingEngine:
                     "migrated": report.migrations.migrated,
                     "to_fast": report.migrations.to_fast,
                     "to_slow": report.migrations.to_slow,
+                    "wear_pressure": report.wear_pressure,
                 }
+                if report.nvm is not None:
+                    stats["nvm"] = {
+                        "wear_max": report.nvm.wear_max,
+                        "slow_writes": report.nvm.slow_writes,
+                        "dynamic_power_mw": report.nvm.dynamic_power_mw,
+                        "lifetime_years": report.nvm.lifetime_years_actual,
+                    }
                 # single bulk promotion for every page the memos pass demoted
                 # out from under a still-running sequence
                 self._promote_all(list(self.batcher.active))

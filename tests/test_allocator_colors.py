@@ -1,0 +1,102 @@
+"""Sub-buddy ``color_mask`` invariants (paper Sec. 5.2 generalized
+(i, j, k)-bit allocation).
+
+Property-tested via the optional-hypothesis shim (skips cleanly when
+hypothesis is absent) plus deterministic randomized fallbacks that always
+run, so the invariants stay pinned in minimal environments:
+
+  * any allocation with a mask returns a block whose color matches
+    ``want & mask``;
+  * free / realloc round-trips preserve the free-list accounting
+    (``n_free``, block partition, color indexing).
+"""
+import numpy as np
+import pytest
+
+from helpers.optional_hypothesis import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.allocator import SubBuddyAllocator, SubBuddyConfig
+
+
+def mask_invariant_rounds(n_pages, n_banks, n_slabs, requests):
+    """Drive alloc/free rounds, asserting the color contract throughout."""
+    cfg = SubBuddyConfig(n_pages=n_pages, n_banks=n_banks, n_slabs=n_slabs)
+    a = SubBuddyAllocator(cfg)
+    free_total = a.n_free
+    live = []
+    for want, mask, release in requests:
+        want %= cfg.n_colors
+        mask %= cfg.n_colors + 1
+        blk = a.alloc(0, want, mask)
+        if blk is not None:
+            # the color contract: returned block matches want under mask
+            assert cfg.color_of(blk) & mask == want & mask
+            live.append(blk)
+        if release and live:
+            a.free(live.pop(np.random.RandomState(want).randint(len(live))), 0)
+        a.check_consistency()
+    # full round-trip: releasing everything restores the free accounting
+    for blk in live:
+        a.free(blk, 0)
+    assert a.n_free == free_total
+    a.check_consistency()
+    # and the pool is fully allocatable again
+    got = a.alloc_pages(n_pages)
+    assert got is not None and len(set(got)) == n_pages
+    assert a.n_free == 0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        n_pages=st.integers(min_value=4, max_value=96),
+        n_banks=st.sampled_from([1, 2, 4, 8]),
+        n_slabs=st.sampled_from([1, 2, 4]),
+        requests=st.lists(
+            st.tuples(st.integers(min_value=0, max_value=511),
+                      st.integers(min_value=0, max_value=511),
+                      st.booleans()),
+            min_size=1, max_size=40),
+    )
+    def test_color_mask_invariants_property(n_pages, n_banks, n_slabs,
+                                            requests):
+        mask_invariant_rounds(n_pages, n_banks, n_slabs, requests)
+else:
+    @given()
+    def test_color_mask_invariants_property():
+        pass                                    # skipped via the shim
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_color_mask_invariants_randomized(seed):
+    """Deterministic fallback for environments without hypothesis."""
+    rng = np.random.RandomState(seed)
+    n_pages = int(rng.randint(4, 97))
+    n_banks = int(2 ** rng.randint(0, 4))
+    n_slabs = int(2 ** rng.randint(0, 3))
+    requests = [(int(rng.randint(512)), int(rng.randint(512)),
+                 bool(rng.rand() < 0.3)) for _ in range(40)]
+    mask_invariant_rounds(n_pages, n_banks, n_slabs, requests)
+
+
+def test_mask_zero_matches_any_color():
+    a = SubBuddyAllocator(SubBuddyConfig(n_pages=16, n_banks=2, n_slabs=2))
+    seen = {a.alloc(0, 3, 0) for _ in range(16)}
+    assert None not in seen and len(seen) == 16     # mask 0: every page ok
+
+
+def test_exact_mask_is_color_exact():
+    cfg = SubBuddyConfig(n_pages=32, n_banks=4, n_slabs=2)
+    a = SubBuddyAllocator(cfg)
+    full = cfg.n_colors - 1
+    for want in range(cfg.n_colors):
+        blk = a.alloc(0, want, full)
+        assert blk is not None and cfg.color_of(blk) == want
+    a.check_consistency()
+
+
+def test_double_free_detected():
+    a = SubBuddyAllocator(SubBuddyConfig(n_pages=8, n_banks=2, n_slabs=2))
+    blk = a.alloc(0)
+    a.free(blk, 0)
+    with pytest.raises(ValueError):
+        a.free(blk, 0)

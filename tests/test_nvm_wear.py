@@ -1,0 +1,338 @@
+"""Parity + invariant suite for the NVM wear & energy telemetry subsystem.
+
+Pins down:
+  * bit-exact parity between the Pallas ``wear_update`` kernel (interpret
+    mode) and its numpy oracle — the acceptance criterion for the kernel;
+  * Start-Gap leveling invariants: the remap stays a permutation, logical
+    page contents survive arbitrary rotation, wear spreads across slots;
+  * TierStore integration: every slow-tier write (single-page, batched,
+    migration demotion) charges exactly one wear count;
+  * the energy/lifetime accounting math against hand-computed values;
+  * the placement feedback: wear pressure pins WD pages to the fast tier.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import sysmon
+from repro.core.memos import MemosConfig, MemosManager
+from repro.core.migration import BatchedMigrationEngine, MigrationEngine
+from repro.core.placement import FAST, SLOW, BandwidthBalancer, plan, target_tier
+from repro.core.tiers import TierConfig, TierStore
+from repro.kernels.wear_update import wear_update, wear_update_ref
+from repro.nvm import EnergyMeter, NvmWear, StartGapLeveler, init_wear
+
+
+def make_store(n=24, fast=8, slow=24, quantize=False, shape=(4,), seed=0,
+               leveling=True, gap_interval=None):
+    s = TierStore(TierConfig(n_pages=n, fast_slots=fast, slow_slots=slow,
+                             page_shape=shape, quantize_slow=quantize,
+                             wear_leveling=leveling,
+                             gap_write_interval=gap_interval))
+    rng = np.random.RandomState(seed)
+    for p in range(n):
+        assert s.allocate(p, SLOW)
+        s.write_page(p, rng.standard_normal(shape).astype(np.float32))
+    return s
+
+
+# =============================================================================
+# kernel parity: Pallas interpret mode vs numpy oracle, bit-exact
+# =============================================================================
+
+@pytest.mark.parametrize("n,k,block", [(64, 7, 128), (512, 300, 128),
+                                       (1000, 1, 256), (256, 1024, 512),
+                                       (200, 33, 512)])  # clamp stays lane-aligned
+def test_wear_update_kernel_parity(n, k, block):
+    rng = np.random.RandomState(n + k)
+    wear = rng.randint(0, 1000, n).astype(np.int32)
+    ids = rng.randint(0, n, k).astype(np.int32)       # duplicates accumulate
+    amt = rng.randint(0, 5, k).astype(np.int32)
+    ref = wear_update_ref(wear, ids, amt)
+    got_interp = np.asarray(wear_update(
+        jnp.asarray(wear), jnp.asarray(ids), jnp.asarray(amt),
+        block=block, interpret=True))
+    got_auto = np.asarray(wear_update(
+        jnp.asarray(wear), jnp.asarray(ids), jnp.asarray(amt)))
+    np.testing.assert_array_equal(ref, got_interp)    # bit-exact, pinned
+    np.testing.assert_array_equal(ref, got_auto)
+
+
+def test_wear_update_valid_mask_and_default_amount():
+    rng = np.random.RandomState(3)
+    wear = np.zeros(32, np.int32)
+    ids = rng.randint(0, 32, 20).astype(np.int32)
+    valid = rng.rand(20) < 0.5
+    ref = wear_update_ref(wear, ids[valid])           # amount defaults to 1
+    got = np.asarray(wear_update(jnp.asarray(wear), jnp.asarray(ids),
+                                 valid=jnp.asarray(valid), interpret=True,
+                                 block=128))
+    np.testing.assert_array_equal(ref, got)
+    # empty event list is a no-op
+    np.testing.assert_array_equal(
+        np.asarray(wear_update(jnp.asarray(wear), jnp.zeros(0, jnp.int32))),
+        wear)
+
+
+# =============================================================================
+# wear state + leveling invariants
+# =============================================================================
+
+def test_remap_permutation_and_content_preserved_under_rotation():
+    s = make_store(n=16, fast=4, slow=16, gap_interval=3, seed=1)
+    rng = np.random.RandomState(1)
+    data = {p: s.read_page(p).copy() for p in range(16)}
+    for _ in range(300):
+        p = int(rng.randint(16))
+        data[p] = rng.standard_normal(4).astype(np.float32)
+        s.write_page(p, data[p])
+    assert s.leveler.stats.rotations >= 1            # pool fully rotated
+    s.wear.check()                                   # remap is a permutation
+    for p in range(16):
+        np.testing.assert_allclose(s.read_page(p), data[p], rtol=1e-6)
+
+
+def test_quantized_pool_survives_rotation():
+    s = make_store(n=12, fast=4, slow=12, quantize=True, gap_interval=2)
+    vals = {p: np.full((4,), float(p + 1), np.float32) for p in range(12)}
+    for p, v in vals.items():
+        s.write_page(p, v)
+    for _ in range(60):                              # drive many advances
+        s.write_page(3, vals[3])
+    s.wear.check()
+    for p, v in vals.items():
+        np.testing.assert_allclose(s.read_page(p), v, rtol=0.05)
+
+
+def test_gap_sweep_is_a_rotation():
+    """N-1 advances shift every physical row by one (Start-Gap semantics)."""
+    wear = NvmWear(6)
+
+    class PoolOnly:
+        slow_pool = np.arange(6, dtype=np.float32).reshape(6, 1)
+        slow_scale = None
+
+    store = PoolOnly()
+    lv = StartGapLeveler(wear, gap_write_interval=1)
+    before = store.slow_pool.copy()
+    for _ in range(5):                               # one full sweep
+        lv.advance(store)
+    assert lv.stats.rotations == 1 and lv.stats.gap == 0
+    np.testing.assert_array_equal(store.slow_pool, np.roll(before, -1, axis=0))
+    # logical view is unchanged: remap follows the data
+    np.testing.assert_array_equal(
+        store.slow_pool[wear.phys(np.arange(6))], before)
+    # each advance physically writes two rows
+    assert wear.leveling_writes == 10
+    assert wear.wear_counts().sum() == 10
+
+
+def test_leveling_spreads_wear():
+    """A single write-hot logical slot must not pin a single physical slot."""
+    hot = make_store(n=8, fast=4, slow=8, gap_interval=4, seed=2)
+    cold = make_store(n=8, fast=4, slow=8, leveling=False, seed=2)
+    v = np.ones(4, np.float32)
+    for _ in range(200):
+        hot.write_page(0, v)
+        cold.write_page(0, v)
+    assert cold.wear.max_wear() >= 200               # all on one slot
+    assert hot.wear.max_wear() < cold.wear.max_wear() / 2
+    assert (hot.wear.wear_counts() > 0).sum() == 8   # every slot took a share
+
+
+def test_every_slow_write_path_charges_wear():
+    s = make_store(n=16, fast=8, slow=16, leveling=False)
+    base = s.wear.writes_total                       # 16 setup writes
+    assert base == 16
+    s.write_page(2, np.zeros(4, np.float32))         # single-page path
+    assert s.wear.writes_total == base + 1
+    s.slow_write_batch(np.arange(4), np.zeros((4, 4), np.float32))
+    assert s.wear.writes_total == base + 5
+    # fast-tier writes must NOT consume NVM endurance
+    eng = BatchedMigrationEngine(s)
+    eng.migrate_locked([0, 1], FAST)
+    s.write_page(0, np.ones(4, np.float32))
+    assert s.wear.writes_total == base + 5
+    # demotion commits are slow writes -> charged
+    eng.migrate_optimistic([0, 1], SLOW)
+    assert s.wear.writes_total == base + 7
+    # device counters (flushed through the wear_update kernel) agree with
+    # the host totals
+    assert s.wear.wear_counts().sum() == \
+        s.wear.writes_total + s.wear.leveling_writes
+
+
+def test_wear_tracking_disabled():
+    s = TierStore(TierConfig(n_pages=4, fast_slots=2, slow_slots=4,
+                             page_shape=(2,), track_wear=False))
+    assert s.wear is None and s.leveler is None
+    assert s.allocate(0, SLOW)
+    s.write_page(0, np.zeros(2, np.float32))         # no tracker, no crash
+    np.testing.assert_array_equal(s.read_page(0), np.zeros(2))
+
+
+# =============================================================================
+# engine parity with wear tracking + leveling enabled
+# =============================================================================
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_migration_parity_with_leveling_active(quantize):
+    """Both engines see identical logical state even while Start-Gap
+    rotation reshuffles the physical pool underneath them."""
+    ref_s = make_store(quantize=quantize, gap_interval=2, seed=4)
+    bat_s = make_store(quantize=quantize, gap_interval=2, seed=4)
+    ref, bat = MigrationEngine(ref_s), BatchedMigrationEngine(bat_s)
+    rng = np.random.RandomState(5)
+    for _ in range(8):
+        pages = rng.choice(24, size=rng.randint(1, 10), replace=False)
+        dst = FAST if rng.rand() < 0.5 else SLOW
+        st_r = ref.migrate_locked(pages, dst)
+        st_b = bat.migrate_locked(pages, dst)
+        assert st_r.migrated == st_b.migrated
+        np.testing.assert_array_equal(ref_s.tier, bat_s.tier)
+        np.testing.assert_array_equal(ref_s.slot, bat_s.slot)
+        for p in range(24):
+            np.testing.assert_array_equal(ref_s.read_page(p),
+                                          bat_s.read_page(p))
+    ref_s.wear.check()
+    bat_s.wear.check()
+    # both engines consumed identical endurance (same page-write totals)
+    assert ref_s.wear.writes_total == bat_s.wear.writes_total
+
+
+# =============================================================================
+# energy / lifetime accounting
+# =============================================================================
+
+def test_energy_report_math():
+    s = make_store(n=8, fast=4, slow=8, leveling=False)
+    meter = EnergyMeter(s, window_s=2.0)
+    s.write_page(0, np.zeros(4, np.float32))
+    s.write_page(0, np.zeros(4, np.float32))
+    s.read_page(1)
+    r = meter.end_pass()
+    assert (r.slow_writes, r.slow_reads, r.leveling_writes) == (2, 1, 0)
+    page_b = s.page_nbytes
+    exp_w = 2 * cm.page_access_energy_nj(cm.NVM, page_b, True) * 1e-6
+    exp_r = 1 * cm.page_access_energy_nj(cm.NVM, page_b, False) * 1e-6
+    assert r.write_energy_mj == pytest.approx(exp_w)
+    assert r.read_energy_mj == pytest.approx(exp_r)
+    assert r.dynamic_power_mw == pytest.approx((exp_w + exp_r) / 2.0)
+    assert r.standby_w == pytest.approx(
+        cm.standby_power_w(r.capacity_gb, cm.NVM))
+    # lifetime: max wear = 3 writes on slot of page 0 (setup + 2) over 2 s
+    assert r.wear_max == 3
+    assert r.lifetime_years_actual == pytest.approx(
+        cm.lifetime_years_from_wear(3, 2.0))
+    # second pass sees only the delta
+    s.write_page(2, np.zeros(4, np.float32))
+    r2 = meter.end_pass()
+    assert (r2.slow_writes, r2.slow_reads) == (1, 0)
+    assert r2.passes == 2
+    d = r2.to_dict()
+    assert d["slow_writes"] == 1 and isinstance(d["wear_imbalance"], float)
+
+
+def test_lifetime_helpers():
+    assert cm.lifetime_years_from_wear(0, 10.0) == float("inf")
+    assert cm.lifetime_years_from_wear(100, 0.0) == float("inf")
+    y = cm.lifetime_years_from_wear(cm.NVM.endurance, cm.SECONDS_PER_YEAR)
+    assert y == pytest.approx(1.0)
+    assert cm.startgap_interval() == 19              # 95% -> 19 writes/move
+    assert cm.startgap_interval(0.5) == 1
+
+
+# =============================================================================
+# placement feedback: wear pressure pins WD pages to the fast tier
+# =============================================================================
+
+def test_target_tier_wear_penalty():
+    wd = np.array([2, 1, 0, 2], np.int8)     # WD, RD, COLD, WD
+    hot = np.zeros(4, bool)
+    future = np.zeros(4, np.int8)            # UN_WD everywhere
+    reuse = np.zeros(4, np.int8)
+    base = target_tier(wd, hot, future, reuse)
+    np.testing.assert_array_equal(base, [SLOW] * 4)
+    under = target_tier(wd, hot, future, reuse, wear_penalty=1.0)
+    np.testing.assert_array_equal(under, [FAST, SLOW, SLOW, FAST])
+
+
+def test_plan_wear_penalty_ranks_wd_first():
+    class Summary:
+        wd_code = np.array([1, 2, 1, 2], np.int8)    # RD, WD, RD, WD
+        hot = np.ones(4, bool)
+        hotness = np.array([5.0, 1.0, 4.0, 1.5], np.float32)
+        future = np.zeros(4, np.int8)
+        reuse_class = np.zeros(4, np.int8)
+
+    current = np.full(4, SLOW, np.int8)
+    d0 = plan(Summary, current)
+    assert list(d0.hotness_list) == [0, 2, 3, 1]     # plain hotness order
+    d1 = plan(Summary, current, wear_penalty=10.0)
+    assert list(d1.hotness_list)[:2] == [3, 1]       # WD pages boosted first
+
+
+def test_spill_excludes_wd_under_pressure():
+    b = BandwidthBalancer(0.9)
+    wd_code = np.array([2, 1, 2, 1], np.int8)
+    hotness = np.array([1.0, 2.0, 3.0, 4.0], np.float32)
+    tier = np.full(4, FAST, np.int8)
+    normal = b.spill_candidates(wd_code, hotness, tier, n=4)
+    assert set(normal.tolist()) == {0, 1, 2, 3}
+    pressured = b.spill_candidates(wd_code, hotness, tier, n=4,
+                                   exclude_wd=True)
+    assert set(pressured.tolist()) == {1, 3}         # RD only
+
+
+def test_memos_wear_pressure_promotes_first_time_wd_pages():
+    """End to end: a first-time WD page (no history, not hot) stays on NVM
+    without feedback and is pinned to the fast tier under wear pressure."""
+
+    def run(horizon):
+        s = make_store(n=32, fast=16, slow=32, leveling=False, seed=7)
+        mgr = MemosManager(s, MemosConfig(
+            interval=4, adaptive_interval=False,
+            lifetime_horizon_years=horizon))
+        sm = sysmon.init(32, s.cfg.n_banks, s.cfg.n_slabs)
+        for step in range(8):
+            sm = sysmon.record(sm, jnp.asarray([20]), is_write=False)
+            if step == 0:        # pass 1: background write so wear rate > 0
+                sm = sysmon.record(sm, jnp.asarray([10]), is_write=True)
+                s.write_page(10, np.ones(4, np.float32))
+            if step == 4:        # pass 2: fresh WD pages, single touch each
+                sm = sysmon.record(sm, jnp.asarray([0, 1, 2, 3]),
+                                   is_write=True)
+            sm, rep = mgr.maybe_step(sm)
+        return s, mgr
+
+    s_off, m_off = run(None)
+    assert (s_off.tier[:4] == SLOW).all()
+    assert not any(r.wear_pressure for r in m_off.reports)
+    s_on, m_on = run(1e12)
+    assert (s_on.tier[:4] == FAST).all()
+    assert m_on.reports[-1].wear_pressure
+    # telemetry rides along on every report when wear is tracked
+    assert all(r.nvm is not None for r in m_on.reports)
+    assert m_on.reports[-1].nvm.passes == len(m_on.reports)
+
+
+def test_adaptive_interval_scales_telemetry_window():
+    """With adaptive interval growth, the per-pass accounting window must
+    stretch with the pass's actual step span so a constant write rate does
+    not read as inflated wear pressure."""
+    s = make_store(n=16, fast=8, slow=16, leveling=False, seed=9)
+    mgr = MemosManager(s, MemosConfig(interval=2, adaptive_interval=True,
+                                      interval_growth=2.0, interval_max=16))
+    sm = sysmon.init(16, s.cfg.n_banks, s.cfg.n_slabs)
+    for _ in range(64):
+        sm = sysmon.record(sm, jnp.asarray([0]), is_write=True)
+        sm, _ = mgr.maybe_step(sm)
+    windows = [r.nvm.window_s for r in mgr.reports]
+    # windows track the growing interval (2 steps = 1.0 notional second)
+    assert windows[0] == pytest.approx(1.0)
+    assert windows[-1] > windows[0]
+    steps = [r.step for r in mgr.reports]
+    spans = np.diff([0] + steps)
+    np.testing.assert_allclose(windows, spans / 2.0)
+    assert mgr.meter.elapsed == pytest.approx(sum(windows))
