@@ -127,6 +127,26 @@ def _scalar_rows(obj, prefix: str = "", depth: int = 2) -> list[tuple[str, str]]
     return rows
 
 
+def serving_sweep_rows(r: dict) -> list[str]:
+    """Render the serving_throughput K x memos sweep as one table: each
+    engine path's tokens/s with memos on/off, plus the speedup over the
+    pre-fusion reference path."""
+    sweep = r.get("sweep", {})
+    paths = sorted({k.rsplit("_", 1)[0] for k in sweep},
+                   key=lambda p: (p != "reference",
+                                  int(p[1:]) if p.startswith("k") else 0))
+    base = sweep.get("reference_memos", {}).get("tokens_per_s")
+    lines = ["| path | tok/s (memos on) | tok/s (memos off) | "
+             "vs reference (memos on) |", "|---|---|---|---|"]
+    for p in paths:
+        on = sweep.get(f"{p}_memos", {}).get("tokens_per_s")
+        off = sweep.get(f"{p}_nomemos", {}).get("tokens_per_s")
+        rel = f"{on / base:.2f}x" if on and base else "—"
+        lines.append(f"| {p} | {on:.1f} | {off:.1f} | {rel} |"
+                     if on and off else f"| {p} | — | — | — |")
+    return lines
+
+
 def results_table(results_dir: Path = RESULTS) -> str:
     """One markdown table over every result JSON in ``results_dir``."""
     lines = ["# Benchmark results", ""]
@@ -139,7 +159,12 @@ def results_table(results_dir: Path = RESULTS) -> str:
         except (json.JSONDecodeError, OSError) as e:
             lines += [f"## {f.name}", "", f"_unreadable: {e}_", ""]
             continue
-        lines += [f"## {f.name}", "", "| metric | value |", "|---|---|"]
+        lines += [f"## {f.name}", ""]
+        if isinstance(r, dict) and "sweep" in r and f.name.startswith(
+                "serving_throughput"):
+            lines += serving_sweep_rows(r)
+            lines.append("")
+        lines += ["| metric | value |", "|---|---|"]
         rows = (_scalar_rows(r) if isinstance(r, dict)
                 else [("(non-dict payload)", type(r).__name__)])
         lines += [f"| {k} | {v} |" for k, v in rows]

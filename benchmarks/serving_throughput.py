@@ -1,0 +1,174 @@
+"""End-to-end serving throughput: the fused multi-token decode hot path.
+
+The first tokens/s number for the repo.  Serves a batch of prompts
+through ``PagedServingEngine`` and sweeps the fused dispatch size
+K = ``decode_block`` x memos on/off, plus the retained unfused reference
+path (host argmax + standalone per-step SysMon records — the pre-fusion
+engine and the ``K=1 path`` every later PR must beat):
+
+  * reference    — one jitted decode + 1 argmax pull + 2 SysMon record
+                   dispatches per token (~4 host round-trips/token);
+  * fused K=1    — everything in one dispatch, still one per token;
+  * fused K=4/16 — one dispatch and one device->host token-block
+                   transfer per K tokens (lax.scan inner loop).
+
+The acceptance bar for the fusion PR is fused K=16 >= 3x the K=1 path
+with memos enabled.  Results land in
+benchmarks/results/serving_throughput.json (aggregated by
+benchmarks/report.py into results/summary.md).
+
+Usage:  PYTHONPATH=src python benchmarks/serving_throughput.py
+        PYTHONPATH=src python benchmarks/serving_throughput.py --tiny
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def build_engine(cfg, params, *, k, memos, reference, args):
+    from repro.serving import PagedServingEngine, ServeConfig
+    return PagedServingEngine(cfg, params, ServeConfig(
+        page_size=args.page_size, max_batch=args.batch,
+        fast_slots=args.fast_slots, slow_slots=args.slow_slots,
+        memos_interval=args.memos_interval, memos_enabled=memos,
+        max_pages_per_seq=args.max_pages, decode_block=k,
+        reference=reference))
+
+
+def serve_round(engine, cfg, args, rng):
+    """One serving round on a warm engine: fresh requests, same shapes."""
+    t_out0 = engine.tokens_out
+    engine_reqs = [engine.submit(
+        rng.randint(0, cfg.vocab, size=args.prompt_len).tolist(),
+        max_new=args.max_new) for _ in range(args.requests)]
+    t0 = time.perf_counter()
+    engine.run(max_steps=1_000_000)
+    dt = time.perf_counter() - t0
+    assert engine.batcher.all_done()
+    assert engine.tokens_out - t_out0 == args.requests * args.max_new
+    return engine_reqs, dt
+
+
+def measure(cfg, params, *, k, memos, reference, args):
+    """Throughput for one engine config.  The engine persists across
+    rounds (as in a real server), so jit caches stay warm; round 0 pays
+    every compile and is discarded."""
+    label = ("reference" if reference else f"k{k}") + \
+        ("_memos" if memos else "_nomemos")
+    engine = build_engine(cfg, params, k=k, memos=memos,
+                          reference=reference, args=args)
+    best = float("inf")
+    for rep in range(args.repeats + 1):       # rep 0 warms compile caches
+        rng = np.random.RandomState(0)
+        _, dt = serve_round(engine, cfg, args, rng)
+        if rep > 0:
+            best = min(best, dt)
+    toks = args.requests * args.max_new
+    row = {
+        "tokens_out": toks,
+        "steps": engine.step_count,
+        "seconds": best,
+        "tokens_per_s": toks / best,
+        "memos_passes": len(engine.memos.reports),
+        "migrated": sum(r.migrations.migrated for r in engine.memos.reports),
+    }
+    print(f"  {label:18s}: {best * 1e3:8.1f} ms  "
+          f"{row['tokens_per_s']:10.1f} tok/s  "
+          f"(memos passes {row['memos_passes']})")
+    return label, row
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--fast-slots", type=int, default=64)
+    ap.add_argument("--slow-slots", type=int, default=256)
+    ap.add_argument("--max-pages", type=int, default=16)
+    ap.add_argument("--memos-interval", type=int, default=16)
+    ap.add_argument("--ks", type=int, nargs="+", default=[1, 4, 16])
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: minimal sweep, seconds total, no bar")
+    ap.add_argument("--no-check", action="store_true",
+                    help="always exit 0 regardless of the 3x bar")
+    ap.add_argument("--out", type=Path,
+                    default=ROOT / "benchmarks" / "results" /
+                    "serving_throughput.json")
+    args = ap.parse_args()
+    if args.tiny:
+        args.requests = min(args.requests, 2)
+        args.batch = min(args.batch, 2)
+        args.max_new = min(args.max_new, 16)
+        args.prompt_len = min(args.prompt_len, 8)
+        args.ks = [1, 4]
+        args.repeats = 1
+
+    import jax
+    from repro.configs import registry, smoke
+    from repro.core.migration import bench_env
+    from repro.models import transformer as T
+
+    cfg = smoke(registry()[args.arch])
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    total = args.requests * (args.prompt_len + args.max_new)
+    print(f"serving_throughput: {args.arch} (smoke), {args.requests} reqs x "
+          f"({args.prompt_len} prompt + {args.max_new} new) = {total} tokens, "
+          f"batch {args.batch}, page {args.page_size}")
+
+    results = {"sweep": {}}
+    for memos in (True, False):
+        label, row = measure(cfg, params, k=1, memos=memos, reference=True,
+                             args=args)
+        results["sweep"][label] = row
+        for k in args.ks:
+            label, row = measure(cfg, params, k=k, memos=memos,
+                                 reference=False, args=args)
+            results["sweep"][label] = row
+
+    sweep = results["sweep"]
+    kmax = max(args.ks)
+    # the headline ratio: fused K_max vs the K=1 path (the pre-fusion
+    # reference engine — host sampling + standalone SysMon records),
+    # both with memos enabled
+    speedup = (sweep[f"k{kmax}_memos"]["tokens_per_s"]
+               / sweep["reference_memos"]["tokens_per_s"])
+    results["speedup_kmax_vs_reference_memos"] = speedup
+    fused1 = sweep.get("k1_memos")        # absent when --ks skips 1
+    speedup_fused1 = (sweep[f"k{kmax}_memos"]["tokens_per_s"]
+                      / fused1["tokens_per_s"]) if fused1 else None
+    if speedup_fused1 is not None:
+        results["speedup_kmax_vs_fused_k1_memos"] = speedup_fused1
+    results["k_max"] = kmax
+    results["config"] = {
+        "arch": args.arch, "batch": args.batch, "requests": args.requests,
+        "prompt_len": args.prompt_len, "max_new": args.max_new,
+        "page_size": args.page_size, "fast_slots": args.fast_slots,
+        "slow_slots": args.slow_slots, "memos_interval": args.memos_interval,
+        "ks": list(args.ks), "tiny": args.tiny,
+    }
+    results["env"] = bench_env()
+    bar = 3.0
+    vs_fused1 = (f", {speedup_fused1:.1f}x fused K=1"
+                 if speedup_fused1 is not None else "")
+    print(f"  speedup  : K={kmax} fused = {speedup:.1f}x the K=1 path "
+          f"(memos on; {'meets' if speedup >= bar else 'BELOW'} the "
+          f"{bar:.0f}x bar){vs_fused1}")
+
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(results, indent=2))
+    print(f"wrote {args.out}")
+    return 0 if speedup >= bar or args.no_check or args.tiny else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

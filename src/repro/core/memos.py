@@ -80,14 +80,21 @@ class MemosManager:
         self.step_count = 0
 
     def maybe_step(self, sm_state: sysmon_mod.SysmonState,
-                   fast_bw_util: float = 0.0):
-        """Call once per training/serving step; fires the memos loop on the
-        configured interval.  Returns (new sysmon state, report|None)."""
-        self.step_count += 1
-        self._steps_since += 1
+                   fast_bw_util: float = 0.0, steps: int = 1):
+        """Call once per training/serving step — or once per fused decode
+        dispatch with ``steps`` = the number of inner steps it covered, so
+        the interval stays token-granular across dispatch sizes; fires the
+        memos loop on the configured interval.  Returns (new sysmon state,
+        report|None)."""
+        self.step_count += steps
+        self._steps_since += steps
         if self._steps_since < self.interval:
             return sm_state, None
-        self._steps_since = 0
+        # a pass can only fire at a call (dispatch) boundary, so keep the
+        # token-granular cadence by carrying the remainder modulo the
+        # interval instead of discarding it — overshoot from one large
+        # dispatch does not push the next pass a full interval out
+        self._steps_since %= self.interval
         return self.run_pass(sm_state, fast_bw_util)
 
     def run_pass(self, sm_state: sysmon_mod.SysmonState,

@@ -2,12 +2,20 @@
 
 The OS version samples PTE access/dirty bits; a TPU has neither, so SysMon
 becomes a *software counter layer fused into the jitted step function*:
-the serving/training step knows exactly which pages it touched (attention
-block tables, router decisions, KV appends), and records them with
-scatter-adds into a ``SysmonState`` pytree that lives on device and is
-carried through the step.  Harvesting (pattern classification + history
-push) runs at pass boundaries — this mirrors the paper's sampling passes
-(default 100 samplings per pass) at zero host round-trips per step.
+the serving engine's multi-token decode dispatch carries the whole
+``SysmonState`` pytree through its ``jax.lax.scan`` — each inner decode
+step records the exact pages it touched (block-table prefix reads, the
+tail-page KV append write) with the ``kernels/hotness_update``
+``touch_update`` scatter-add, entirely on device.  Nothing about a step's
+access stream ever crosses to the host: the state lives in the scan
+carry, is donated back to the next dispatch, and only pass harvesting
+(pattern classification + history push, ``end_pass``) runs at pass
+boundaries — mirroring the paper's sampling passes (default 100 samplings
+per pass) at zero host round-trips per step.
+
+``record`` is jit-safe and traceable, so it composes both ways: called
+eagerly (the retained K=1 reference serving path, training loops) or from
+inside a scanned/jitted step function (the fused serving hot path).
 
 Algorithm 1 (cache/bank frequency tables) is implemented verbatim: each
 recorded access bumps the page's bank and slab counters, keyed by the
@@ -94,29 +102,23 @@ def record(state: SysmonState, page_ids: jnp.ndarray, *,
     is_write: bool or bool [k] — write vs read.
     valid:    optional bool [k] mask for padded id lists.
     """
-    page_ids = page_ids.reshape(-1).astype(jnp.int32)
-    k = page_ids.shape[0]
-    if isinstance(is_write, bool):
-        is_write = jnp.full((k,), is_write)
-    is_write = jnp.broadcast_to(is_write.reshape(-1), (k,))
-    if valid is None:
-        valid = jnp.ones((k,), dtype=bool)
-    valid = jnp.broadcast_to(valid.reshape(-1), (k,))
+    # the ragged id list becomes dense per-page increment vectors in one
+    # fused scatter-add sweep (kernels/hotness_update.touch_update:
+    # Pallas on TPU, XLA scatter elsewhere — bit-exact either way).
+    # Imported lazily: the kernel package imports core.patterns/predictor,
+    # so a module-level import here would be circular under a
+    # kernels-first import order.
+    from repro.kernels.hotness_update import touch_update
+    d_reads, d_writes, touched_i = touch_update(
+        state.n_pages, page_ids, is_write, valid)
+    touched = touched_i > 0
 
-    # mask invalid entries to a scratch slot? No — use where on the update
-    # value and clamp ids so scatter stays in-bounds.
-    ids = jnp.clip(page_ids, 0, state.n_pages - 1)
-    one = valid.astype(jnp.int32)
-    w = (valid & is_write).astype(jnp.int32)
-    r = (valid & ~is_write).astype(jnp.int32)
-
-    reads = state.reads.at[ids].add(r)
-    writes = state.writes.at[ids].add(w)
+    reads = state.reads + d_reads
+    writes = state.writes + d_writes
 
     # access_count: count *samplings* where the page was touched (paper's
-    # access_bit semantics) — dedupe within the sampling via a touched mask.
-    touched = jnp.zeros(state.n_pages, dtype=bool).at[ids].max(valid)
-    access_count = state.access_count + touched.astype(jnp.int32)
+    # access_bit semantics) — touched dedupes within the sampling.
+    access_count = state.access_count + touched_i
 
     # reuse intervals (paper Sec. 3.3): gap in samplings since last touch.
     now = state.sample_idx
@@ -128,11 +130,11 @@ def record(state: SysmonState, page_ids: jnp.ndarray, *,
     intv_sqsum = state.intv_sqsum + jnp.where(upd, gap * gap, 0)
     last_access = jnp.where(touched, now, state.last_access)
 
-    # Algorithm 1: bump bank/slab frequency by page touch.
-    bank_ids = state.page_bank[ids]
-    slab_ids = state.page_slab[ids]
-    bank_freq = state.bank_freq.at[bank_ids].add(one)
-    slab_freq = state.slab_freq.at[slab_ids].add(one)
+    # Algorithm 1: bump bank/slab frequency by page touch — the dense
+    # per-page event counts fold through the page->color maps.
+    events = d_reads + d_writes
+    bank_freq = state.bank_freq.at[state.page_bank].add(events)
+    slab_freq = state.slab_freq.at[state.page_slab].add(events)
 
     return state._replace(
         reads=reads, writes=writes, access_count=access_count,

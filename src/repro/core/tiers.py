@@ -214,6 +214,19 @@ class TierStore:
             self.slow_pool[slots] = values
         self._account_slow_writes(slots)
 
+    def charge_fast_accesses(self, page_writes: np.ndarray,
+                             n_reads: int) -> None:
+        """Apply one decode dispatch's fast-tier access accounting in bulk:
+        ``page_writes`` (int [n_pages], computed on device inside the fused
+        step) bumps the per-page version counters (the dirty bit for
+        optimistic migration) and the tier write counter; ``n_reads`` is the
+        dispatch's total page-read count.  One vectorized add instead of a
+        per-request Python loop per token."""
+        page_writes = np.asarray(page_writes, np.int64)
+        self.version += page_writes
+        self.writes_to[FAST] += int(page_writes.sum())
+        self.reads_from[FAST] += int(n_reads)
+
     def commit_moves(self, pages: np.ndarray, dst_tier: int,
                      new_slots: np.ndarray) -> None:
         """Flip the page table for an executed bulk move: free the old slots,

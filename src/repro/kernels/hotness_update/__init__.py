@@ -1,4 +1,5 @@
-from .ops import sysmon_pass
-from .ref import sysmon_pass_ref
+from .ops import sysmon_pass, touch_update
+from .ref import sysmon_pass_ref, touch_update_ref
 
-__all__ = ["sysmon_pass", "sysmon_pass_ref"]
+__all__ = ["sysmon_pass", "sysmon_pass_ref", "touch_update",
+           "touch_update_ref"]

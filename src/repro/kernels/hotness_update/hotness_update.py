@@ -1,12 +1,26 @@
-"""SysMon pass-boundary Pallas TPU kernel — the paper's "page shadow array
-... raw byte and bit manipulation" (Sec. 4.2), fused.
+"""SysMon Pallas TPU kernels — the paper's "page shadow array ... raw
+byte and bit manipulation" (Sec. 4.2), fused.
 
-One elementwise sweep over the page-counter arrays computes, per page:
+Two kernels share this module:
+
+``sysmon_pass_pallas`` — the pass-boundary sweep.  One elementwise pass
+over the page-counter arrays computes, per page:
   * WD/RD/COLD classification (weight-2 writes, Sec. 3.1),
   * history-byte shift  hist' = (hist << 1 | wd) & 0xFF,
   * SWAR popcount of the window,
   * the WD_FREQ_H / WD_FREQ_L / UN_WD prediction with the K_Len Reverse
     override (Sec. 3.2, Fig. 4).
+
+``touch_update_pallas`` — the per-sampling scatter-add behind
+``core.sysmon.record``.  A decode step hands SysMon a padded list of
+touched page ids (block-table prefix reads + the tail-page write); this
+kernel turns the event list into dense per-page increment vectors
+(d_reads, d_writes, touched) in one blocked sweep, same ownership
+discipline as ``kernels/wear_update``: each grid step owns one [block]
+span of the page axis and reduces the full event list against it, so the
+scatter is race-free across grid steps and bit-exact vs. the numpy
+oracle.  This is the piece the serving engine's fused multi-token decode
+carries inside ``lax.scan`` — monitoring without leaving the device.
 
 Blocked [bp] pages per grid step; everything stays in int32 vregs (VPU
 lanes), zero HBM re-reads — the fused version reads each counter array
@@ -85,3 +99,49 @@ def sysmon_pass_pallas(reads: jnp.ndarray, writes: jnp.ndarray,
     )(reads.astype(jnp.int32), writes.astype(jnp.int32),
       hist.astype(jnp.int32))
     return tuple(o[:n] for o in out)
+
+
+def _touch_kernel(ids_ref, r_ref, w_ref,
+                  dr_ref, dw_ref, touched_ref, *, block: int):
+    i = pl.program_id(0)
+    # pages owned by this grid step, as a [block, 1] column
+    pages = i * block + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)
+    ids = ids_ref[...].astype(jnp.int32).reshape(1, -1)     # [1, k]
+    r = r_ref[...].astype(jnp.int32).reshape(1, -1)
+    w = w_ref[...].astype(jnp.int32).reshape(1, -1)
+    hit = pages == ids                                      # [block, k]
+    dr_ref[...] = jnp.sum(jnp.where(hit, r, 0), axis=1)
+    dw_ref[...] = jnp.sum(jnp.where(hit, w, 0), axis=1)
+    touched_ref[...] = jnp.max(jnp.where(hit, r + w, 0), axis=1)
+
+
+def touch_update_pallas(n_pages: int, page_ids: jnp.ndarray,
+                        reads: jnp.ndarray, writes: jnp.ndarray, *,
+                        block: int = 512, interpret: bool = False):
+    """page_ids: int32 [k] (in-bounds; padded events carry zero weights);
+    reads/writes: int32 [k] per-event increments (0 or 1).  Returns dense
+    int32 [n_pages] (d_reads, d_writes, touched) where touched is 1 for
+    any page with at least one non-zero event (duplicates accumulate in
+    the count vectors, dedupe in touched)."""
+    k = page_ids.shape[0]
+    kpad = (-k) % 128
+    if kpad:
+        page_ids = jnp.pad(page_ids, (0, kpad))
+        reads = jnp.pad(reads, (0, kpad))
+        writes = jnp.pad(writes, (0, kpad))
+    npad = (-n_pages) % block
+    n_full = n_pages + npad
+    kernel = functools.partial(_touch_kernel, block=block)
+    kfull = page_ids.shape[0]
+    espec = pl.BlockSpec((kfull,), lambda i: (0,))   # every step sees all ids
+    pspec = pl.BlockSpec((block,), lambda i: (i,))
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_full // block,),
+        in_specs=[espec, espec, espec],
+        out_specs=[pspec, pspec, pspec],
+        out_shape=[jax.ShapeDtypeStruct((n_full,), jnp.int32)] * 3,
+        interpret=interpret,
+    )(page_ids.astype(jnp.int32), reads.astype(jnp.int32),
+      writes.astype(jnp.int32))
+    return tuple(o[:n_pages] for o in out)

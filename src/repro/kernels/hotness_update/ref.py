@@ -1,7 +1,26 @@
-"""Oracle: compose the core library's pure-jnp pieces."""
+"""Oracles: pure-jnp / numpy compositions of the fused kernels."""
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import patterns, predictor
+
+
+def touch_update_ref(n_pages, page_ids, is_write, valid=None):
+    """Numpy oracle for the per-sampling touch scatter-add."""
+    ids = np.clip(np.asarray(page_ids, np.int64).reshape(-1), 0, n_pages - 1)
+    k = ids.shape[0]
+    is_write = np.broadcast_to(np.asarray(is_write).reshape(-1)
+                               if not isinstance(is_write, bool)
+                               else np.full((k,), is_write), (k,))
+    valid = (np.ones((k,), bool) if valid is None
+             else np.broadcast_to(np.asarray(valid).reshape(-1), (k,)))
+    d_reads = np.zeros((n_pages,), np.int32)
+    d_writes = np.zeros((n_pages,), np.int32)
+    touched = np.zeros((n_pages,), np.int32)
+    np.add.at(d_reads, ids, (valid & ~is_write).astype(np.int32))
+    np.add.at(d_writes, ids, (valid & is_write).astype(np.int32))
+    np.maximum.at(touched, ids, valid.astype(np.int32))
+    return d_reads, d_writes, touched
 
 
 def sysmon_pass_ref(reads, writes, hist, *, window_len=8, k_len=3,

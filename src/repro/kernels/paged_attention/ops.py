@@ -1,4 +1,17 @@
-"""jit'd public wrapper for paged decode attention."""
+"""jit'd public wrapper for paged decode attention.
+
+Same three execution paths as ``kernels/page_gather`` / ``wear_update``:
+
+  * TPU            — the scalar-prefetch Pallas kernel, compiled;
+  * explicit       — ``interpret=True`` runs the Pallas kernel in
+                     interpreter mode (kernel-parity tests only);
+  * other backends — the pure-jnp gather+softmax reference, jit-compiled
+                     by XLA.  Interpreter-mode Pallas unrolls the whole
+                     (B, Hkv, n_pages) grid into emulation HLO, which
+                     dominated the serving decode step on CPU hosts —
+                     the XLA path keeps the fused multi-token dispatch
+                     compute-bound instead of emulation-bound.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -7,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from .paged_attention import paged_attention_pooled
+from .ref import paged_attention_ref
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -15,15 +29,18 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
                     interpret: bool | None = None) -> jnp.ndarray:
     """q: [B, Hq, D] decode queries; k/v_pool: [n_slots, page, Hkv, D];
     block_table: [B, n_pages]; lengths: [B].  Returns [B, Hq, D]."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     B, Hq, D = q.shape
     Hkv = k_pool.shape[2]
     G = Hq // Hkv
     scale = D ** -0.5
     qg = (q * scale).reshape(B, Hkv, G, D)
-    out = paged_attention_pooled(qg, k_pool, v_pool,
-                                 block_table.astype(jnp.int32),
-                                 lengths.astype(jnp.int32),
-                                 interpret=interpret)
+    if interpret is None and jax.default_backend() != "tpu":
+        out = paged_attention_ref(qg, k_pool, v_pool,
+                                  block_table.astype(jnp.int32),
+                                  lengths.astype(jnp.int32))
+    else:
+        out = paged_attention_pooled(qg, k_pool, v_pool,
+                                     block_table.astype(jnp.int32),
+                                     lengths.astype(jnp.int32),
+                                     interpret=bool(interpret))
     return out.reshape(B, Hq, D)

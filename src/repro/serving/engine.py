@@ -1,26 +1,44 @@
 """Paged serving engine: continuous batching + memos-managed KV tiering.
 
-The decode path reads KV through block tables over the memos HBM pool
-(paged_attention kernel), charges SysMon with the exact page-access
-stream, and lets the periodic memos loop (Fig. 10) migrate pages between
-HBM and host:
+The steady state is a **fused multi-token decode dispatch**: K inner
+decode steps run inside one jitted ``jax.lax.scan`` whose carry is
+``(tokens, positions, SysmonState, fast_pool, page-write counters)`` —
+greedy sampling (argmax) happens on device so the sampled token feeds the
+next inner step, SysMon's read/write scatter-adds
+(``kernels/hotness_update.touch_update``) and the fast-tier version/write
+counters ride in the same dispatch, and the host sees **one dispatch and
+one device->host transfer per K tokens** instead of ~4 round-trips per
+token (decode + argmax pull + two SysMon records).
+
+Host-side ``step()`` is the slow path that runs only at dispatch
+boundaries: admit/resume requests, pre-reserve tail pages for the next K
+positions, detect finished sequences from the returned token block, and
+run the memos pass (plan + migrate + wear/energy snapshot) **between**
+dispatches — monitoring stays at pass granularity exactly as in the
+paper's Fig. 10, off the decode critical path.
+
+The dispatch size adapts: K = min(decode_block, min remaining steps over
+the batch), snapped to a power of two so recompilation stays bounded.
+Every sequence therefore stays live for the whole dispatch (no dead-lane
+masking), finished sequences are retired exactly at a boundary, and the
+generated tokens are bit-identical to the retained K=1 reference path
+(``ServeConfig(reference=True)`` — host argmax + standalone per-step
+SysMon records), pinned by tests/test_serving.py.
+
+Tiering dynamics are unchanged from the unfused engine:
 
   * running sequences touch all their pages every step  -> hot  -> stay;
   * the tail page is written every step                  -> WD   -> stay;
   * preempted / finished-prefix pages go quiet           -> cold -> host;
   * resumed sequences eagerly promote their pages (paper's eager mode).
 
-The jitted step writes the new token's K/V into the pool *before*
-attention (exact self-attention; the pool buffer is donated), so engine
-outputs are bit-comparable to the model-level dense decode path — tested
-in tests/test_serving.py.
-
 Supports every ``layout == "attn"`` arch (dense + MoE); MoE expert
-hotness is accumulated per step for the expert-tiering benchmarks.
+hotness is accumulated inside the scan and drained per dispatch.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +67,12 @@ class ServeConfig:
     memos_enabled: bool = True
     # NVM wear feedback horizon (years); None = telemetry only, no feedback
     lifetime_horizon_years: float | None = None
+    # K: inner decode steps per fused dispatch (latency vs. dispatch
+    # amortization; the effective K shrinks near sequence ends)
+    decode_block: int = 8
+    # retained unfused K=1 path — host-side sampling + standalone SysMon
+    # records; the parity oracle and the pre-fusion throughput baseline
+    reference: bool = False
 
 
 class PagedServingEngine:
@@ -74,10 +98,16 @@ class PagedServingEngine:
                               if cfg.is_moe else None)
         self.tokens_out = 0
         self.rid = 0
+        self.last_logits = None     # final inner step's logits, on device
         self._decode_fn = jax.jit(self._decode_batch, donate_argnums=(5,))
+        self._fused_fns: dict[int, object] = {}
 
     # -- request API -----------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int) -> Request:
+        cap = self.scfg.max_pages_per_seq * self.scfg.page_size
+        assert len(prompt) + max_new <= cap, \
+            f"sequence needs {len(prompt) + max_new} positions but " \
+            f"max_pages_per_seq*page_size = {cap}"
         req = Request(self.rid, list(prompt), max_new, arrival=self.step_count)
         req.tokens = []          # processed tokens (prompt-consumed + generated)
         req.generated = []       # type: ignore[attr-defined]
@@ -86,20 +116,23 @@ class PagedServingEngine:
         return req
 
     # -- page management ---------------------------------------------------------
-    def _ensure_page(self, req: Request) -> bool:
-        need = req.pos // self.scfg.page_size + 1
+    def _ensure_pages(self, req: Request, k: int = 1) -> bool:
+        """Provision ``req`` for the next ``k`` decode positions: allocate
+        the tail pages covering pos .. pos+k-1 and promote every
+        non-resident page — the whole span must be HBM-resident for the
+        dispatch's block table."""
+        need = (req.pos + k - 1) // self.scfg.page_size + 1
         while len(req.pages) < need:
             pid = self.kv.new_page(FAST)
             if pid is None:
                 return False
             req.pages.append(pid)
-        tail = req.pages[need - 1]
-        if not self.kv.is_resident(tail):
-            self.memos.engine.migrate_locked([tail], FAST)
-        return self.kv.is_resident(tail)
-
-    def _promote(self, req: Request) -> bool:
-        return self._promote_all([req])
+        mask = self.kv.resident_mask(req.pages)
+        if not mask.all():
+            cold = [p for p, m in zip(req.pages, mask) if not m]
+            self.memos.engine.migrate_locked(cold, FAST)
+            mask = self.kv.resident_mask(req.pages)
+        return bool(mask.all())
 
     def _promote_all(self, reqs: list[Request]) -> bool:
         """Promote every non-resident page of ``reqs`` in one batched
@@ -119,15 +152,17 @@ class PagedServingEngine:
         return self.batcher.preempt_lowest() is not None
 
     # -- jitted model compute ------------------------------------------------------
-    def _decode_batch(self, params, tokens, positions, block_tables,
-                      lengths, fast_pool):
-        """tokens [B,1] i32; positions [B]; block_tables [B,P] fast-slot
-        ids; lengths [B] (incl. current token); fast_pool donated.
-        Returns (logits [B, Vp], expert_counts|0, new fast_pool)."""
+    def _decode_core(self, params, tokens, positions, block_tables,
+                     lengths, fast_pool):
+        """One decode step for the batch: write the new token's K/V into
+        the pool *before* attention (exact self-attention), run the layer
+        stack through paged_attention.  tokens [B] i32; positions [B];
+        block_tables [B,P] fast-slot ids; lengths [B] (incl. current
+        token).  Returns (logits [B,Vp], expert_counts|0, new fast_pool)."""
         cfg = self.cfg
         page = self.scfg.page_size
         B = tokens.shape[0]
-        h = T.embed_in(params, cfg, {"tokens": tokens}, None)
+        h = T.embed_in(params, cfg, {"tokens": tokens[:, None]}, None)
         cos, sin = L.rope_angles(positions[:, None], cfg.head_dim,
                                  cfg.rope_theta)
         b_idx = jnp.arange(B)
@@ -159,7 +194,86 @@ class PagedServingEngine:
         logits = T.logits_out(params, cfg, h)[:, 0]
         return logits, counts_acc, fast_pool
 
-    # -- main loop -----------------------------------------------------------------
+    def _decode_batch(self, params, tokens, positions, block_tables,
+                      lengths, fast_pool):
+        """Retained K=1 reference entry point (tokens [B,1]); sampling and
+        SysMon charging stay on the host."""
+        return self._decode_core(params, tokens[:, 0], positions,
+                                 block_tables, lengths, fast_pool)
+
+    def _fused_decode(self, params, tokens, positions, prompt_buf,
+                      prompt_len, page_tables, block_tables, sm_state,
+                      fast_pool, *, k_steps: int):
+        """K inner decode steps in one dispatch: a ``lax.scan`` carrying
+        (tokens, positions, SysmonState, fast_pool, page-write counters).
+        Greedy sampling, the SysMon read/write scatter-adds, and the
+        fast-tier write counters all stay on device; the host gets back
+        one [K, B] token block per dispatch.
+
+        tokens/positions [B]; prompt_buf [B, Lp] padded prompt tokens;
+        prompt_len [B]; page_tables [B, P] logical page ids (SysMon's
+        id space); block_tables [B, P] fast-pool slots; sm_state and
+        fast_pool are donated loop state.
+        """
+        cfg = self.cfg
+        page = self.scfg.page_size
+        B, P = block_tables.shape
+        b_idx = jnp.arange(B)
+        col = jnp.arange(P, dtype=jnp.int32)[None, :]
+        vp = (params["embed"].shape[0] if cfg.tie_embeddings
+              else params["lm_head"].shape[1])
+        counts0 = (jnp.zeros((cfg.n_experts,), jnp.int32)
+                   if cfg.is_moe else jnp.int32(0))
+
+        def body(carry, _):
+            tokens, positions, sm, pool, page_writes, counts_acc, _ = carry
+            logits, counts, pool = self._decode_core(
+                params, tokens, positions, block_tables, positions + 1, pool)
+            # device-side greedy sampling feeds the next inner step
+            sampled = jnp.argmax(logits[:, :cfg.vocab],
+                                 axis=-1).astype(jnp.int32)
+            nxt_pos = positions + 1
+            prompt_next = prompt_buf[
+                b_idx, jnp.clip(nxt_pos, 0, prompt_buf.shape[1] - 1)]
+            nxt_tok = jnp.where(nxt_pos < prompt_len, prompt_next, sampled)
+            # SysMon: the exact access stream — one read sampling over the
+            # block-table prefix covering the current position, one write
+            # sampling on the tail page (same two-sampling cadence as the
+            # reference path, so pass counters are bit-comparable)
+            tailcol = positions // page
+            sm = sysmon_mod.record(
+                sm, page_tables.reshape(-1), is_write=False,
+                valid=(col <= tailcol[:, None]).reshape(-1))
+            tails = page_tables[b_idx, tailcol]
+            sm = sysmon_mod.record(sm, tails, is_write=True)
+            # fast-tier version/write counters (the dirty bits optimistic
+            # migration checks) accumulate on device, applied in bulk at
+            # the dispatch boundary
+            page_writes = page_writes.at[tails].add(1)
+            if cfg.is_moe:
+                counts_acc = counts_acc + counts
+            return (nxt_tok, nxt_pos, sm, pool, page_writes, counts_acc,
+                    logits), sampled
+
+        carry0 = (tokens, positions, sm_state, fast_pool,
+                  jnp.zeros((sm_state.n_pages,), jnp.int32), counts0,
+                  jnp.zeros((B, vp), jnp.float32))
+        (_, _, sm, pool, page_writes, counts, logits), sampled = \
+            jax.lax.scan(body, carry0, None, length=k_steps)
+        return sampled, logits, sm, pool, page_writes, counts
+
+    def _get_fused(self, k: int):
+        fn = self._fused_fns.get(k)
+        if fn is None:
+            # only the pool is donated: SysmonState fields routinely alias
+            # one shared zeros buffer (init/end_pass), which XLA rejects
+            # as a double donation — and the state is tiny anyway
+            fn = jax.jit(partial(self._fused_decode, k_steps=k),
+                         donate_argnums=(8,))       # fast_pool
+            self._fused_fns[k] = fn
+        return fn
+
+    # -- main loop (dispatch-boundary slow path) -----------------------------------
     def step(self) -> dict:
         # 1) admit / resume; make room by preempting if promotion fails
         while True:
@@ -170,7 +284,7 @@ class PagedServingEngine:
             for req in admitted:
                 if req.start_step is None:
                     req.start_step = self.step_count
-                if not (self._promote(req) and self._ensure_page(req)):
+                if not self._ensure_pages(req):
                     ok = False
             if not ok and not self._make_room():
                 break
@@ -181,12 +295,34 @@ class PagedServingEngine:
             self.step_count += 1
             return stats
 
-        for req in list(active):
-            while not self._ensure_page(req):
-                if not self._make_room():
-                    raise RuntimeError("HBM+host pools exhausted")
-            if req.preempted:       # got preempted while making room
-                active.remove(req)
+        # 2) size the dispatch: K bounded by every sequence's remaining
+        # budget (rows stay live for the whole dispatch — finished
+        # sequences retire exactly at the boundary), snapped to a power of
+        # two so the set of compiled scan lengths stays small
+        if self.scfg.reference:
+            k = 1
+        else:
+            k = max(min(self.scfg.decode_block,
+                        min(r.remaining_steps for r in active)), 1)
+            k = 1 << (k.bit_length() - 1)
+
+        # 3) provision: pre-reserve tail pages for all K positions; under
+        # HBM pressure first shrink the dispatch, then preempt (the K=1
+        # reference semantics) — preempting to feed a large dispatch
+        # would thrash
+        while True:
+            ok = True
+            for req in active:
+                if not req.preempted and not self._ensure_pages(req, k):
+                    ok = False
+                    break
+            if ok:
+                break
+            if k > 1:
+                k //= 2
+            elif not self._make_room():
+                raise RuntimeError("HBM+host pools exhausted")
+        active = [r for r in active if not r.preempted]
         if not active:
             self.step_count += 1
             return stats
@@ -194,61 +330,81 @@ class PagedServingEngine:
         B = len(active)
         P = self.scfg.max_pages_per_seq
         page = self.scfg.page_size
-        tokens = np.zeros((B, 1), np.int32)
-        positions = np.zeros((B,), np.int32)
-        block_tables = np.zeros((B, P), np.int32)
-        lengths = np.zeros((B,), np.int32)
-        for i, req in enumerate(active):
-            seq = req.prompt + req.generated
-            tokens[i, 0] = seq[req.pos]
-            positions[i] = req.pos
-            lengths[i] = req.pos + 1
-            pg = req.pages[:P]
-            # one vectorized page-table lookup per row (no per-page loop)
-            block_tables[i, :len(pg)] = self.kv.fast_slots_of(pg)
-
-        # 2) jitted decode: KV write into the pool + paged attention
         store = self.kv.store
-        logits, ecounts, store.fast_pool = self._decode_fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(positions),
-            jnp.asarray(block_tables), jnp.asarray(lengths),
-            store.fast_pool)
+        positions = np.array([r.pos for r in active], np.int32)
+        prompt_lens = np.array([len(r.prompt) for r in active], np.int32)
+        tokens = np.array([(r.prompt + r.generated)[r.pos] for r in active],
+                          np.int32)
+        page_tables, block_tables = self.kv.fill_tables(
+            [r.pages for r in active], P)
+
+        if self.scfg.reference:
+            # -- retained K=1 reference path (parity oracle / baseline) ----
+            logits, ecounts, store.fast_pool = self._decode_fn(
+                self.params, jnp.asarray(tokens[:, None]),
+                jnp.asarray(positions), jnp.asarray(block_tables),
+                jnp.asarray(positions + 1), store.fast_pool)
+            # host-side argmax sampling: one transfer per token
+            sampled = np.asarray(
+                jnp.argmax(logits[:, :self.cfg.vocab], axis=-1),
+                np.int32)[None, :]
+            # standalone per-step SysMon records — the host round-trips the
+            # fused path folds into its scan
+            read_valid = np.arange(P)[None, :] <= (positions // page)[:, None]
+            self.sysmon = sysmon_mod.record(
+                self.sysmon, jnp.asarray(page_tables.reshape(-1)),
+                is_write=False, valid=jnp.asarray(read_valid.reshape(-1)))
+            tails = page_tables[np.arange(B), positions // page]
+            self.sysmon = sysmon_mod.record(
+                self.sysmon, jnp.asarray(tails), is_write=True)
+            page_writes = np.zeros(store.cfg.n_pages, np.int64)
+            np.add.at(page_writes, tails, 1)
+            self.last_logits = logits
+        else:
+            # -- fused K-step dispatch -------------------------------------
+            prompt_buf = np.zeros((B, P * page), np.int32)
+            for i, r in enumerate(active):
+                prompt_buf[i, :len(r.prompt)] = r.prompt
+            fn = self._get_fused(k)
+            (sampled_d, logits, self.sysmon, store.fast_pool,
+             page_writes_d, ecounts) = fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(prompt_buf), jnp.asarray(prompt_lens),
+                jnp.asarray(page_tables), jnp.asarray(block_tables),
+                self.sysmon, store.fast_pool)
+            sampled = np.asarray(sampled_d)   # one transfer per K tokens
+            page_writes = np.asarray(page_writes_d)
+            self.last_logits = logits
+
         if self.expert_counts is not None:
             self.expert_counts += np.asarray(ecounts, np.int64)
 
-        # 3) advance sequences / sample
-        nxt = np.asarray(jnp.argmax(logits[:, :self.cfg.vocab], axis=-1))
+        # 4) fast-tier accounting, vectorized: device-counted page writes
+        # bump versions in one add; the read count is closed-form
+        n_reads = int(((positions[:, None] + np.arange(k)[None, :])
+                       // page + 1).sum())
+        store.charge_fast_accesses(page_writes, n_reads)
+
+        # 5) advance sequences from the returned token block: tokens
+        # sampled at inner step s >= emit_from[i] are new generations
+        emit_from = np.maximum(prompt_lens - 1 - positions, 0)
         for i, req in enumerate(active):
-            pos_i = int(positions[i])             # pre-advance position
-            tail = req.pages[pos_i // page]
-            store.version[tail] += 1              # dirty bit for migration
-            store.writes_to[FAST] += 1
-            req.tokens.append(int(tokens[i, 0]))
-            if pos_i + 1 >= len(req.prompt):      # logits predict a new token
-                req.generated.append(int(nxt[i]))
-                self.tokens_out += 1
-            done = len(req.generated) >= req.max_new
-            if done:
-                self.batcher.finish(req, self.step_count)
+            new_gen = [int(t) for t in sampled[emit_from[i]:k, i]]
+            req.generated.extend(new_gen)
+            self.tokens_out += len(new_gen)
+            seq = req.prompt + req.generated
+            p0 = int(positions[i])
+            req.tokens.extend(seq[p0:p0 + k])
+            if len(req.generated) >= req.max_new:
+                self.batcher.finish(req, self.step_count + k - 1)
                 for pid in req.pages:
                     self.kv.free_page(pid)
                 req.pages = []
 
-        # 4) SysMon charging: exact page-access stream
-        touched = [pid for req in active for pid in req.pages]
-        tails = [req.pages[min(req.pos // page, len(req.pages) - 1)]
-                 for req in active if req.pages]
-        if touched:
-            self.sysmon = sysmon_mod.record(
-                self.sysmon, jnp.asarray(touched, jnp.int32), is_write=False)
-            store.reads_from[FAST] += len(touched)
-        if tails:
-            self.sysmon = sysmon_mod.record(
-                self.sysmon, jnp.asarray(tails, jnp.int32), is_write=True)
-
-        # 5) memos loop (hot pages stay; cold/preempted pages drain to host)
+        # 6) memos loop between dispatches (hot pages stay; cold/preempted
+        # pages drain to host) — pass granularity, off the decode hot path
         if self.scfg.memos_enabled:
-            self.sysmon, report = self.memos.maybe_step(self.sysmon)
+            self.sysmon, report = self.memos.maybe_step(self.sysmon, steps=k)
             if report is not None:
                 stats["memos"] = {
                     "migrated": report.migrations.migrated,
@@ -263,11 +419,12 @@ class PagedServingEngine:
                         "dynamic_power_mw": report.nvm.dynamic_power_mw,
                         "lifetime_years": report.nvm.lifetime_years_actual,
                     }
-                # single bulk promotion for every page the memos pass demoted
-                # out from under a still-running sequence
+                # single bulk promotion for every page the memos pass
+                # demoted out from under a still-running sequence
                 self._promote_all(list(self.batcher.active))
 
-        self.step_count += 1
+        self.step_count += k
+        stats["decode_block"] = k
         stats["tokens_out"] = self.tokens_out
         stats.update(self.kv.occupancy())
         return stats

@@ -80,6 +80,22 @@ class PagedKVCache:
             f"non-resident pages in {pids.tolist()}"
         return self.store.slot[pids].astype(np.int32)
 
+    def fill_tables(self, pages_rows: list[list[int]],
+                    n_cols: int) -> tuple[np.ndarray, np.ndarray]:
+        """(page_tables, block_tables) int32 [B, n_cols] for a batch of
+        sequences' logical page lists: logical ids feed SysMon charging,
+        fast-pool slots feed the paged_attention kernel.  One vectorized
+        page-table lookup per row (no per-page loops); unused columns are
+        zero and must be masked by position/length downstream."""
+        B = len(pages_rows)
+        page_tables = np.zeros((B, n_cols), np.int32)
+        block_tables = np.zeros((B, n_cols), np.int32)
+        for i, pg in enumerate(pages_rows):
+            pg = pg[:n_cols]
+            page_tables[i, :len(pg)] = pg
+            block_tables[i, :len(pg)] = self.fast_slots_of(pg)
+        return page_tables, block_tables
+
     # -- data access -------------------------------------------------------------
     def write_token_kv(self, pid: int, layer_kv: jnp.ndarray,
                        offset: int) -> None:

@@ -35,6 +35,14 @@ class Request:
     def pos(self) -> int:
         return len(self.tokens)
 
+    @property
+    def remaining_steps(self) -> int:
+        """Decode steps left until this request finishes: the unconsumed
+        prompt prefix (steps that don't emit) plus the generation budget.
+        The engine sizes its fused dispatch K so no sequence overruns."""
+        return max(len(self.prompt) - 1 - self.pos, 0) + \
+            (self.max_new - len(self.generated))
+
 
 class ContinuousBatcher:
     def __init__(self, max_batch: int):

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
-from repro.kernels.hotness_update import sysmon_pass, sysmon_pass_ref
+from repro.kernels.hotness_update import (sysmon_pass, sysmon_pass_ref,
+                                          touch_update, touch_update_ref)
 from repro.kernels.page_gather import (page_gather, page_gather_ref,
                                        page_scatter, page_scatter_ref)
 from repro.kernels.paged_attention import paged_attention, paged_attention_ref
@@ -136,3 +137,26 @@ def test_sysmon_pass_kernel(n, block):
     np.testing.assert_array_equal(np.asarray(wd), np.asarray(wdr))
     np.testing.assert_array_equal(np.asarray(nh), np.asarray(nhr))
     np.testing.assert_array_equal(np.asarray(fut), np.asarray(futr))
+
+
+@pytest.mark.parametrize("n,k", [(64, 9), (300, 200), (512, 1)])
+def test_touch_update_kernel(n, k):
+    """Per-sampling touch scatter-add: Pallas (interpret), XLA fallback,
+    and numpy oracle all agree, including duplicate ids, masked (padded)
+    events, and the touched dedupe."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    ids = jax.random.randint(ks[0], (k,), 0, n)
+    is_write = jax.random.bernoulli(ks[1], 0.4, (k,))
+    valid = jax.random.bernoulli(ks[2], 0.8, (k,))
+    want = touch_update_ref(n, np.asarray(ids), np.asarray(is_write),
+                            np.asarray(valid))
+    for interpret in (True, None):      # Pallas interpreter / XLA scatter
+        got = touch_update(n, ids, is_write, valid, interpret=interpret,
+                           block=128)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), w)
+    # scalar is_write broadcast + no mask
+    got = touch_update(n, ids, True, interpret=True, block=128)
+    want = touch_update_ref(n, np.asarray(ids), True)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), w)
