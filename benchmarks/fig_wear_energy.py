@@ -29,7 +29,7 @@ def build(args, memos_on: bool):
     import jax.numpy as jnp
     from repro.core import sysmon
     from repro.core.memos import MemosConfig, MemosManager
-    from repro.core.placement import SLOW
+    from repro.core.hierarchy import SLOW
     from repro.core.tiers import TierConfig, TierStore
 
     store = TierStore(TierConfig(
@@ -54,7 +54,7 @@ def build(args, memos_on: bool):
 def run_mode(args, memos_on: bool) -> dict:
     import jax.numpy as jnp
     from repro.core import sysmon
-    from repro.core.placement import FAST
+    from repro.core.hierarchy import FAST
 
     store, mgr, sm = build(args, memos_on)
     rng = np.random.RandomState(args.seed + 1)

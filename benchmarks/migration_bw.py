@@ -27,7 +27,7 @@ ROOT = Path(__file__).resolve().parents[1]
 
 def build_store(n_pages, fast_slots, page_shape):
     import jax.numpy as jnp
-    from repro.core.placement import SLOW
+    from repro.core.hierarchy import SLOW
     from repro.core.tiers import TierConfig, TierStore
     s = TierStore(TierConfig(n_pages=n_pages, fast_slots=fast_slots,
                              slow_slots=n_pages, page_shape=page_shape,
@@ -43,7 +43,7 @@ def build_store(n_pages, fast_slots, page_shape):
 def round_trip(engine, pages):
     """Promote `pages` slow->fast (locked path), then demote them back
     fast->slow (optimistic path) — the memos pass's two bulk directions."""
-    from repro.core.placement import FAST, SLOW
+    from repro.core.hierarchy import FAST, SLOW
     st1 = engine.migrate_locked(pages, FAST)
     st2 = engine.migrate_optimistic(pages, SLOW)
     assert st1.migrated == len(pages) and st2.migrated == len(pages), \

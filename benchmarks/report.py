@@ -147,6 +147,31 @@ def serving_sweep_rows(r: dict) -> list[str]:
     return lines
 
 
+def hierarchy_sweep_rows(r: dict) -> list[str]:
+    """Render the hierarchy_sweep 2-tier vs 3-tier comparison: tokens/s,
+    migrations, per-tier peak occupancy and dynamic energy."""
+    lines = ["| config | hierarchy | tok/s | migrated | "
+             "occupancy (peak/slots) | tier energy (mJ) |",
+             "|---|---|---|---|---|---|"]
+    for name, row in sorted(r.get("sweep", {}).items()):
+        occ = "; ".join(
+            f"{k}: {v['peak_used']}/{v['slots']}"
+            for k, v in row.get("occupancy", {}).items())
+        en = "; ".join(f"{k}: {v:.3g}"
+                       for k, v in row.get("tier_energy_mj", {}).items())
+        lines.append(f"| {name} | {row.get('hierarchy', '?')} | "
+                     f"{row.get('tokens_per_s', 0):.1f} | "
+                     f"{row.get('migrated', 0)} | {occ} | {en} |")
+    ok = r.get("three_tier_migrates_both_boundaries")
+    if ok is not None:
+        lines.append("")
+        lines.append(f"3-tier migrates across both boundaries: "
+                     f"{'yes' if ok else 'NO'} "
+                     f"(HBM {r.get('three_tier_hbm_boundary_bytes', 0)} B, "
+                     f"NVM {r.get('three_tier_nvm_boundary_bytes', 0)} B)")
+    return lines
+
+
 def results_table(results_dir: Path = RESULTS) -> str:
     """One markdown table over every result JSON in ``results_dir``."""
     lines = ["# Benchmark results", ""]
@@ -163,6 +188,10 @@ def results_table(results_dir: Path = RESULTS) -> str:
         if isinstance(r, dict) and "sweep" in r and f.name.startswith(
                 "serving_throughput"):
             lines += serving_sweep_rows(r)
+            lines.append("")
+        if isinstance(r, dict) and "sweep" in r and f.name.startswith(
+                "hierarchy_sweep"):
+            lines += hierarchy_sweep_rows(r)
             lines.append("")
         lines += ["| metric | value |", "|---|---|"]
         rows = (_scalar_rows(r) if isinstance(r, dict)

@@ -26,7 +26,9 @@ import numpy as np
 from repro.core import costmodel as cm
 from repro.core import patterns, predictor
 
-FAST, SLOW = 0, 1
+# tier indices for the trace emulation's two-channel machine model —
+# imported from the core two-tier compatibility shim
+from repro.core.hierarchy import FAST, SLOW  # noqa: E402
 
 
 # =============================================================================

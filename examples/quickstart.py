@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core import sysmon
 from repro.core.memos import MemosConfig, MemosManager
-from repro.core.placement import FAST, SLOW
+from repro.core.hierarchy import FAST, SLOW
 from repro.core.tiers import TierConfig, TierStore
 
 N_PAGES, FAST_SLOTS = 64, 16

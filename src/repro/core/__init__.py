@@ -5,19 +5,22 @@ Modules:
   predictor  — write-history window prediction + Reverse rule (Sec. 3.2)
   sysmon     — on-device profiling counters + pass harvesting (Sec. 4.2)
   allocator  — color-indexed sub-buddy allocator (Sec. 6.2)
+  hierarchy  — MediumSpec / MemoryHierarchy N-tier description (Sec. 1)
   placement  — channel policy, hotness list, Algorithm 2 (Sec. 5.2/5.3)
   migration  — locked + optimistic (unlocked-DMA) migration (Sec. 6.3)
-  tiers      — hybrid fast/slow page store (MCHA analogue, Sec. 5.1)
+  tiers      — N-tier hybrid page store (MCHA analogue, Sec. 5.1)
   memos      — the periodic management loop (Fig. 10)
   costmodel  — Table-1 latency/energy/lifetime model (Sec. 7.1)
 """
-from . import (allocator, costmodel, memos, migration, patterns, placement,
-               predictor, sysmon, tiers)
+from . import (allocator, costmodel, hierarchy, memos, migration, patterns,
+               placement, predictor, sysmon, tiers)
+from .hierarchy import MediumSpec, MemoryHierarchy
 from .memos import MemosConfig, MemosManager
-from .tiers import TierConfig, TierStore
+from .tiers import StoreConfig, TierConfig, TierStore
 
 __all__ = [
-    "allocator", "costmodel", "memos", "migration", "patterns", "placement",
-    "predictor", "sysmon", "tiers", "MemosConfig", "MemosManager",
+    "allocator", "costmodel", "hierarchy", "memos", "migration", "patterns",
+    "placement", "predictor", "sysmon", "tiers", "MediumSpec",
+    "MemoryHierarchy", "MemosConfig", "MemosManager", "StoreConfig",
     "TierConfig", "TierStore",
 ]

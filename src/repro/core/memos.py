@@ -1,4 +1,5 @@
-"""MemosManager — the periodic full-hierarchy management loop (Fig. 10).
+"""MemosManager — the periodic full-hierarchy management loop (Fig. 10),
+generic over the tiers of a :class:`~repro.core.hierarchy.MemoryHierarchy`.
 
 Ties SysMon -> predictor -> placement -> migration together:
 
@@ -6,15 +7,18 @@ Ties SysMon -> predictor -> placement -> migration together:
     1. close the SysMon sampling pass (WD counts over Window_Len history)
     2. predict each page's future state (+ Reverse check over K_Len)
     3. mark will-be-migrated pages, rank the hotness list (WD_FREQ_H first)
-    4. migrate: locked slow->fast for hot/WD, optimistic fast->slow bulk;
-       destination slots via Algorithm 2 (coldest bank x coldest slab)
-    5. bandwidth balancing: spill RD (then coolest WD) pages to the slow
-       channel while the fast channel is saturated
+    4. migrate: locked promotions toward tier 0 for hot/WD pages,
+       optimistic bulk demotions toward the slower tiers; destination
+       slots via Algorithm 2 (coldest bank x coldest slab) in the
+       destination tier's own allocator
+    5. bandwidth balancing: spill RD (then coolest WD) pages off the
+       fast channel while it is saturated
     6. NVM telemetry (Sec. 7.1): close the energy/lifetime accounting
-       window; when the projected lifetime from the live wear counters
-       drops below ``lifetime_horizon_years``, the *next* pass plans with
-       a wear penalty — WD pages are pinned/promoted to the fast tier and
-       excluded from bandwidth spills until the projection recovers.
+       window of **every wear-tracked tier**; when any tier's projected
+       lifetime from the live wear counters drops below
+       ``lifetime_horizon_years``, the *next* pass plans with a wear
+       penalty — WD pages are pinned/promoted to the fast tier, ranked
+       first in the HL, and excluded from bandwidth spills.
 
 Overhead controls from Sec. 7.4 are exposed: sampling subset fraction and
 an adaptively growing interval once patterns stabilize.
@@ -27,7 +31,7 @@ import numpy as np
 
 from . import sysmon as sysmon_mod
 from .migration import MigrationStats, make_engine
-from .placement import FAST, SLOW, BandwidthBalancer, plan
+from .placement import BandwidthBalancer, plan
 from .tiers import TierStore
 
 
@@ -41,8 +45,8 @@ class MemosConfig:
     interval_max: int = 256
     stability_threshold: float = 0.02  # fraction of pages changing target
     engine: str = "batched"       # "batched" (device bulk) | "reference"
-    # NVM wear feedback (Sec. 7.1): act when the projected lifetime from
-    # live wear counters drops below the horizon; None disables feedback.
+    # NVM wear feedback (Sec. 7.1): act when any wear-tracked tier's
+    # projected lifetime drops below the horizon; None disables feedback.
     lifetime_horizon_years: float | None = None
     wear_penalty: float = 4.0     # HL-ranking boost for WD pages under pressure
     pass_window_s: float = 1.0    # notional wall-clock span of one pass
@@ -53,11 +57,13 @@ class MemosReport:
     step: int
     migrations: MigrationStats
     n_marked: int
-    fast_pages: int
-    slow_pages: int
+    fast_pages: int               # pages resident in tier 0
+    slow_pages: int               # pages resident in the deepest tier
     bank_imbalance: float
     spilled: int = 0
-    nvm: object | None = None     # NvmReport for this pass (wear tracked)
+    tier_pages: list[int] = field(default_factory=list)  # per-tier residency
+    nvm: object | None = None     # deepest wear-tracked tier's NvmReport
+    nvm_by_tier: dict = field(default_factory=dict)  # tier -> NvmReport
     wear_pressure: bool = False   # wear penalty applied to this pass's plan
 
 
@@ -67,17 +73,25 @@ class MemosManager:
         self.cfg = cfg or MemosConfig()
         self.engine = make_engine(store, self.cfg.engine)
         self.balancer = BandwidthBalancer(self.cfg.fast_bw_bound)
-        self.meter = None
-        if store.wear is not None:
-            # lazy import: repro.nvm depends on core.costmodel
+        # one energy meter per wear-tracked tier (lazy import: repro.nvm
+        # depends on core.costmodel)
+        self.meters: dict[int, object] = {}
+        for t in store.hierarchy.wear_tiers():
             from repro.nvm.energy import EnergyMeter
-            self.meter = EnergyMeter(store, window_s=self.cfg.pass_window_s)
+            self.meters[t] = EnergyMeter(store, tier=t,
+                                         window_s=self.cfg.pass_window_s)
         self.interval = self.cfg.interval
         self._last_target: np.ndarray | None = None
         self._steps_since = 0
         self._last_pass_step = 0
         self.reports: list[MemosReport] = []
         self.step_count = 0
+
+    @property
+    def meter(self):
+        """Deepest wear-tracked tier's meter (two-tier compat alias)."""
+        wt = self.store.hierarchy.wear_tiers()
+        return self.meters[wt[-1]] if wt else None
 
     def maybe_step(self, sm_state: sysmon_mod.SysmonState,
                    fast_bw_util: float = 0.0, steps: int = 1):
@@ -103,16 +117,18 @@ class MemosManager:
         sm_state, summary = sysmon_mod.end_pass(sm_state)
 
         # 3) plan: mark will-be-migrated, rank HL; under NVM wear pressure
-        # (projected lifetime below the horizon) WD pages get the penalty
-        # term: pinned to fast, ranked first, excluded from spills
+        # (any wear-tracked tier's projected lifetime below the horizon) WD
+        # pages get the penalty term: pinned to fast, ranked first,
+        # excluded from spills
         wear_pressure = False
-        if self.meter is not None and self.cfg.lifetime_horizon_years:
-            wear_pressure = (self.meter.project_lifetime()
-                             < self.cfg.lifetime_horizon_years)
+        if self.meters and self.cfg.lifetime_horizon_years:
+            wear_pressure = any(
+                m.project_lifetime() < self.cfg.lifetime_horizon_years
+                for m in self.meters.values())
         penalty = self.cfg.wear_penalty if wear_pressure else 0.0
         current = self.store.tier.copy()
         decision = plan(summary, current, max_migrations=self.cfg.max_migrations,
-                        wear_penalty=penalty)
+                        wear_penalty=penalty, hierarchy=self.store.hierarchy)
 
         bank_freq = np.asarray(summary.bank_freq)
         slab_freq = np.asarray(summary.slab_freq)
@@ -121,14 +137,15 @@ class MemosManager:
         # 4) migrate
         stats = self.engine.execute(decision, bank_freq, slab_freq, reuse)
 
-        # 5) bandwidth balancing (spill while fast channel saturated)
+        # 5) bandwidth balancing (spill off the fast channel into the next
+        # tier down while the fast channel is saturated)
         spilled = 0
         if self.balancer.update(fast_bw_util):
             cands = self.balancer.spill_candidates(
                 np.asarray(summary.wd_code), np.asarray(summary.hotness),
                 self.store.tier, n=self.cfg.max_migrations or 64,
                 exclude_wd=wear_pressure)
-            st = self.engine.migrate_optimistic(cands, SLOW, bank_freq,
+            st = self.engine.migrate_optimistic(cands, 1, bank_freq,
                                                 slab_freq, reuse)
             spilled = st.migrated
 
@@ -143,26 +160,33 @@ class MemosManager:
                 self.interval = self.cfg.interval
         self._last_target = tgt
 
-        # 6) close the NVM telemetry window (energy + lifetime projection);
-        # scale the window by the steps this pass actually covered so
-        # adaptive interval growth doesn't inflate the apparent wear rate
-        nvm = None
-        if self.meter is not None:
+        # 6) close every wear-tracked tier's telemetry window (energy +
+        # lifetime projection); scale the window by the steps this pass
+        # actually covered so adaptive interval growth doesn't inflate the
+        # apparent wear rate
+        nvm_by_tier = {}
+        if self.meters:
             steps = self.step_count - self._last_pass_step
             window = (self.cfg.pass_window_s * steps / self.cfg.interval
                       if steps > 0 else self.cfg.pass_window_s)
-            nvm = self.meter.end_pass(window_s=window)
+            nvm_by_tier = {t: m.end_pass(window_s=window)
+                           for t, m in self.meters.items()}
         self._last_pass_step = self.step_count
 
+        tier_pages = [int((self.store.tier == t).sum())
+                      for t in range(self.store.n_tiers)]
+        wt = self.store.hierarchy.wear_tiers()
         report = MemosReport(
             step=self.step_count,
             migrations=stats,
             n_marked=int(decision.migrate.sum()),
-            fast_pages=int((self.store.tier == FAST).sum()),
-            slow_pages=int((self.store.tier == SLOW).sum()),
+            fast_pages=tier_pages[0],
+            slow_pages=tier_pages[-1],
             bank_imbalance=float(np.std(bank_freq)),
             spilled=spilled,
-            nvm=nvm,
+            tier_pages=tier_pages,
+            nvm=nvm_by_tier.get(wt[-1]) if wt else None,
+            nvm_by_tier=nvm_by_tier,
             wear_pressure=wear_pressure,
         )
         self.reports.append(report)

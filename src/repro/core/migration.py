@@ -1,14 +1,26 @@
-"""Migration engines (paper Sec. 6.3, Fig. 10 step 4): plan/execute split.
+"""Migration engines (paper Sec. 6.3, Fig. 10 step 4): plan/execute split,
+generic over the tiers of a :class:`~repro.core.hierarchy.MemoryHierarchy`.
 
 Migration is two phases with a narrow interface between them:
 
   * **plan** (host) — the memos pass walks the hotness list, picks each
     page's destination slot per Algorithm 2 (coldest bank, then coldest
     non-reserved slab; reserved-slab routing for Thrashing/Rarely-touched
-    pages), and reserves the slots in the sub-buddy allocator.  The output
-    is a ``MigrationPlan``: parallel arrays of (page, src slot, dst slot)
-    plus a per-page version snapshot for the dirty check.
-  * **execute** (device) — the plan is applied as bulk data movement.
+    pages), and reserves the slots in the destination tier's sub-buddy
+    allocator.  The output is a ``MigrationPlan``: parallel arrays of
+    (page, src tier, src slot, dst slot) plus a destination tier and a
+    per-page version snapshot for the dirty check.  One plan moves pages
+    from *any* mix of source tiers into one destination tier.
+  * **execute** (device) — the plan is applied as bulk data movement per
+    (source, destination) residency pair:
+
+      - device -> device: Pallas ``page_gather`` out of the source pool,
+        ``page_scatter`` into the destination pool — the whole move stays
+        on-accelerator (the HBM -> DRAM-sim path);
+      - device -> host: gather into contiguous device staging, then
+        chunked double-buffered async device->host copies;
+      - host -> device: staged host->device uploads + donated-pool scatter;
+      - host -> host: one vectorized numpy copy.
 
 Two engines implement execute:
 
@@ -16,29 +28,27 @@ Two engines implement execute:
     host-side per-page copy loop.  Retained as the parity oracle
     (tests/test_batched_migration.py) and as the slow baseline in
     benchmarks/migration_bw.py.
-  * ``BatchedMigrationEngine`` — the **device-resident** fast path.  One
-    bulk move per direction: evicted fast-pool pages are packed into a
-    contiguous staging buffer by the ``kernels/page_gather`` Pallas kernel
-    (XLA gather off-TPU) and streamed to the host slow tier through
-    chunked, double-buffered async device→host copies; promoted pages are
-    staged host→device the same way and scattered into their planned
-    slots with a donated pool buffer, so the whole batch costs one
-    compiled dispatch per chunk instead of one per page.
+  * ``BatchedMigrationEngine`` — the **device-resident** fast path
+    described above; one compiled dispatch per chunk instead of one per
+    page.
 
 Both engines expose the same two paths, matching the paper:
 
   * ``locked``     — synchronous copy, commit unconditionally; used for
-                     small batches of hot/WD pages moving slow->fast.
+                     small batches of hot/WD pages moving toward tier 0.
   * ``optimistic`` — unlocked DMA-style copy: snapshot per-page version
                      counters, copy without blocking writers, commit only
                      pages whose version did not advance mid-copy (the
                      paper's post-hoc dirty-bit check), retry dirtied
-                     pages iteratively.  Used for bulk cold/RD fast->slow
-                     moves, which are rarely dirtied mid-copy.
+                     pages iteratively.  Used for bulk cold/RD demotions,
+                     which are rarely dirtied mid-copy.
 
 The engines make identical allocator calls in identical order, so for the
 same inputs they produce identical tier/slot tables and pool contents —
-that equivalence is what the parity suite pins down.
+that equivalence is what the parity suite pins down.  (When one plan
+mixes several *source* tiers the batched engine moves them grouped by
+source tier; logical state stays identical, only the physical write order
+onto wear-leveled pools may differ from the reference's interleaving.)
 """
 from __future__ import annotations
 
@@ -49,14 +59,15 @@ import jax
 import numpy as np
 
 from . import placement
-from .placement import FAST, SLOW
 from .tiers import TierStore, NO_SLOT
 
 # Bump when engine semantics / data layout change; recorded in benchmark
 # result JSONs so trajectory comparisons across machines and revisions
 # aren't apples-to-oranges.
-ENGINE_VERSION = "2.0"  # 1.x: per-page reference loop; 2.x: batched bulk
-                        # mover + NVM wear accounting on the slow path
+ENGINE_VERSION = "3.0"  # 1.x: per-page reference loop; 2.x: batched bulk
+                        # mover + NVM wear accounting on the slow path;
+                        # 3.x: N-tier plans (per-page src tier, device<->
+                        # device moves)
 
 
 def bench_env() -> dict:
@@ -74,8 +85,14 @@ class MigrationStats:
     dirty_discards: int = 0
     retries: int = 0
     bytes_moved: int = 0
-    to_fast: int = 0
-    to_slow: int = 0
+    to_fast: int = 0              # moves into tier 0
+    to_slow: int = 0              # moves into any slower tier
+    by_pair: dict = field(default_factory=dict)   # (src, dst) -> pages moved
+
+    def note_move(self, src_tier: int, dst_tier: int, n: int = 1) -> None:
+        if n:
+            key = (int(src_tier), int(dst_tier))
+            self.by_pair[key] = self.by_pair.get(key, 0) + n
 
     def merge(self, other: "MigrationStats") -> None:
         self.migrated += other.migrated
@@ -84,6 +101,8 @@ class MigrationStats:
         self.bytes_moved += other.bytes_moved
         self.to_fast += other.to_fast
         self.to_slow += other.to_slow
+        for k, v in other.by_pair.items():
+            self.by_pair[k] = self.by_pair.get(k, 0) + v
 
 
 # =============================================================================
@@ -154,22 +173,20 @@ def _alloc_target_slot(store: TierStore, dst_tier: int,
 
 @dataclass
 class MigrationPlan:
-    """A reserved, executable bulk move in one direction.
+    """A reserved, executable bulk move into one destination tier.
 
-    ``pages[i]`` moves ``src_slots[i]`` (in the source tier) ->
-    ``dst_slots[i]`` (reserved in ``dst_tier``).  ``trivial`` counts pages
-    that were requested but already sit in ``dst_tier`` (the locked path
-    reports them as migrated without moving data, like the reference).
+    ``pages[i]`` moves from ``src_tiers[i]`` / ``src_slots[i]`` ->
+    ``dst_slots[i]`` (reserved in ``dst_tier``).  Source tiers may be
+    mixed within one plan.  ``trivial`` counts pages that were requested
+    but already sit in ``dst_tier`` (the locked path reports them as
+    migrated without moving data, like the reference).
     """
     dst_tier: int
     pages: np.ndarray       # int64 [k]
+    src_tiers: np.ndarray   # int8  [k]
     src_slots: np.ndarray   # int64 [k]
     dst_slots: np.ndarray   # int64 [k]
     trivial: int = 0
-
-    @property
-    def src_tier(self) -> int:
-        return FAST if self.dst_tier == SLOW else SLOW
 
     def __len__(self) -> int:
         return int(self.pages.size)
@@ -185,6 +202,7 @@ def plan_locked(store: TierStore, pages: Iterable[int], dst_tier: int,
     slots)."""
     bank_freq = None if bank_freq is None else np.array(bank_freq)
     mv_pages: list[int] = []
+    src_tiers: list[int] = []
     src_slots: list[int] = []
     dst_slots: list[int] = []
     planned: dict[int, int] = {}            # page -> reserved dst slot
@@ -212,6 +230,7 @@ def plan_locked(store: TierStore, pages: Iterable[int], dst_tier: int,
         if new_slot is None:
             continue
         mv_pages.append(p)
+        src_tiers.append(int(store.tier[p]))
         src_slots.append(cur_slot)
         dst_slots.append(new_slot)
         planned[p] = new_slot
@@ -219,6 +238,7 @@ def plan_locked(store: TierStore, pages: Iterable[int], dst_tier: int,
     return MigrationPlan(
         dst_tier=dst_tier,
         pages=np.asarray(mv_pages, np.int64),
+        src_tiers=np.asarray(src_tiers, np.int8),
         src_slots=np.asarray(src_slots, np.int64),
         dst_slots=np.asarray(dst_slots, np.int64),
         trivial=trivial,
@@ -230,18 +250,42 @@ def execute_decision(engine, decision: placement.PlacementDecision,
                      slab_freq: np.ndarray | None = None,
                      reuse_class: np.ndarray | None = None) -> MigrationStats:
     """Direction routing shared by both engines (Sec. 6.3 observed
-    asymmetry): slow->fast hot/WD pages take the locked path (small, must
-    be consistent *now*); fast->slow bulk cold/RD pages take the
-    optimistic DMA path."""
+    asymmetry): promotions — moves toward a faster tier, hot/WD pages —
+    take the locked path (small, must be consistent *now*); demotions —
+    bulk cold/RD moves toward slower tiers — take the optimistic DMA
+    path.  Pages are grouped per destination tier (shallowest first, in
+    hotness-list order within each group) so both engines make identical
+    allocator calls in identical order."""
     st = MigrationStats()
     hl = decision.hotness_list
-    to_fast = [p for p in hl if decision.target_tier[p] == FAST]
-    to_slow = [p for p in hl if decision.target_tier[p] == SLOW]
-    st.merge(engine.migrate_locked(to_fast, FAST, bank_freq, slab_freq,
-                                   reuse_class))
-    st.merge(engine.migrate_optimistic(to_slow, SLOW, bank_freq, slab_freq,
-                                       reuse_class))
+    cur = engine.store.tier
+    tgt = decision.target_tier
+    n_tiers = engine.store.n_tiers
+    promos = {t: [] for t in range(n_tiers)}
+    demos = {t: [] for t in range(n_tiers)}
+    for p in hl:
+        src, dst = int(cur[p]), int(tgt[p])
+        if dst == src:
+            continue
+        (promos if dst < src else demos)[dst].append(int(p))
+    for dst in range(n_tiers):
+        if promos[dst]:
+            st.merge(engine.migrate_locked(promos[dst], dst, bank_freq,
+                                           slab_freq, reuse_class))
+    for dst in range(n_tiers):
+        if demos[dst]:
+            st.merge(engine.migrate_optimistic(demos[dst], dst, bank_freq,
+                                               slab_freq, reuse_class))
     return st
+
+
+def _classify(st: MigrationStats, dst_tier: int, n: int) -> None:
+    """Two-tier compat stat buckets: moves into tier 0 count as to_fast,
+    everything else as to_slow."""
+    if dst_tier == 0:
+        st.to_fast += n
+    else:
+        st.to_slow += n
 
 
 # =============================================================================
@@ -268,16 +312,16 @@ class MigrationEngine:
         st = MigrationStats()
         bank_freq = None if bank_freq is None else np.array(bank_freq)
         for p in pages:
+            src_tier = int(self.store.tier[p])
             rc = None if reuse_class is None else int(reuse_class[p])
             color, mask = self._target_color(dst_tier, bank_freq, slab_freq, rc)
             ok = self.store.move_page(int(p), dst_tier, color, mask)
             if ok:
                 st.migrated += 1
                 st.bytes_moved += self.store.page_nbytes
-                if dst_tier == FAST:
-                    st.to_fast += 1
-                else:
-                    st.to_slow += 1
+                _classify(st, dst_tier, 1)
+                if src_tier != dst_tier:       # trivial moves shift no bytes
+                    st.note_move(src_tier, dst_tier)
                 if bank_freq is not None:
                     # account the move so subsequent picks spread across banks
                     cfg = self.store.alloc[dst_tier].cfg
@@ -329,22 +373,18 @@ class MigrationEngine:
                 if new_slot is None:
                     continue
                 old_tier, old_slot = int(self.store.tier[p]), int(self.store.slot[p])
-                if dst_tier == FAST:
-                    import jax.numpy as jnp
-                    self.store.fast_pool = self.store.fast_pool.at[new_slot].set(
-                        jnp.asarray(staged[p], self.store.cfg.dtype))
+                if self.store.is_device_tier(dst_tier):
+                    self.store.pools[dst_tier].write_one(new_slot, staged[p])
                 else:
-                    self.store._slow_write(new_slot, staged[p])
+                    self.store._host_write(dst_tier, new_slot, staged[p])
                 self.store.alloc[old_tier].free(old_slot, 0)
                 self.store.tier[p] = dst_tier
                 self.store.slot[p] = new_slot
                 self.store.traffic[(old_tier, dst_tier)] += self.store.page_nbytes
                 st.migrated += 1
                 st.bytes_moved += self.store.page_nbytes
-                if dst_tier == FAST:
-                    st.to_fast += 1
-                else:
-                    st.to_slow += 1
+                _classify(st, dst_tier, 1)
+                st.note_move(old_tier, dst_tier)
             pending = dirty
         self.stats.merge(st)
         return st
@@ -382,9 +422,10 @@ class BatchedMigrationEngine:
         self.stats = MigrationStats()
 
     # -- bulk staging ----------------------------------------------------------
-    def _stage_fast_to_host(self, slots: np.ndarray) -> np.ndarray:
-        """Gather fast-pool slots into contiguous device staging (Pallas
-        page_gather), then stream chunks to the host.  Each chunk's
+    def _stage_device_to_host(self, src_tier: int,
+                              slots: np.ndarray) -> np.ndarray:
+        """Gather a device tier's slots into contiguous device staging
+        (Pallas page_gather), then stream chunks to the host.  Each chunk's
         device→host copy is started asynchronously before the next chunk's
         gather is dispatched, so transfer overlaps packing."""
         slots = np.asarray(slots, np.int64)
@@ -392,7 +433,7 @@ class BatchedMigrationEngine:
             return np.zeros((0, *self.store.cfg.page_shape), np.float32)
         bufs = []
         for i in range(0, slots.size, self.chunk_pages):
-            g = self.store.gather_fast(slots[i:i + self.chunk_pages])
+            g = self.store.gather_device(src_tier, slots[i:i + self.chunk_pages])
             try:
                 g.copy_to_host_async()
             except AttributeError:      # older jax array types
@@ -400,9 +441,9 @@ class BatchedMigrationEngine:
             bufs.append(g)
         return np.concatenate([np.asarray(b, np.float32) for b in bufs])
 
-    def _stage_host_to_fast(self, dst_slots: np.ndarray,
-                            values: np.ndarray) -> None:
-        """Scatter host pages into their planned fast-pool slots (Pallas
+    def _stage_host_to_device(self, dst_tier: int, dst_slots: np.ndarray,
+                              values: np.ndarray) -> None:
+        """Scatter host pages into their planned device-pool slots (Pallas
         page_scatter, pool donated).  Chunk *i+1*'s host→device transfer is
         issued before chunk *i*'s scatter blocks, double-buffering the
         upload."""
@@ -416,30 +457,48 @@ class BatchedMigrationEngine:
             cur = nxt
             if i + c < k:
                 nxt = jax.device_put(values[i + c:i + 2 * c])
-            self.store.scatter_fast(dst_slots[i:i + c], cur)
+            self.store.scatter_device(dst_tier, dst_slots[i:i + c], cur)
+
+    def _move_group(self, src_tier: int, dst_tier: int,
+                    src_slots: np.ndarray, dst_slots: np.ndarray) -> None:
+        """Bulk-move one (src, dst) tier pair's data by residency:
+        device->device stays on-accelerator (gather + scatter), the
+        device<->host pairs go through chunked staging, host->host is one
+        vectorized numpy copy."""
+        store = self.store
+        src_dev = store.is_device_tier(src_tier)
+        dst_dev = store.is_device_tier(dst_tier)
+        if src_dev and dst_dev:
+            staged = store.gather_device(src_tier, src_slots)
+            store.scatter_device(dst_tier, dst_slots, staged)
+        elif src_dev:
+            staged = self._stage_device_to_host(src_tier, src_slots)
+            store.host_write_batch(dst_tier, dst_slots, staged)
+        elif dst_dev:
+            staged = store.host_read_batch(src_tier, src_slots)
+            self._stage_host_to_device(dst_tier, dst_slots, staged)
+        else:
+            staged = store.host_read_batch(src_tier, src_slots)
+            store.host_write_batch(dst_tier, dst_slots, staged)
 
     # -- plan execution --------------------------------------------------------
     def execute_plan(self, plan: MigrationPlan) -> MigrationStats:
-        """Apply a reserved plan as one bulk move (locked semantics: commit
-        unconditionally)."""
+        """Apply a reserved plan as one bulk move per source tier (locked
+        semantics: commit unconditionally)."""
         st = MigrationStats()
         k = len(plan)
         store = self.store
         if k:
-            if plan.dst_tier == FAST:
-                staged = store.slow_read_batch(plan.src_slots)
-                self._stage_host_to_fast(plan.dst_slots, staged)
-            else:
-                staged = self._stage_fast_to_host(plan.src_slots)
-                store.slow_write_batch(plan.dst_slots, staged)
-            store.reads_from[plan.src_tier] += k
+            for src_t in np.unique(plan.src_tiers):
+                idx = np.nonzero(plan.src_tiers == src_t)[0]
+                self._move_group(int(src_t), plan.dst_tier,
+                                 plan.src_slots[idx], plan.dst_slots[idx])
+                store.reads_from[int(src_t)] += idx.size
+                st.note_move(int(src_t), plan.dst_tier, idx.size)
             store.commit_moves(plan.pages, plan.dst_tier, plan.dst_slots)
         st.migrated = k + plan.trivial
         st.bytes_moved = (k + plan.trivial) * store.page_nbytes
-        if plan.dst_tier == FAST:
-            st.to_fast = st.migrated
-        else:
-            st.to_slow = st.migrated
+        _classify(st, plan.dst_tier, st.migrated)
         self.stats.merge(st)
         return st
 
@@ -476,14 +535,31 @@ class BatchedMigrationEngine:
                 break
             if attempt > 0:
                 st.retries += 1
-            # 1) snapshot versions, 2) unlocked bulk copy to staging
+            # 1) snapshot versions, 2) unlocked bulk copy to staging —
+            # one gather/read per source tier, all before the dirty check.
+            # device->device staging never leaves the accelerator (the
+            # dirty check only needs the host-side version array); only
+            # device->host moves pay the chunked transfer.
             vsnap = store.version[pending].copy()
+            src_tiers = store.tier[pending].copy()
             src_slots = store.slot[pending].copy()
-            if dst_tier == SLOW:
-                staged = self._stage_fast_to_host(src_slots)
-            else:
-                staged = store.slow_read_batch(src_slots)
-            store.reads_from[FAST if dst_tier == SLOW else SLOW] += pending.size
+            dst_dev = store.is_device_tier(dst_tier)
+            staged = {}                      # src tier -> group buffer
+            local_of = np.zeros(pending.size, np.int64)  # pos within group
+            groups = {int(t): np.nonzero(src_tiers == t)[0]
+                      for t in np.unique(src_tiers)}
+            for src_t, idx in groups.items():
+                local_of[idx] = np.arange(idx.size)
+                if not store.is_device_tier(src_t):
+                    staged[src_t] = store.host_read_batch(src_t,
+                                                          src_slots[idx])
+                elif dst_dev:
+                    staged[src_t] = store.gather_device(src_t,
+                                                        src_slots[idx])
+                else:
+                    staged[src_t] = self._stage_device_to_host(
+                        src_t, src_slots[idx])
+                store.reads_from[src_t] += idx.size
             if concurrent_writer is not None:
                 concurrent_writer()
                 concurrent_writer = None  # writer fires once
@@ -505,17 +581,24 @@ class BatchedMigrationEngine:
             if commit_idx:
                 idx = np.asarray(commit_idx, np.int64)
                 slots = np.asarray(dst_slots, np.int64)
-                if dst_tier == SLOW:
-                    store.slow_write_batch(slots, staged[idx])
-                else:
-                    self._stage_host_to_fast(slots, staged[idx])
+                for src_t, gidx in groups.items():
+                    m = src_tiers[idx] == src_t
+                    sel = idx[m]                         # pending positions
+                    if sel.size == 0:
+                        continue
+                    vals = staged[src_t][local_of[sel]]
+                    sslots = slots[m]
+                    if not dst_dev:
+                        store.host_write_batch(dst_tier, sslots, vals)
+                    elif store.is_device_tier(src_t):
+                        store.scatter_device(dst_tier, sslots, vals)
+                    else:
+                        self._stage_host_to_device(dst_tier, sslots, vals)
+                    st.note_move(src_t, dst_tier, int(sel.size))
                 store.commit_moves(pending[idx], dst_tier, slots)
                 st.migrated += idx.size
                 st.bytes_moved += idx.size * store.page_nbytes
-                if dst_tier == FAST:
-                    st.to_fast += idx.size
-                else:
-                    st.to_slow += idx.size
+                _classify(st, dst_tier, idx.size)
             pending = pending[dirty_mask]
         self.stats.merge(st)
         return st

@@ -1,10 +1,20 @@
 """Placement policy: channel allocation, hotness list, Algorithm 2,
-channel-bandwidth balancing (paper Sec. 5.2/5.3).
+channel-bandwidth balancing (paper Sec. 5.2/5.3) — generic over an
+N-tier :class:`~repro.core.hierarchy.MemoryHierarchy`.
 
-Channel-allocation principles (Sec. 5.2):
-  1. hot pages (Freq-touched, Thrashing) -> FAST (DRAM/HBM), especially WD;
-  2. RD-intensive pages may live in SLOW (NVM/host) without hurting perf;
-  3. cold pages stay in SLOW (energy + reserve FAST capacity).
+Channel-allocation principles (Sec. 5.2), generalized:
+  1. hot pages (Freq-touched, Thrashing) -> tier 0 (DRAM/HBM), esp. WD;
+  2. RD-intensive pages may live in slower tiers without hurting perf;
+  3. cold pages sink to the deepest tier (energy + reserve fast capacity).
+
+With more than two tiers the pages tolerant of slower media are
+distributed across the intermediate tiers by **per-page utility over
+medium costs**: for each intermediate tier (cheapest access cost first)
+the pages with the largest latency benefit vs. the deepest tier — their
+predicted read/write mix priced through each tier's ``MediumSpec``
+Table-1 medium — fill its capacity, and the remainder falls through.
+For a two-tier hierarchy this reduces exactly to the paper's original
+fast/slow rule.
 
 Migration marking (Fig. 10 step 3): a page is "will-be-migrated" when its
 *current* tier disagrees with the tier implied by its *predicted future*
@@ -22,30 +32,21 @@ from typing import Callable, NamedTuple
 import numpy as np
 
 from . import patterns, predictor
-
-FAST = 0  # DRAM / HBM tier
-SLOW = 1  # NVM / host tier
+from .hierarchy import MemoryHierarchy
 
 RESERVED_THRASH_SLAB = 0    # paper: slab 0 isolates Thrashing pages
 RESERVED_RARE_SLAB = 15     # paper: slab 15 holds Rarely-touched pages
 
 
 class PlacementDecision(NamedTuple):
-    target_tier: np.ndarray       # int8 [n_pages] FAST/SLOW
+    target_tier: np.ndarray       # int8 [n_pages] tier index
     migrate: np.ndarray           # bool [n_pages] will-be-migrated
     hotness_list: np.ndarray      # int32 [k] page ids, priority-ordered (HL)
 
 
-def target_tier(wd_code: np.ndarray, hot: np.ndarray, future: np.ndarray,
-                reuse_class: np.ndarray,
-                wear_penalty: float = 0.0) -> np.ndarray:
-    """Apply the three channel-allocation principles per page.
-
-    ``wear_penalty > 0`` signals wear pressure (projected NVM lifetime
-    below the horizon, Sec. 7.1): every currently-WD page is steered to
-    the fast tier regardless of hotness, so the write stream stops
-    consuming NVM endurance — the paper's 40X lifetime mechanism.
-    """
+def _wants_fastest(wd_code: np.ndarray, hot: np.ndarray, future: np.ndarray,
+                   reuse_class: np.ndarray, wear_penalty: float) -> np.ndarray:
+    """The three channel-allocation principles: which pages demand tier 0."""
     fast = hot | (future == predictor.WD_FREQ_H) | (future == predictor.WD_FREQ_L)
     # RD-intensive or cold pages may stay slow even if moderately touched;
     # thrashing RD streams explicitly stay slow (they are served through the
@@ -53,12 +54,76 @@ def target_tier(wd_code: np.ndarray, hot: np.ndarray, future: np.ndarray,
     rd_stream = (wd_code != patterns.WD) & (reuse_class == patterns.THRASHING)
     fast = fast & ~rd_stream
     if wear_penalty > 0:
+        # wear pressure (projected NVM lifetime below the horizon, Sec. 7.1):
+        # every currently-WD page is steered to the fast tier regardless of
+        # hotness, so the write stream stops consuming NVM endurance — the
+        # paper's 40X lifetime mechanism.
         fast = fast | (wd_code == patterns.WD)
-    return np.where(fast, FAST, SLOW).astype(np.int8)
+    return fast
+
+
+def _fill_intermediate_tiers(tgt: np.ndarray, tolerant: np.ndarray,
+                             hierarchy: MemoryHierarchy,
+                             reads: np.ndarray, writes: np.ndarray) -> None:
+    """Distribute slow-tolerant pages over tiers 1..deepest by utility:
+    each intermediate tier (cheapest first) takes the pages whose
+    read/write mix gains the most latency vs. the deepest medium, up to
+    its slot capacity; everything else stays targeted at the deepest
+    tier.  Mutates ``tgt`` in place."""
+    deepest = hierarchy.deepest
+    mids = sorted(range(1, deepest),
+                  key=lambda t: (hierarchy[t].read_cost_ns()
+                                 + hierarchy[t].write_cost_ns(), t))
+    ids = np.nonzero(tolerant)[0]
+    if ids.size == 0:
+        return
+    r = reads[ids].astype(np.float64)
+    w = writes[ids].astype(np.float64)
+    deep = hierarchy[deepest]
+    remaining = np.ones(ids.size, bool)
+    for t in mids:
+        spec = hierarchy[t]
+        # per-page benefit of tier t over the deepest tier, priced through
+        # the Table-1 media (>= 0 when the hierarchy is ordered)
+        benefit = (r * (deep.read_cost_ns() - spec.read_cost_ns())
+                   + w * (deep.write_cost_ns() - spec.write_cost_ns()))
+        cand = np.nonzero(remaining & (benefit > 0))[0]
+        if cand.size == 0:
+            continue
+        order = np.lexsort((ids[cand], -benefit[cand]))   # benefit desc, id asc
+        take = cand[order][:spec.slots]
+        tgt[ids[take]] = t
+        remaining[take] = False
+
+
+def target_tier(wd_code: np.ndarray, hot: np.ndarray, future: np.ndarray,
+                reuse_class: np.ndarray, wear_penalty: float = 0.0, *,
+                hierarchy: MemoryHierarchy | None = None,
+                reads: np.ndarray | None = None,
+                writes: np.ndarray | None = None) -> np.ndarray:
+    """Target tier index per page.
+
+    Without a ``hierarchy`` (or with a two-tier one) this is exactly the
+    paper's fast/slow rule: 0 for pages demanding the fast channel, 1
+    (the deepest tier) otherwise.  With more tiers, the slow-tolerant
+    pages additionally spread over the intermediate tiers by per-page
+    utility over the tiers' ``MediumSpec`` costs (``reads``/``writes``
+    supply the access mix; omitted, everything tolerant sinks to the
+    deepest tier).
+    """
+    fast = _wants_fastest(wd_code, hot, future, reuse_class, wear_penalty)
+    deepest = 1 if hierarchy is None else hierarchy.deepest
+    tgt = np.where(fast, 0, deepest).astype(np.int8)
+    if hierarchy is not None and hierarchy.n_tiers > 2 \
+            and reads is not None and writes is not None:
+        _fill_intermediate_tiers(tgt, ~fast, hierarchy,
+                                 np.asarray(reads), np.asarray(writes))
+    return tgt
 
 
 def plan(summary, current_tier: np.ndarray, *, max_migrations: int | None = None,
-         wear_penalty: float = 0.0) -> PlacementDecision:
+         wear_penalty: float = 0.0,
+         hierarchy: MemoryHierarchy | None = None) -> PlacementDecision:
     """Fig. 10 steps 2-3: decide targets, mark migrations, rank the HL.
 
     Under wear pressure (``wear_penalty > 0``) WD pages additionally get a
@@ -71,7 +136,14 @@ def plan(summary, current_tier: np.ndarray, *, max_migrations: int | None = None
     reuse = np.asarray(summary.reuse_class)
     hotness = np.asarray(summary.hotness)
 
-    tgt = target_tier(wd_code, hot, future, reuse, wear_penalty)
+    # the access mix only matters for intermediate-tier assignment, and
+    # minimal summary stubs (tests) may not carry raw counters
+    reads = getattr(summary, "reads", None)
+    writes = getattr(summary, "writes", None)
+    tgt = target_tier(
+        wd_code, hot, future, reuse, wear_penalty, hierarchy=hierarchy,
+        reads=None if reads is None else np.asarray(reads),
+        writes=None if writes is None else np.asarray(writes))
     migrate = tgt != current_tier
     score = hotness.astype(np.float64)
     if wear_penalty > 0:
@@ -123,10 +195,10 @@ def slab_for_reuse_class(reuse_class: int) -> int | None:
 class BandwidthBalancer:
     """Channel-bandwidth balancing (Sec. 5.2 'Data Migration Mechanism').
 
-    Spill pages fast->slow while the fast channel is saturated; stop as soon
-    as fast-channel utilization *begins to drop* (the paper's stop rule),
-    so fast-channel bandwidth stays maximized while the slow channel soaks
-    up overflow reads.
+    Spill pages from tier 0 to the next tier down while the fast channel
+    is saturated; stop as soon as fast-channel utilization *begins to
+    drop* (the paper's stop rule), so fast-channel bandwidth stays
+    maximized while the slower channels soak up overflow reads.
     """
 
     def __init__(self, fast_bw_bound: float, hysteresis: float = 0.02):
@@ -137,7 +209,7 @@ class BandwidthBalancer:
 
     def update(self, fast_util: float) -> bool:
         """Feed one bandwidth-utilization observation (bytes/s); returns
-        whether memos should keep spilling pages to the slow channel."""
+        whether memos should keep spilling pages off the fast channel."""
         if fast_util >= self.bound:
             self.spilling = True
         elif self._last_util is not None and self.spilling:
@@ -149,10 +221,11 @@ class BandwidthBalancer:
     def spill_candidates(self, wd_code: np.ndarray, hotness: np.ndarray,
                          current_tier: np.ndarray, n: int,
                          exclude_wd: bool = False) -> np.ndarray:
-        """Pick n pages to spill: RD pages first, then coolest WD ones.
-        ``exclude_wd`` keeps write-dominated pages off the slow channel
-        entirely — set while the memos pass is under NVM wear pressure."""
-        in_fast = current_tier == FAST
+        """Pick n tier-0 pages to spill: RD pages first, then coolest WD
+        ones.  ``exclude_wd`` keeps write-dominated pages off the slower
+        channels entirely — set while the memos pass is under NVM wear
+        pressure."""
+        in_fast = current_tier == 0
         rd = in_fast & (wd_code == patterns.RD)
         rd_ids = np.nonzero(rd)[0]
         rd_ids = rd_ids[np.argsort(hotness[rd_ids])]

@@ -1,31 +1,44 @@
-"""TierStore — the hybrid fast/slow page store (MCHA analogue, Sec. 5.1).
+"""TierStore — the N-tier hybrid page store (MCHA analogue, Sec. 5.1).
 
-Logical pages live in one of two physical pools:
+Logical pages live in one of the pools described by a
+:class:`~repro.core.hierarchy.MemoryHierarchy` — an ordered list of
+:class:`~repro.core.hierarchy.MediumSpec` tiers (fastest first):
 
-  * FAST — device HBM (a jax array pool; on this CPU host it is a jax
-    CpuDevice buffer, on TPU it is HBM);
-  * SLOW — host DRAM (numpy pool; the NVM-channel analogue; optionally
-    int8-quantized to model NVM's cheap-read/expensive-write asymmetry).
+  * **device** tiers — one jax array pool each (tier 0 is HBM and is what
+    compute reads from; additional device tiers simulate e.g. a DRAM
+    channel while keeping migration on-accelerator);
+  * **host** tiers — numpy pools (the NVM/CXL analogue), optionally
+    int8-quantized to model NVM's cheap-read/expensive-write asymmetry,
+    and storing bfloat16 payloads as their uint16 bit-pattern (no silent
+    widening to float32).
 
 A page table maps logical page -> (tier, slot); per-page version counters
 are bumped by every write so the optimistic (unlocked-DMA) migration path
 can detect pages dirtied mid-copy, exactly like the paper's post-hoc
 dirty-bit check (Sec. 6.3).
 
-Slot allocation inside each pool goes through the color-aware SubBuddy
-allocator so bank/slab-targeted placement (Algorithm 2) is honored.
+Slot allocation inside every pool goes through a per-tier color-aware
+SubBuddy allocator so bank/slab-targeted placement (Algorithm 2) is
+honored in each tier independently.
 
-NVM wear telemetry (Sec. 7.1): slow-pool slot ids handed out by the
-allocator are *logical*; the ``repro.nvm`` wear tracker maps them to
-physical rows through a remap table, charges a per-physical-slot write
-counter on every slow-tier write (single-page and batched paths alike —
-this is where migration demotion commits get accounted), and lets the
-Start-Gap leveler rotate the physical rows without the allocator, page
-table, or migration engines noticing.
+NVM wear telemetry (Sec. 7.1) attaches to **any** host tier whose spec
+sets ``wear_tracked``: slot ids handed out by that tier's allocator are
+*logical*; a per-tier ``repro.nvm`` wear tracker maps them to physical
+rows through a remap table, charges a per-physical-slot write counter on
+every write (single-page and batched paths alike — migration demotion
+commits included), and lets a per-tier Start-Gap leveler rotate the
+physical rows without the allocator, page table, or migration engines
+noticing.
+
+``TierConfig`` survives as the two-tier compatibility shim: constructing
+``TierStore(TierConfig(...))`` routes through
+``MemoryHierarchy.two_tier(...)`` and reproduces the pre-redesign
+fast/slow behavior bit for bit.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
@@ -34,73 +47,294 @@ import numpy as np
 from repro.kernels.page_gather import page_gather, page_scatter
 
 from .allocator import SubBuddyAllocator, SubBuddyConfig
-from .placement import FAST, SLOW
+from .hierarchy import MediumSpec, MemoryHierarchy
 
 NO_SLOT = -1
 
 
 @dataclass
 class TierConfig:
+    """Two-tier compatibility config (the pre-redesign API surface).
+
+    Kept as a thin shim: ``TierStore`` converts it to
+    ``MemoryHierarchy.two_tier(...)`` + :class:`StoreConfig`.  New code
+    should build a :class:`StoreConfig` directly.
+    """
+
     n_pages: int                 # logical page count
     fast_slots: int              # HBM pool capacity (pages)
     slow_slots: int              # host pool capacity (pages)
     page_shape: tuple[int, ...]  # payload shape per page
     dtype: jnp.dtype = jnp.float32
-    n_banks: int = 32
-    n_slabs: int = 16
+    n_banks: int | None = None   # None -> auto-size to the smallest pool
+    n_slabs: int | None = None
     quantize_slow: bool = False  # int8-quantize cold pages (soft-NVM analogue)
     track_wear: bool = True      # per-slot NVM wear counters (Sec. 7.1)
     wear_leveling: bool = True   # Start-Gap rotation over the slow pool
     gap_write_interval: int | None = None  # None -> costmodel 95% target
 
+    def hierarchy(self) -> MemoryHierarchy:
+        return MemoryHierarchy.two_tier(
+            self.fast_slots, self.slow_slots,
+            quantize_slow=self.quantize_slow, track_wear=self.track_wear,
+            wear_leveling=self.wear_leveling,
+            gap_write_interval=self.gap_write_interval)
+
+
+@dataclass
+class StoreConfig:
+    """Generic store config: a hierarchy plus the logical page space."""
+
+    n_pages: int
+    page_shape: tuple[int, ...]
+    hierarchy: MemoryHierarchy
+    dtype: jnp.dtype = jnp.float32
+    # color geometry; None auto-sizes (up to 32 x 16) so every color
+    # exists in the smallest pool — explicit values that don't fit are
+    # clamped with a warning
+    n_banks: int | None = None
+    n_slabs: int | None = None
+
+    # -- two-tier compat accessors (fast = tier 0, slow = deepest) -----------
+    @property
+    def fast_slots(self) -> int:
+        return self.hierarchy[0].slots
+
+    @property
+    def slow_slots(self) -> int:
+        return self.hierarchy[self.hierarchy.deepest].slots
+
+    @property
+    def quantize_slow(self) -> bool:
+        return self.hierarchy[self.hierarchy.deepest].quantize_int8
+
+
+def _clamp_geometry(cfg: StoreConfig) -> StoreConfig:
+    """Shrink the color geometry until every color exists in every pool
+    (the PFN space always contains all colors; a slot pool only does when
+    n_colors <= n_slots).  The default (``n_banks``/``n_slabs`` = None)
+    auto-sizes silently up to 32 x 16; an *explicitly requested* geometry
+    that doesn't fit is clamped with a warning — silently changing what
+    the caller asked for hid real misconfigurations."""
+    explicit = cfg.n_banks is not None or cfg.n_slabs is not None
+    want_banks = 32 if cfg.n_banks is None else cfg.n_banks
+    want_slabs = 16 if cfg.n_slabs is None else cfg.n_slabs
+    n_banks, n_slabs = want_banks, want_slabs
+    min_slots = min(t.slots for t in cfg.hierarchy)
+    while n_banks * n_slabs > max(min_slots, 1) and n_banks > 1:
+        n_banks //= 2
+    while n_banks * n_slabs > max(min_slots, 1) and n_slabs > 1:
+        n_slabs //= 2
+    if explicit and (n_banks, n_slabs) != (want_banks, want_slabs):
+        warnings.warn(
+            f"TierStore color geometry {want_banks}x{want_slabs} "
+            f"(banks x slabs) exceeds the smallest pool "
+            f"({min_slots} slots); clamped to {n_banks}x{n_slabs} so every "
+            "color exists in every tier",
+            UserWarning, stacklevel=3)
+    return replace(cfg, n_banks=n_banks, n_slabs=n_slabs)
+
+
+# =============================================================================
+# per-tier pools
+# =============================================================================
+
+class DevicePool:
+    """A jax-resident page pool ([slots, *page_shape] in the store dtype)."""
+
+    def __init__(self, spec: MediumSpec, page_shape: tuple[int, ...], dtype):
+        self.spec = spec
+        self.dtype = dtype
+        self.data = jnp.zeros((spec.slots, *page_shape), dtype)
+
+    def write_one(self, slot: int, value) -> None:
+        self.data = self.data.at[slot].set(jnp.asarray(value, self.dtype))
+
+    def read_one(self, slot: int) -> np.ndarray:
+        return np.asarray(self.data[slot], np.float32)
+
+    def gather(self, slots) -> jnp.ndarray:
+        """Pack discontiguous slots into one contiguous staging buffer on
+        device (Pallas page_gather on TPU, XLA gather elsewhere)."""
+        return page_gather(self.data, jnp.asarray(slots, jnp.int32))
+
+    def scatter(self, slots, pages: jnp.ndarray) -> None:
+        """pool[slots[i]] = pages[i]; the pool buffer is donated, slots
+        not referenced pass through untouched."""
+        self.data = page_scatter(self.data, jnp.asarray(slots, jnp.int32),
+                                 pages.astype(self.dtype))
+
+
+class HostPool:
+    """A numpy page pool with the host-tier storage formats.
+
+    float32/float64 payloads are stored natively; bfloat16 payloads are
+    stored as their **uint16 bit-pattern** (bit-exact round trip, half the
+    bytes — not silently widened to float32); ``quantize_int8`` stores
+    int8 + a per-page scale (the lossy soft-NVM analogue).  All reads
+    return float32.
+    """
+
+    def __init__(self, spec: MediumSpec, page_shape: tuple[int, ...], dtype):
+        self.spec = spec
+        self.page_shape = page_shape
+        self.quantized = spec.quantize_int8
+        self.bf16 = (not self.quantized) and jnp.dtype(dtype) == jnp.bfloat16
+        self.scale = None
+        if self.quantized:
+            self.data = np.zeros((spec.slots, *page_shape), np.int8)
+            self.scale = np.ones((spec.slots,), np.float32)
+        elif self.bf16:
+            self.data = np.zeros((spec.slots, *page_shape), np.uint16)
+        else:
+            self.data = np.zeros((spec.slots, *page_shape),
+                                 np.dtype(jnp.dtype(dtype).name))
+
+    def _bcast(self, scale: np.ndarray) -> np.ndarray:
+        return scale.reshape((-1,) + (1,) * len(self.page_shape))
+
+    def write_one(self, phys: int, value: np.ndarray) -> None:
+        if self.quantized:
+            scale = max(float(np.max(np.abs(value))), 1e-8) / 127.0
+            self.data[phys] = np.clip(
+                np.round(value / scale), -127, 127).astype(np.int8)
+            self.scale[phys] = scale
+        elif self.bf16:
+            self.data[phys] = value.astype(jnp.bfloat16).view(np.uint16)
+        else:
+            self.data[phys] = value
+
+    def read_one(self, phys: int) -> np.ndarray:
+        if self.quantized:
+            return self.data[phys].astype(np.float32) * self.scale[phys]
+        if self.bf16:
+            return self.data[phys].view(jnp.bfloat16).astype(np.float32)
+        return np.asarray(self.data[phys], np.float32)
+
+    def write_batch(self, phys: np.ndarray, values: np.ndarray) -> None:
+        """pool[phys[i]] = values[i], quantizing per page when int8
+        (bit-identical to the per-page write_one)."""
+        if self.quantized:
+            axes = tuple(range(1, values.ndim))
+            scale = np.maximum(np.max(np.abs(values), axis=axes), 1e-8) / 127.0
+            q = np.clip(np.round(values / self._bcast(scale)), -127, 127)
+            self.data[phys] = q.astype(np.int8)
+            self.scale[phys] = scale.astype(np.float32)
+        elif self.bf16:
+            self.data[phys] = values.astype(jnp.bfloat16).view(np.uint16)
+        else:
+            self.data[phys] = values
+
+    def read_batch(self, phys: np.ndarray) -> np.ndarray:
+        if self.quantized:
+            return (self.data[phys].astype(np.float32)
+                    * self._bcast(self.scale[phys]))
+        if self.bf16:
+            return self.data[phys].view(jnp.bfloat16).astype(np.float32)
+        return np.asarray(self.data[phys], np.float32)
+
+
+class _LevelerView:
+    """Adapter handing ``StartGapLeveler`` one host tier's pool (the
+    leveler's ``slow_pool``/``slow_scale`` contract predates N tiers)."""
+
+    def __init__(self, pool: HostPool):
+        self._pool = pool
+
+    @property
+    def slow_pool(self) -> np.ndarray:
+        return self._pool.data
+
+    @property
+    def slow_scale(self) -> np.ndarray | None:
+        return self._pool.scale
+
+
+# =============================================================================
+# the store
+# =============================================================================
 
 class TierStore:
-    def __init__(self, cfg: TierConfig):
-        # clamp the color geometry so every color exists in both pools
-        # (the PFN space always contains all colors; a slot pool only does
-        # when n_colors <= n_slots).
-        n_banks, n_slabs = cfg.n_banks, cfg.n_slabs
-        min_slots = min(cfg.fast_slots, cfg.slow_slots)
-        while n_banks * n_slabs > max(min_slots, 1) and n_banks > 1:
-            n_banks //= 2
-        while n_banks * n_slabs > max(min_slots, 1) and n_slabs > 1:
-            n_slabs //= 2
-        if (n_banks, n_slabs) != (cfg.n_banks, cfg.n_slabs):
-            from dataclasses import replace
-            cfg = replace(cfg, n_banks=n_banks, n_slabs=n_slabs)
+    def __init__(self, cfg: TierConfig | StoreConfig):
+        if isinstance(cfg, TierConfig):
+            cfg = StoreConfig(n_pages=cfg.n_pages, page_shape=cfg.page_shape,
+                              hierarchy=cfg.hierarchy(), dtype=cfg.dtype,
+                              n_banks=cfg.n_banks, n_slabs=cfg.n_slabs)
+        cfg = _clamp_geometry(cfg)
         self.cfg = cfg
-        self.fast_pool = jnp.zeros((cfg.fast_slots, *cfg.page_shape), cfg.dtype)
-        if cfg.quantize_slow:
-            self.slow_pool = np.zeros((cfg.slow_slots, *cfg.page_shape), np.int8)
-            self.slow_scale = np.ones((cfg.slow_slots,), np.float32)
-        else:
-            self.slow_pool = np.zeros((cfg.slow_slots, *cfg.page_shape),
-                                      np.dtype(jnp.dtype(cfg.dtype).name)
-                                      if cfg.dtype != jnp.bfloat16 else np.float32)
-            self.slow_scale = None
-        self.tier = np.full((cfg.n_pages,), SLOW, np.int8)
+        self.hierarchy = cfg.hierarchy
+        self.n_tiers = cfg.hierarchy.n_tiers
+
+        self.pools: list[DevicePool | HostPool] = [
+            (DevicePool if t.is_device else HostPool)(t, cfg.page_shape,
+                                                      cfg.dtype)
+            for t in cfg.hierarchy
+        ]
+        # pages start (unallocated) in the deepest tier, as in the paper's
+        # everything-begins-on-NVM bring-up
+        self.tier = np.full((cfg.n_pages,), cfg.hierarchy.deepest, np.int8)
         self.slot = np.full((cfg.n_pages,), NO_SLOT, np.int64)
         self.version = np.zeros((cfg.n_pages,), np.int64)
         bcfg = dict(n_banks=cfg.n_banks, n_slabs=cfg.n_slabs)
-        self.alloc = {
-            FAST: SubBuddyAllocator(SubBuddyConfig(cfg.fast_slots, **bcfg)),
-            SLOW: SubBuddyAllocator(SubBuddyConfig(cfg.slow_slots, **bcfg)),
-        }
-        # bytes moved per tier-direction, for the bandwidth balancer / figs
-        self.traffic = {(FAST, SLOW): 0, (SLOW, FAST): 0}
-        self.writes_to = {FAST: 0, SLOW: 0}
-        self.reads_from = {FAST: 0, SLOW: 0}
-        # NVM wear telemetry + Start-Gap leveling over the slow pool
-        # (lazy import: repro.nvm pulls in the cost model, which sits next
-        # to this module in the core package)
-        self.wear = self.leveler = None
-        if cfg.track_wear:
+        self.alloc = [SubBuddyAllocator(SubBuddyConfig(t.slots, **bcfg))
+                      for t in cfg.hierarchy]
+        # bytes moved per (src, dst) tier pair, for the balancer / figs
+        self.traffic = {(i, j): 0 for i in range(self.n_tiers)
+                        for j in range(self.n_tiers) if i != j}
+        self.writes_to = {t: 0 for t in range(self.n_tiers)}
+        self.reads_from = {t: 0 for t in range(self.n_tiers)}
+        # per-tier NVM wear telemetry + Start-Gap leveling (host tiers with
+        # wear_tracked set; lazy import — repro.nvm pulls in the cost model,
+        # which sits next to this module in the core package)
+        self.wear_by_tier: dict[int, object] = {}
+        self.leveler_by_tier: dict[int, object] = {}
+        for i in cfg.hierarchy.wear_tiers():
             from repro.nvm.leveling import StartGapLeveler
             from repro.nvm.wear import NvmWear
-            self.wear = NvmWear(cfg.slow_slots)
-            if cfg.wear_leveling:
-                self.leveler = StartGapLeveler(self.wear,
-                                               cfg.gap_write_interval)
+            spec = cfg.hierarchy[i]
+            self.wear_by_tier[i] = NvmWear(spec.slots)
+            if spec.wear_leveling:
+                self.leveler_by_tier[i] = StartGapLeveler(
+                    self.wear_by_tier[i], spec.gap_write_interval)
+
+    # -- two-tier compat surface ----------------------------------------------
+    @property
+    def fast_pool(self) -> jnp.ndarray:
+        """Tier-0 device pool buffer (what the serving engine computes on)."""
+        return self.pools[0].data
+
+    @fast_pool.setter
+    def fast_pool(self, value: jnp.ndarray) -> None:
+        self.pools[0].data = value
+
+    @property
+    def _deepest_wear(self) -> int | None:
+        wt = self.hierarchy.wear_tiers()
+        return wt[-1] if wt else None
+
+    @property
+    def wear(self):
+        """Deepest wear-tracked tier's tracker (two-tier compat alias)."""
+        t = self._deepest_wear
+        return None if t is None else self.wear_by_tier[t]
+
+    @property
+    def leveler(self):
+        t = self._deepest_wear
+        return self.leveler_by_tier.get(t) if t is not None else None
+
+    @property
+    def slow_pool(self) -> np.ndarray:
+        """Deepest tier's raw pool array (compat; host tiers only)."""
+        return self.pools[-1].data
+
+    @property
+    def slow_scale(self) -> np.ndarray | None:
+        return self.pools[-1].scale
+
+    # -- tier predicates -------------------------------------------------------
+    def is_device_tier(self, tier: int) -> bool:
+        return self.hierarchy[tier].is_device
 
     # -- page lifecycle -----------------------------------------------------
     @property
@@ -128,11 +362,10 @@ class TierStore:
     def write_page(self, page: int, value) -> None:
         t, s = int(self.tier[page]), int(self.slot[page])
         assert s != NO_SLOT
-        if t == FAST:
-            self.fast_pool = self.fast_pool.at[s].set(
-                jnp.asarray(value, self.cfg.dtype))
+        if self.is_device_tier(t):
+            self.pools[t].write_one(s, value)
         else:
-            self._slow_write(s, np.asarray(value, np.float32))
+            self._host_write(t, s, np.asarray(value, np.float32))
         self.version[page] += 1
         self.writes_to[t] += 1
 
@@ -140,83 +373,77 @@ class TierStore:
         t, s = int(self.tier[page]), int(self.slot[page])
         assert s != NO_SLOT
         self.reads_from[t] += 1
-        if t == FAST:
-            return np.asarray(self.fast_pool[s], np.float32)
-        return self._slow_read(s)
+        if self.is_device_tier(t):
+            return self.pools[t].read_one(s)
+        return self._host_read(t, s)
 
-    def _phys_slow(self, slots: np.ndarray) -> np.ndarray:
-        """Logical slow-pool slots -> physical rows (wear-leveling remap)."""
-        return slots if self.wear is None else self.wear.phys(slots)
+    # -- host-tier access (wear remap + accounting) ----------------------------
+    def _phys(self, tier: int, slots: np.ndarray) -> np.ndarray:
+        """Logical host-pool slots -> physical rows (wear-leveling remap)."""
+        w = self.wear_by_tier.get(tier)
+        return slots if w is None else w.phys(slots)
 
-    def _account_slow_writes(self, phys: np.ndarray) -> None:
-        """Charge wear counters and drive the Start-Gap leveler after data
-        has landed on the given physical rows."""
-        if self.wear is None:
+    def _account_host_writes(self, tier: int, phys: np.ndarray) -> None:
+        """Charge wear counters and drive the tier's Start-Gap leveler
+        after data has landed on the given physical rows."""
+        w = self.wear_by_tier.get(tier)
+        if w is None:
             return
-        self.wear.record_phys(phys)
-        if self.leveler is not None:
-            self.leveler.note_writes(self, np.asarray(phys).size)
+        w.record_phys(phys)
+        lv = self.leveler_by_tier.get(tier)
+        if lv is not None:
+            lv.note_writes(_LevelerView(self.pools[tier]),
+                           np.asarray(phys).size)
 
-    def _slow_write(self, slot: int, value: np.ndarray) -> None:
-        p = slot if self.wear is None else self.wear.phys_one(slot)
-        if self.cfg.quantize_slow:
-            scale = max(float(np.max(np.abs(value))), 1e-8) / 127.0
-            self.slow_pool[p] = np.clip(
-                np.round(value / scale), -127, 127).astype(np.int8)
-            self.slow_scale[p] = scale
-        else:
-            self.slow_pool[p] = value
-        self._account_slow_writes(np.asarray([p]))
+    def _host_write(self, tier: int, slot: int, value: np.ndarray) -> None:
+        w = self.wear_by_tier.get(tier)
+        p = slot if w is None else w.phys_one(slot)
+        self.pools[tier].write_one(p, value)
+        self._account_host_writes(tier, np.asarray([p]))
 
-    def _slow_read(self, slot: int) -> np.ndarray:
-        p = slot if self.wear is None else self.wear.phys_one(slot)
-        if self.cfg.quantize_slow:
-            return self.slow_pool[p].astype(np.float32) * self.slow_scale[p]
-        return np.asarray(self.slow_pool[p], np.float32)
+    def _host_read(self, tier: int, slot: int) -> np.ndarray:
+        w = self.wear_by_tier.get(tier)
+        p = slot if w is None else w.phys_one(slot)
+        return self.pools[tier].read_one(p)
 
     # -- batched data access (the migration engine's bulk primitives) ----------
+    def gather_device(self, tier: int, slots) -> jnp.ndarray:
+        return self.pools[tier].gather(slots)
+
+    def scatter_device(self, tier: int, slots, pages: jnp.ndarray) -> None:
+        self.pools[tier].scatter(slots, pages)
+
+    # tier-0 compat names (the serving hot path's pool primitives)
     def gather_fast(self, slots) -> jnp.ndarray:
-        """Pack discontiguous fast-pool slots into one contiguous staging
-        buffer on device (Pallas page_gather on TPU, XLA gather elsewhere)."""
-        return page_gather(self.fast_pool, jnp.asarray(slots, jnp.int32))
+        return self.gather_device(0, slots)
 
     def scatter_fast(self, slots, pages: jnp.ndarray) -> None:
-        """pool[slots[i]] = pages[i]; the pool buffer is donated, slots not
-        referenced pass through untouched."""
-        self.fast_pool = page_scatter(
-            self.fast_pool, jnp.asarray(slots, jnp.int32),
-            pages.astype(self.cfg.dtype))
+        self.scatter_device(0, slots, pages)
 
+    def host_read_batch(self, tier: int, slots: np.ndarray) -> np.ndarray:
+        """[k, *page_shape] float32 view of a host tier's slots (vectorized
+        dequantize for int8 soft-NVM tiers)."""
+        phys = self._phys(tier, np.asarray(slots, np.int64))
+        return self.pools[tier].read_batch(phys)
+
+    def host_write_batch(self, tier: int, slots: np.ndarray,
+                         values: np.ndarray) -> None:
+        """pool[slots[i]] = values[i] on a host tier (bit-identical to the
+        per-page path), charging wear where tracked."""
+        phys = self._phys(tier, np.asarray(slots, np.int64))
+        self.pools[tier].write_batch(phys, np.asarray(values, np.float32))
+        self._account_host_writes(tier, phys)
+
+    # deepest-tier compat names
     def slow_read_batch(self, slots: np.ndarray) -> np.ndarray:
-        """[k, *page_shape] float32 view of slow-pool slots (vectorized
-        dequantize for the soft-NVM tier)."""
-        slots = self._phys_slow(np.asarray(slots, np.int64))
-        if self.cfg.quantize_slow:
-            pages = self.slow_pool[slots].astype(np.float32)
-            scale = self.slow_scale[slots].reshape(
-                (-1,) + (1,) * len(self.cfg.page_shape))
-            return pages * scale
-        return np.asarray(self.slow_pool[slots], np.float32)
+        return self.host_read_batch(self.n_tiers - 1, slots)
 
     def slow_write_batch(self, slots: np.ndarray, values: np.ndarray) -> None:
-        """slow_pool[slots[i]] = values[i], quantizing per page when the
-        slow tier is int8 (bit-identical to the per-page _slow_write)."""
-        slots = self._phys_slow(np.asarray(slots, np.int64))
-        values = np.asarray(values, np.float32)
-        if self.cfg.quantize_slow:
-            axes = tuple(range(1, values.ndim))
-            scale = np.maximum(np.max(np.abs(values), axis=axes), 1e-8) / 127.0
-            q = np.clip(np.round(values / scale.reshape(
-                (-1,) + (1,) * len(self.cfg.page_shape))), -127, 127)
-            self.slow_pool[slots] = q.astype(np.int8)
-            self.slow_scale[slots] = scale.astype(np.float32)
-        else:
-            self.slow_pool[slots] = values
-        self._account_slow_writes(slots)
+        self.host_write_batch(self.n_tiers - 1, slots, values)
 
     def charge_fast_accesses(self, page_writes: np.ndarray,
                              n_reads: int) -> None:
-        """Apply one decode dispatch's fast-tier access accounting in bulk:
+        """Apply one decode dispatch's tier-0 access accounting in bulk:
         ``page_writes`` (int [n_pages], computed on device inside the fused
         step) bumps the per-page version counters (the dirty bit for
         optimistic migration) and the tier write counter; ``n_reads`` is the
@@ -224,31 +451,35 @@ class TierStore:
         per-request Python loop per token."""
         page_writes = np.asarray(page_writes, np.int64)
         self.version += page_writes
-        self.writes_to[FAST] += int(page_writes.sum())
-        self.reads_from[FAST] += int(n_reads)
+        self.writes_to[0] += int(page_writes.sum())
+        self.reads_from[0] += int(n_reads)
 
     def commit_moves(self, pages: np.ndarray, dst_tier: int,
                      new_slots: np.ndarray) -> None:
-        """Flip the page table for an executed bulk move: free the old slots,
-        bind the new ones, account traffic — one vectorized pass over the
-        tier/slot arrays (the allocator free loop is host metadata only)."""
+        """Flip the page table for an executed bulk move: free the old slots
+        (each page in its own source tier's allocator), bind the new ones,
+        account per-pair traffic — one vectorized pass over the tier/slot
+        arrays (the allocator free loop is host metadata only)."""
         pages = np.asarray(pages, np.int64)
         new_slots = np.asarray(new_slots, np.int64)
         if pages.size == 0:
             return
-        src_tier = FAST if dst_tier == SLOW else SLOW
-        assert (self.tier[pages] == src_tier).all(), \
-            "commit_moves: page not in the expected source tier"
-        for s in self.slot[pages]:
-            self.alloc[src_tier].free(int(s), 0)
+        src_tiers = self.tier[pages].copy()
+        assert (src_tiers != dst_tier).all(), \
+            "commit_moves: page already in the destination tier"
+        for p, s in zip(pages, self.slot[pages]):
+            self.alloc[int(self.tier[p])].free(int(s), 0)
         self.tier[pages] = dst_tier
         self.slot[pages] = new_slots
-        self.traffic[(src_tier, dst_tier)] += self.page_nbytes * pages.size
+        for t in np.unique(src_tiers):
+            k = int((src_tiers == t).sum())
+            self.traffic[(int(t), dst_tier)] += self.page_nbytes * k
 
     # -- migration primitive (single page, already-planned) --------------------
     def move_page(self, page: int, dst_tier: int, color: int | None = None,
                   color_mask: int | None = None) -> bool:
-        """Synchronous ('locked CPU copy') single-page move."""
+        """Synchronous ('locked CPU copy') single-page move between any
+        two tiers."""
         src_tier = int(self.tier[page])
         if src_tier == dst_tier:
             return True
@@ -263,21 +494,30 @@ class TierStore:
         if new_slot is None:
             return False
         old_slot = int(self.slot[page])
-        if dst_tier == FAST:
-            self.fast_pool = self.fast_pool.at[new_slot].set(
-                jnp.asarray(data, self.cfg.dtype))
+        if self.is_device_tier(dst_tier):
+            self.pools[dst_tier].write_one(new_slot, data)
         else:
-            self._slow_write(new_slot, data)
+            self._host_write(dst_tier, new_slot, data)
         self.alloc[src_tier].free(old_slot, 0)
         self.tier[page] = dst_tier
         self.slot[page] = new_slot
         self.traffic[(src_tier, dst_tier)] += self.page_nbytes
         return True
 
+    def tier_used(self) -> list[int]:
+        """Live page count per tier."""
+        live = self.slot != NO_SLOT
+        return [int(np.sum(self.tier[live] == t))
+                for t in range(self.n_tiers)]
+
     def occupancy(self) -> dict:
-        fast_used = int(np.sum(self.tier[self.slot != NO_SLOT] == FAST))
-        slow_used = int(np.sum(self.tier[self.slot != NO_SLOT] == SLOW))
-        return {
-            "fast_used": fast_used, "fast_total": self.cfg.fast_slots,
-            "slow_used": slow_used, "slow_total": self.cfg.slow_slots,
+        used = self.tier_used()
+        out = {
+            "fast_used": used[0], "fast_total": self.hierarchy[0].slots,
+            "slow_used": used[-1],
+            "slow_total": self.hierarchy[self.hierarchy.deepest].slots,
         }
+        for i, spec in enumerate(self.hierarchy):
+            out[f"t{i}_{spec.name.lower()}_used"] = used[i]
+            out[f"t{i}_{spec.name.lower()}_total"] = spec.slots
+        return out

@@ -23,6 +23,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=3)
     ap.add_argument("--fast-slots", type=int, default=24)
+    ap.add_argument("--tiers", type=int, choices=(2, 3), default=2,
+                    help="2 = HBM->NVM; 3 = HBM->DRAM-sim->NVM demo")
+    ap.add_argument("--dram-slots", type=int, default=16,
+                    help="middle-tier capacity for --tiers 3")
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--no-memos", action="store_true")
     args = ap.parse_args()
@@ -34,9 +38,14 @@ def main():
         raise SystemExit(f"{args.arch}: paged serving engine supports "
                          "attention-layout archs (dense/MoE)")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
+    hier = None
+    if args.tiers == 3:
+        from repro.core.hierarchy import MemoryHierarchy
+        hier = MemoryHierarchy.three_tier(args.fast_slots, args.dram_slots,
+                                          1024)
     eng = PagedServingEngine(cfg, params, ServeConfig(
         page_size=args.page_size, max_batch=args.max_batch,
-        fast_slots=args.fast_slots, slow_slots=1024,
+        fast_slots=args.fast_slots, slow_slots=1024, hierarchy=hier,
         memos_enabled=not args.no_memos))
 
     rng = np.random.RandomState(0)

@@ -47,36 +47,49 @@ class NvmReport:
 
 
 class EnergyMeter:
-    """Accumulates slow-tier access counts pass by pass.
+    """Accumulates one tier's access counts pass by pass.
+
+    One meter attaches to one wear-tracked (or at least host-resident)
+    tier — ``tier`` defaults to the store's deepest wear-tracked tier
+    (falling back to the deepest tier), and ``medium`` defaults to that
+    tier's ``MediumSpec`` medium, so a plain ``EnergyMeter(store)`` on a
+    two-tier hierarchy behaves exactly as before.
 
     ``end_pass()`` closes the current window and returns its ``NvmReport``;
     ``project_lifetime()`` reads the live wear counters mid-pass (the
     placement policy's wear-rate signal) without closing the window.
     """
 
-    def __init__(self, store, medium: MediumParams = NVM,
-                 window_s: float = 1.0):
+    def __init__(self, store, medium: MediumParams | None = None,
+                 window_s: float = 1.0, *, tier: int | None = None):
         self.store = store
-        self.medium = medium
+        if tier is None:
+            wt = store.hierarchy.wear_tiers()
+            tier = wt[-1] if wt else store.hierarchy.deepest
+        self.tier = int(tier)
+        self.medium = medium or store.hierarchy[self.tier].medium
         self.window_s = float(window_s)   # default span of one pass
         self.passes = 0
         self.elapsed = 0.0                # accumulated closed-window seconds
         self.reports: list[NvmReport] = []
         self._snap = self._counters()
 
+    @property
+    def _wear(self):
+        return self.store.wear_by_tier.get(self.tier)
+
     def _counters(self) -> dict:
-        from repro.core.placement import SLOW
-        w = self.store.wear
+        w = self._wear
         return {
             "slow_writes": (w.writes_total if w is not None
-                            else self.store.writes_to[SLOW]),
-            "slow_reads": self.store.reads_from[SLOW],
+                            else self.store.writes_to[self.tier]),
+            "slow_reads": self.store.reads_from[self.tier],
             "leveling_writes": (w.leveling_writes if w is not None else 0),
         }
 
     @property
     def capacity_bytes(self) -> int:
-        return self.store.cfg.slow_slots * self.store.page_nbytes
+        return self.store.hierarchy[self.tier].slots * self.store.page_nbytes
 
     def elapsed_s(self) -> float:
         return self.elapsed
@@ -85,7 +98,7 @@ class EnergyMeter:
         """Years until the worst physical slot exhausts endurance, from the
         live wear counters and elapsed (notional) time.  inf before any
         wear has accumulated or when wear is untracked."""
-        w = self.store.wear
+        w = self._wear
         if w is None:
             return float("inf")
         return lifetime_years_from_wear(w.max_wear(), self.elapsed_s(),
@@ -107,7 +120,7 @@ class EnergyMeter:
         writes = d["slow_writes"] + d["leveling_writes"]
         read_nj = d["slow_reads"] * page_access_energy_nj(m, page_b, False)
         write_nj = writes * page_access_energy_nj(m, page_b, True)
-        w = self.store.wear
+        w = self._wear
         wear_max = w.max_wear() if w is not None else 0
         wear_mean = w.mean_wear() if w is not None else 0.0
         elapsed = self.elapsed_s()

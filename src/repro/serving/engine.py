@@ -46,13 +46,13 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import sysmon as sysmon_mod
+from repro.core.hierarchy import MemoryHierarchy
 from repro.core.memos import MemosConfig, MemosManager
-from repro.core.placement import FAST
 from repro.kernels.paged_attention import paged_attention
 from repro.models import attention as attn_mod
 from repro.models import layers as L
 from repro.models import transformer as T
-from repro.serving.kv_cache import PagedKVCache, PagedKVConfig
+from repro.serving.kv_cache import SERVE_TIER, PagedKVCache, PagedKVConfig
 from repro.serving.scheduler import ContinuousBatcher, Request
 
 
@@ -62,6 +62,9 @@ class ServeConfig:
     max_batch: int = 4
     fast_slots: int = 48
     slow_slots: int = 512
+    # full tier stack (e.g. MemoryHierarchy.three_tier for the
+    # HBM -> DRAM-sim -> NVM-sim scenario); None -> two_tier(fast, slow)
+    hierarchy: MemoryHierarchy | None = None
     memos_interval: int = 8
     max_pages_per_seq: int = 64
     memos_enabled: bool = True
@@ -84,10 +87,11 @@ class PagedServingEngine:
         self.kv = PagedKVCache(PagedKVConfig(
             n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.head_dim, page_size=scfg.page_size,
-            fast_slots=scfg.fast_slots, slow_slots=scfg.slow_slots))
+            fast_slots=scfg.fast_slots, slow_slots=scfg.slow_slots,
+            hierarchy=scfg.hierarchy))
         store = self.kv.store
         self.sysmon = sysmon_mod.init(
-            scfg.slow_slots, n_banks=store.cfg.n_banks,
+            self.kv.n_pages, n_banks=store.cfg.n_banks,
             n_slabs=store.cfg.n_slabs)
         self.memos = MemosManager(store, MemosConfig(
             interval=scfg.memos_interval, adaptive_interval=False,
@@ -123,16 +127,11 @@ class PagedServingEngine:
         dispatch's block table."""
         need = (req.pos + k - 1) // self.scfg.page_size + 1
         while len(req.pages) < need:
-            pid = self.kv.new_page(FAST)
+            pid = self.kv.new_page(SERVE_TIER)
             if pid is None:
                 return False
             req.pages.append(pid)
-        mask = self.kv.resident_mask(req.pages)
-        if not mask.all():
-            cold = [p for p, m in zip(req.pages, mask) if not m]
-            self.memos.engine.migrate_locked(cold, FAST)
-            mask = self.kv.resident_mask(req.pages)
-        return bool(mask.all())
+        return self._promote_all([req])
 
     def _promote_all(self, reqs: list[Request]) -> bool:
         """Promote every non-resident page of ``reqs`` in one batched
@@ -144,12 +143,28 @@ class PagedServingEngine:
         mask = self.kv.resident_mask(pids)
         if not mask.all():
             cold = [p for p, m in zip(pids, mask) if not m]
-            self.memos.engine.migrate_locked(cold, FAST)
+            self.memos.engine.migrate_locked(cold, SERVE_TIER)
             mask = self.kv.resident_mask(pids)
         return bool(mask.all())
 
     def _make_room(self) -> bool:
-        return self.batcher.preempt_lowest() is not None
+        victim = self.batcher.preempt_lowest()
+        if victim is None:
+            return False
+        # eagerly demote the victim's serving-tier pages: preemption must
+        # actually free tier-0 slots, because the lazy memos drain only
+        # runs between dispatches and admission can be blocked *now*
+        # (livelock otherwise when the pool is smaller than two
+        # sequences' demand).  Walk the backing tiers deepest-first so a
+        # full deepest tier cascades into any intermediate tier with room.
+        store = self.kv.store
+        for dst in range(store.n_tiers - 1, 0, -1):
+            still = [p for p in victim.pages
+                     if int(store.tier[p]) == SERVE_TIER]
+            if not still:
+                break
+            self.memos.engine.migrate_optimistic(still, dst)
+        return True
 
     # -- jitted model compute ------------------------------------------------------
     def _decode_core(self, params, tokens, positions, block_tables,
@@ -275,18 +290,25 @@ class PagedServingEngine:
 
     # -- main loop (dispatch-boundary slow path) -----------------------------------
     def step(self) -> dict:
-        # 1) admit / resume; make room by preempting if promotion fails
+        # 1) admit / resume; make room by preempting if promotion fails.
+        # A request that fails provisioning twice in one step is making no
+        # progress (its blocker holds the pool) — stop admitting and let
+        # the dispatch/memos machinery below free capacity first.
+        failed: set[int] = set()
         while True:
             admitted = self.batcher.admit()
             if not admitted:
                 break
             ok = True
+            stuck = False
             for req in admitted:
                 if req.start_step is None:
                     req.start_step = self.step_count
                 if not self._ensure_pages(req):
                     ok = False
-            if not ok and not self._make_room():
+                    stuck = stuck or req.rid in failed
+                    failed.add(req.rid)
+            if stuck or (not ok and not self._make_room()):
                 break
 
         active = list(self.batcher.active)

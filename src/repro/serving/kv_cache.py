@@ -1,11 +1,17 @@
 """Paged KV cache on top of the memos TierStore.
 
 Logical page = one ``page_size``-token span of one sequence, payload
-[L, 2(K/V), page, Hkv, Dh] across all layers (pages migrate between HBM
-and host as a unit, like the OS paper's 4 KB pages).  The TierStore's
-sub-buddy allocator places pages by color (bank = pool-slot stripe =
-HBM-controller analogue); block tables map (sequence, span) -> logical
-page -> physical fast-pool slot for the paged_attention kernel.
+[L, 2(K/V), page, Hkv, Dh] across all layers (pages migrate between the
+hierarchy's tiers as a unit, like the OS paper's 4 KB pages).  The tier
+layout comes from a :class:`~repro.core.hierarchy.MemoryHierarchy` —
+two-tier HBM/host by default, or any deeper stack (e.g. the
+HBM -> DRAM-sim -> NVM-sim demo) via ``PagedKVConfig.hierarchy``.  Tier 0
+is the serving tier: block tables map (sequence, span) -> logical page ->
+tier-0 pool slot for the paged_attention kernel, so a page must be
+promoted to tier 0 before it can be attended to.
+
+Each tier's slots are placed by its own color-aware sub-buddy allocator
+(bank = pool-slot stripe = HBM-controller analogue).
 
 SysMon charging: every decode step reads all pages of active sequences
 and writes the tail page — the exact access stream (no sampling error),
@@ -18,8 +24,10 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.placement import FAST, SLOW
-from repro.core.tiers import NO_SLOT, TierConfig, TierStore
+from repro.core.hierarchy import MemoryHierarchy
+from repro.core.tiers import NO_SLOT, StoreConfig, TierStore
+
+SERVE_TIER = 0   # compute only ever reads tier 0 (the fastest device pool)
 
 
 @dataclass
@@ -28,38 +36,49 @@ class PagedKVConfig:
     n_kv_heads: int
     head_dim: int
     page_size: int = 16
-    fast_slots: int = 64          # HBM pool capacity (pages)
-    slow_slots: int = 512         # host pool capacity
+    fast_slots: int = 64          # HBM pool capacity (two-tier default)
+    slow_slots: int = 512         # host pool capacity (two-tier default)
     dtype: object = jnp.float32
+    # full tier stack; None -> MemoryHierarchy.two_tier(fast, slow)
+    hierarchy: MemoryHierarchy | None = None
+    # logical page count; None -> total backing capacity (tiers 1..deepest)
+    n_pages: int | None = None
 
 
 class PagedKVCache:
     def __init__(self, cfg: PagedKVConfig):
         self.cfg = cfg
+        hier = cfg.hierarchy or MemoryHierarchy.two_tier(cfg.fast_slots,
+                                                         cfg.slow_slots)
+        n_pages = (cfg.n_pages if cfg.n_pages is not None
+                   else sum(t.slots for t in hier.tiers[1:]))
         shape = (cfg.n_layers, 2, cfg.page_size, cfg.n_kv_heads, cfg.head_dim)
-        self.store = TierStore(TierConfig(
-            n_pages=cfg.slow_slots, fast_slots=cfg.fast_slots,
-            slow_slots=cfg.slow_slots, page_shape=shape, dtype=cfg.dtype))
-        self._free_ids = list(range(cfg.slow_slots - 1, -1, -1))
+        self.store = TierStore(StoreConfig(
+            n_pages=n_pages, page_shape=shape, hierarchy=hier,
+            dtype=cfg.dtype))
+        self.n_pages = n_pages
+        self._free_ids = list(range(n_pages - 1, -1, -1))
 
     # -- logical page lifecycle ------------------------------------------------
-    def new_page(self, tier: int = FAST) -> int | None:
+    def new_page(self, tier: int = SERVE_TIER) -> int | None:
+        """Bind a fresh logical page, preferring ``tier`` and cascading
+        down the hierarchy when a pool is full (HBM full -> next tier,
+        promote later)."""
         if not self._free_ids:
             return None
         pid = self._free_ids.pop()
-        if not self.store.allocate(pid, tier):
-            if tier == FAST and self.store.allocate(pid, SLOW):
-                return pid            # HBM full: land on host, promote later
-            self._free_ids.append(pid)
-            return None
-        return pid
+        for t in range(tier, self.store.n_tiers):
+            if self.store.allocate(pid, t):
+                return pid
+        self._free_ids.append(pid)
+        return None
 
     def free_page(self, pid: int) -> None:
         self.store.release(pid)
         self._free_ids.append(pid)
 
     def is_resident(self, pid: int) -> bool:
-        return int(self.store.tier[pid]) == FAST and \
+        return int(self.store.tier[pid]) == SERVE_TIER and \
             int(self.store.slot[pid]) != NO_SLOT
 
     def fast_slot(self, pid: int) -> int:
@@ -67,13 +86,14 @@ class PagedKVCache:
         return int(self.store.slot[pid])
 
     def resident_mask(self, pids) -> np.ndarray:
-        """bool [k]: which of ``pids`` are live in the fast pool."""
+        """bool [k]: which of ``pids`` are live in the serving (tier-0)
+        pool."""
         pids = np.asarray(pids, np.int64)
-        return (self.store.tier[pids] == FAST) & \
+        return (self.store.tier[pids] == SERVE_TIER) & \
             (self.store.slot[pids] != NO_SLOT)
 
     def fast_slots_of(self, pids) -> np.ndarray:
-        """int32 [k] fast-pool slots for a batch of logical pages — the
+        """int32 [k] tier-0 pool slots for a batch of logical pages — the
         vectorized block-table fill (all pages must be HBM-resident)."""
         pids = np.asarray(pids, np.int64)
         assert self.resident_mask(pids).all(), \
@@ -84,7 +104,7 @@ class PagedKVCache:
                     n_cols: int) -> tuple[np.ndarray, np.ndarray]:
         """(page_tables, block_tables) int32 [B, n_cols] for a batch of
         sequences' logical page lists: logical ids feed SysMon charging,
-        fast-pool slots feed the paged_attention kernel.  One vectorized
+        tier-0 pool slots feed the paged_attention kernel.  One vectorized
         page-table lookup per row (no per-page loops); unused columns are
         zero and must be masked by position/length downstream."""
         B = len(pages_rows)
@@ -100,19 +120,20 @@ class PagedKVCache:
     def write_token_kv(self, pid: int, layer_kv: jnp.ndarray,
                        offset: int) -> None:
         """layer_kv: [L, 2, Hkv, Dh] for one token at in-page ``offset``.
-        Fast path writes straight into the pool slot; bumps the version
-        (the dirty bit for optimistic migration)."""
-        slot = int(self.store.slot[pid])
+        Device-tier path writes straight into the pool slot; host tiers
+        read-modify-write the page.  Bumps the version (the dirty bit for
+        optimistic migration)."""
+        t, slot = int(self.store.tier[pid]), int(self.store.slot[pid])
         assert slot != NO_SLOT
-        if int(self.store.tier[pid]) == FAST:
-            self.store.fast_pool = self.store.fast_pool.at[
-                slot, :, :, offset].set(layer_kv.astype(self.store.cfg.dtype))
-            self.store.writes_to[FAST] += 1
+        if self.store.is_device_tier(t):
+            pool = self.store.pools[t]
+            pool.data = pool.data.at[slot, :, :, offset].set(
+                layer_kv.astype(pool.dtype))
         else:
-            page = self.store._slow_read(slot)
+            page = self.store._host_read(t, slot)
             page[:, :, offset] = np.asarray(layer_kv, np.float32)
-            self.store._slow_write(slot, page)
-            self.store.writes_to[SLOW] += 1
+            self.store._host_write(t, slot, page)
+        self.store.writes_to[t] += 1
         self.store.version[pid] += 1
 
     def layer_pools(self, layer: int) -> tuple[jnp.ndarray, jnp.ndarray]:

@@ -1,0 +1,106 @@
+"""Golden-fixture generator for the two-tier parity pin.
+
+Runs a deterministic memos scenario — phased hot sets, migrations in both
+directions, wear tracking + Start-Gap leveling active — and dumps the
+complete observable hierarchy state to ``tests/data/two_tier_golden.npz``.
+
+The committed fixture was produced by the **pre-redesign** ``TierStore``
+(the hardcoded FAST/SLOW implementation, commit 0434817); the regression
+test ``tests/test_hierarchy.py::test_two_tier_parity_vs_golden`` replays
+the same scenario through ``MemoryHierarchy.two_tier`` and asserts every
+array matches bit for bit.  Regenerate only if the scenario itself
+changes (which invalidates the pin):
+
+    PYTHONPATH=src:tests python tests/helpers/gen_two_tier_golden.py
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+OUT = Path(__file__).resolve().parents[1] / "data" / "two_tier_golden.npz"
+
+SYSMON_FIELDS = ("reads", "writes", "access_count", "hist", "last_access",
+                 "intv_cnt", "intv_sum", "intv_sqsum", "bank_freq",
+                 "slab_freq", "sample_idx")
+
+
+def run_scenario():
+    """The pinned scenario: 32 pages, 8 fast slots, leveling every 5 writes,
+    three phases of shifting hot sets driving promotions and demotions."""
+    from repro.core import sysmon
+    from repro.core.memos import MemosConfig, MemosManager
+    from repro.core.tiers import TierConfig, TierStore
+
+    store = TierStore(TierConfig(
+        n_pages=32, fast_slots=8, slow_slots=32, page_shape=(4,),
+        dtype=jnp.float32, n_banks=2, n_slabs=4, gap_write_interval=5))
+    slow_tier = int(store.tier[0])          # pages start on the slow tier
+    for p in range(32):
+        assert store.allocate(p, slow_tier)
+        store.write_page(p, np.full(4, float(p), np.float32))
+
+    mgr = MemosManager(store, MemosConfig(interval=4, adaptive_interval=False,
+                                          engine="batched"))
+    sm = sysmon.init(32, store.cfg.n_banks, store.cfg.n_slabs)
+    rng = np.random.RandomState(7)
+    for step in range(24):
+        phase = step // 8                   # hot set shifts twice
+        hot = np.arange(phase * 6, phase * 6 + 6)
+        warm = rng.randint(20, 32, size=3)
+        sm = sysmon.record(sm, jnp.asarray(hot, jnp.int32), is_write=True)
+        sm = sysmon.record(sm, jnp.asarray(warm, jnp.int32), is_write=False)
+        if step % 5 == 0:                   # host-side demand writes -> wear
+            store.write_page(int(hot[0]), np.full(4, 100.0 + step, np.float32)) \
+                if int(store.tier[hot[0]]) == slow_tier else None
+        sm, _ = mgr.maybe_step(sm)
+    return store, mgr, sm
+
+
+def collect(store, mgr, sm) -> dict:
+    state = {
+        "tier": np.asarray(store.tier),
+        "slot": np.asarray(store.slot),
+        "version": np.asarray(store.version),
+        "fast_pool": np.asarray(store.fast_pool, np.float32),
+        "pages": np.stack([store.read_page(p)
+                           for p in range(store.cfg.n_pages)]),
+        "wear_counts": store.wear.wear_counts(),
+        "wear_remap": np.asarray(store.wear._remap),
+        "wear_writes_total": np.int64(store.wear.writes_total),
+        "leveling_writes": np.int64(store.wear.leveling_writes),
+        "traffic_fast_to_slow": np.int64(store.traffic[(0, 1)]),
+        "traffic_slow_to_fast": np.int64(store.traffic[(1, 0)]),
+        "writes_to_fast": np.int64(store.writes_to[0]),
+        "writes_to_slow": np.int64(store.writes_to[1]),
+        "reads_from_fast": np.int64(store.reads_from[0]),
+        "reads_from_slow": np.int64(store.reads_from[1]),
+        "n_reports": np.int64(len(mgr.reports)),
+        "migrated_per_pass": np.asarray(
+            [r.migrations.migrated for r in mgr.reports], np.int64),
+        "to_fast_per_pass": np.asarray(
+            [r.migrations.to_fast for r in mgr.reports], np.int64),
+        "to_slow_per_pass": np.asarray(
+            [r.migrations.to_slow for r in mgr.reports], np.int64),
+    }
+    for f in SYSMON_FIELDS:
+        state[f"sysmon_{f}"] = np.asarray(getattr(sm, f))
+    return state
+
+
+def main():
+    store, mgr, sm = run_scenario()
+    state = collect(store, mgr, sm)
+    assert state["traffic_fast_to_slow"] > 0, "scenario must demote pages"
+    assert state["traffic_slow_to_fast"] > 0, "scenario must promote pages"
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(OUT, **state)
+    print(f"wrote {OUT} ({OUT.stat().st_size} bytes), "
+          f"{int(state['n_reports'])} memos passes, "
+          f"{int(state['migrated_per_pass'].sum())} migrations")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,7 @@ from repro.core import sysmon
 from repro.core.memos import MemosConfig, MemosManager
 from repro.core.migration import (BatchedMigrationEngine, MigrationEngine,
                                   make_engine, plan_locked)
-from repro.core.placement import FAST, SLOW
+from repro.core.hierarchy import FAST, SLOW
 from repro.core.tiers import NO_SLOT, TierConfig, TierStore
 from repro.serving.kv_cache import PagedKVCache, PagedKVConfig
 

@@ -9,7 +9,7 @@ from repro.core import costmodel, patterns, placement, predictor, sysmon
 from repro.core.allocator import SubBuddyAllocator, SubBuddyConfig
 from repro.core.memos import MemosConfig, MemosManager
 from repro.core.migration import MigrationEngine
-from repro.core.placement import FAST, SLOW
+from repro.core.hierarchy import FAST, SLOW
 from repro.core.tiers import TierConfig, TierStore
 
 

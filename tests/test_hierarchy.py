@@ -1,0 +1,334 @@
+"""N-tier MemoryHierarchy API: two-tier parity against the pre-redesign
+golden trace, MediumSpec validation, bf16 host-pool bit-pattern storage,
+color-geometry clamp warning, 3-tier migration/memos end-to-end, and
+per-tier wear telemetry."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import gen_two_tier_golden as golden
+
+from repro.core import costmodel as cm
+from repro.core import sysmon
+from repro.core.hierarchy import FAST, SLOW, MediumSpec, MemoryHierarchy
+from repro.core.memos import MemosConfig, MemosManager
+from repro.core.migration import BatchedMigrationEngine, MigrationEngine
+from repro.core.placement import target_tier
+from repro.core.tiers import NO_SLOT, StoreConfig, TierConfig, TierStore
+
+
+def make_3tier_store(n=24, hbm=4, dram=8, nvm=24, shape=(4,), seed=0,
+                     **hier_kw):
+    h = MemoryHierarchy.three_tier(hbm, dram, nvm, **hier_kw)
+    s = TierStore(StoreConfig(n_pages=n, page_shape=shape, hierarchy=h,
+                              n_banks=2, n_slabs=2))
+    rng = np.random.RandomState(seed)
+    for p in range(n):
+        assert s.allocate(p, h.deepest)
+        s.write_page(p, rng.standard_normal(shape).astype(np.float32))
+    return s
+
+
+# =============================================================================
+# two-tier parity: MemoryHierarchy.two_tier vs the pre-redesign TierStore
+# =============================================================================
+
+def test_two_tier_parity_vs_golden():
+    """Replays the pinned scenario (see tests/helpers/gen_two_tier_golden)
+    through the redesigned store and compares every observable array —
+    page table, pool contents, SysMon counters, wear counters, traffic —
+    bit for bit against the fixture captured from the pre-redesign
+    hardcoded-FAST/SLOW implementation."""
+    ref = np.load(golden.OUT)
+    store, mgr, sm = golden.run_scenario()
+    got = golden.collect(store, mgr, sm)
+    assert set(ref.files) == set(got)
+    for key in ref.files:
+        np.testing.assert_array_equal(
+            np.asarray(got[key]), ref[key],
+            err_msg=f"two-tier parity diverged from pre-redesign "
+                    f"behavior at {key!r}")
+
+
+def test_two_tier_shim_matches_explicit_hierarchy():
+    """TierConfig and an explicit two_tier StoreConfig build identical
+    stores."""
+    a = TierStore(TierConfig(n_pages=8, fast_slots=4, slow_slots=8,
+                             page_shape=(4,), n_banks=2, n_slabs=2))
+    b = TierStore(StoreConfig(
+        n_pages=8, page_shape=(4,),
+        hierarchy=MemoryHierarchy.two_tier(4, 8), n_banks=2, n_slabs=2))
+    assert a.hierarchy == b.hierarchy
+    assert a.cfg.fast_slots == b.cfg.fast_slots == 4
+    assert a.cfg.slow_slots == b.cfg.slow_slots == 8
+    assert [type(p) for p in a.pools] == [type(p) for p in b.pools]
+
+
+# =============================================================================
+# MediumSpec / MemoryHierarchy validation
+# =============================================================================
+
+def test_medium_spec_validation():
+    with pytest.raises(ValueError):
+        MediumSpec("X", 4, cm.HBM, residency="vram")
+    with pytest.raises(ValueError):
+        MediumSpec("X", 0, cm.HBM, residency="device")
+    with pytest.raises(ValueError):        # wear needs a host pool
+        MediumSpec("X", 4, cm.HBM, residency="device", wear_tracked=True)
+    with pytest.raises(ValueError):        # leveling needs tracking
+        MediumSpec("X", 4, cm.NVM, wear_leveling=True)
+    with pytest.raises(ValueError):        # a hierarchy needs >= 2 tiers
+        MemoryHierarchy(tiers=(MediumSpec("X", 4, cm.HBM),))
+
+
+def test_hierarchy_tier_subsets():
+    h = MemoryHierarchy.three_tier(4, 8, 16)
+    assert h.n_tiers == 3 and h.deepest == 2
+    assert h.device_tiers() == [0, 1]
+    assert h.host_tiers() == [2]
+    assert h.wear_tiers() == [2]
+    assert h.total_slots() == 28
+    h2 = h.with_tier(2, wear_tracked=False, wear_leveling=False)
+    assert h2.wear_tiers() == []
+
+
+# =============================================================================
+# satellite: bf16 host pools store the uint16 bit-pattern, not float32
+# =============================================================================
+
+def test_bf16_host_pool_stores_bitpattern():
+    s = TierStore(TierConfig(n_pages=4, fast_slots=2, slow_slots=4,
+                             page_shape=(8,), dtype=jnp.bfloat16,
+                             n_banks=1, n_slabs=2, track_wear=False))
+    assert s.pools[1].data.dtype == np.uint16, \
+        "bf16 host pool must hold uint16 bit-patterns, not widen to f32"
+    rng = np.random.RandomState(0)
+    vals = rng.standard_normal((4, 8)).astype(np.float32)
+    for p in range(4):
+        assert s.allocate(p, SLOW)
+        s.write_page(p, vals[p])
+    # round trip is exactly the bf16 quantization of the input (bit-exact
+    # vs the device-pool cast), not a lossless f32 store
+    for p in range(4):
+        expect = vals[p].astype(jnp.bfloat16).astype(np.float32)
+        np.testing.assert_array_equal(s.read_page(p), expect)
+    # the batched path hits the same bits
+    batch = rng.standard_normal((2, 8)).astype(np.float32)
+    s.slow_write_batch(np.array([0, 2]), batch)
+    np.testing.assert_array_equal(
+        s.slow_read_batch(np.array([0, 2])),
+        batch.astype(jnp.bfloat16).astype(np.float32))
+
+
+def test_bf16_migration_roundtrip_bitexact():
+    """fast(bf16) -> host(uint16 bits) -> fast loses nothing beyond the
+    initial bf16 cast."""
+    s = TierStore(TierConfig(n_pages=6, fast_slots=6, slow_slots=6,
+                             page_shape=(4,), dtype=jnp.bfloat16,
+                             n_banks=1, n_slabs=2))
+    rng = np.random.RandomState(1)
+    vals = rng.standard_normal((6, 4)).astype(np.float32)
+    for p in range(6):
+        assert s.allocate(p, FAST)
+        s.write_page(p, vals[p])
+    first = np.stack([s.read_page(p) for p in range(6)])
+    eng = BatchedMigrationEngine(s, chunk_pages=2)
+    eng.migrate_optimistic(range(6), SLOW)
+    eng.migrate_locked(range(6), FAST)
+    after = np.stack([s.read_page(p) for p in range(6)])
+    np.testing.assert_array_equal(first, after)
+
+
+# =============================================================================
+# satellite: color-geometry clamping warns instead of silently rewriting
+# =============================================================================
+
+def test_color_geometry_clamp_warns():
+    with pytest.warns(UserWarning, match="clamped"):
+        s = TierStore(TierConfig(n_pages=16, fast_slots=8, slow_slots=16,
+                                 page_shape=(2,), n_banks=32, n_slabs=16))
+    # the shrink loop halves banks first, then slabs, until every color
+    # exists in the smallest pool
+    assert s.cfg.n_banks * s.cfg.n_slabs <= 8
+    assert (s.cfg.n_banks, s.cfg.n_slabs) == (1, 8)
+    assert s.alloc[FAST].cfg.n_colors == 8
+
+
+def test_color_geometry_fits_no_warning():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        s = TierStore(TierConfig(n_pages=16, fast_slots=8, slow_slots=16,
+                                 page_shape=(2,), n_banks=2, n_slabs=4))
+    assert (s.cfg.n_banks, s.cfg.n_slabs) == (2, 4)
+
+
+def test_color_geometry_default_autosizes_silently():
+    """The default geometry (n_banks/n_slabs unset) adapts to the
+    smallest pool without warning — only an explicit request that can't
+    fit warns."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        s = TierStore(TierConfig(n_pages=16, fast_slots=8, slow_slots=16,
+                                 page_shape=(2,)))
+    assert s.cfg.n_banks * s.cfg.n_slabs <= 8
+    assert s.cfg.n_banks >= 1 and s.cfg.n_slabs >= 1
+
+
+# =============================================================================
+# 3-tier store: moves across every tier pair, engine parity, invariants
+# =============================================================================
+
+def assert_alloc_invariants(s: TierStore):
+    for tier in range(s.n_tiers):
+        cap = s.hierarchy[tier].slots
+        live = np.nonzero((s.slot != NO_SLOT) & (s.tier == tier))[0]
+        slots = s.slot[live]
+        assert len(set(slots.tolist())) == live.size, \
+            f"tier {tier}: two pages share a physical slot"
+        assert ((slots >= 0) & (slots < cap)).all()
+        assert s.alloc[tier].n_free == cap - live.size, \
+            f"tier {tier}: allocator free count disagrees with page table"
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_three_tier_moves_preserve_contents(quantize):
+    s = make_3tier_store(quantize_nvm=quantize)
+    eng = BatchedMigrationEngine(s, chunk_pages=3)
+    expect = {p: s.read_page(p).copy() for p in range(24)}
+    # walk pages through every boundary: 2->0 (host->device), 0->1
+    # (device->device), 1->2 (device->host), 2->1, 1->0
+    for pages, dst in ([range(8), 0], [range(4), 1], [range(4), 2],
+                       [range(2), 1], [range(2), 0]):
+        eng.migrate_locked(pages, dst)
+        assert_alloc_invariants(s)
+    tol = (1 / 127 + 1e-6) if quantize else 0.0
+    for p in range(24):
+        np.testing.assert_allclose(s.read_page(p), expect[p], atol=2 * tol)
+    # every pair the walk crossed shows traffic
+    for pair in [(2, 0), (0, 1), (1, 2), (2, 1), (1, 0)]:
+        assert s.traffic[pair] > 0, f"no traffic across {pair}"
+
+
+def test_three_tier_engine_parity():
+    """Reference and batched engines stay in lockstep on a 3-tier store."""
+    ref_s = make_3tier_store(seed=3)
+    bat_s = make_3tier_store(seed=3)
+    ref = MigrationEngine(ref_s)
+    bat = BatchedMigrationEngine(bat_s, chunk_pages=3)
+    rng = np.random.RandomState(4)
+    for round_ in range(10):
+        pages = rng.choice(24, size=rng.randint(1, 10), replace=False)
+        dst = int(rng.randint(3))
+        locked = rng.rand() < 0.5
+        st_r = (ref.migrate_locked if locked else
+                ref.migrate_optimistic)(pages, dst)
+        st_b = (bat.migrate_locked if locked else
+                bat.migrate_optimistic)(pages, dst)
+        assert (st_r.migrated, st_r.to_fast, st_r.to_slow) == \
+            (st_b.migrated, st_b.to_fast, st_b.to_slow), f"round {round_}"
+        np.testing.assert_array_equal(ref_s.tier, bat_s.tier)
+        np.testing.assert_array_equal(ref_s.slot, bat_s.slot)
+        for p in range(24):
+            np.testing.assert_array_equal(ref_s.read_page(p),
+                                          bat_s.read_page(p))
+        assert ref_s.traffic == bat_s.traffic
+        assert_alloc_invariants(bat_s)
+
+
+def test_target_tier_three_level_utility_split():
+    """Hot pages -> tier 0; warm read-heavy pages fill the DRAM-sim
+    middle tier by benefit; cold pages sink to NVM."""
+    h = MemoryHierarchy.three_tier(4, 2, 16)
+    n = 8
+    wd = np.full(n, 0, np.int8)
+    hot = np.zeros(n, bool)
+    hot[:2] = True                       # pages 0,1 demand tier 0
+    future = np.zeros(n, np.int8)
+    reuse = np.zeros(n, np.int8)
+    reads = np.array([9, 9, 50, 40, 3, 2, 0, 0])
+    writes = np.zeros(n, np.int64)
+    tgt = target_tier(wd, hot, future, reuse, hierarchy=h,
+                      reads=reads, writes=writes)
+    assert tgt[0] == 0 and tgt[1] == 0
+    # the 2-slot middle tier takes the two highest-benefit tolerant pages
+    assert tgt[2] == 1 and tgt[3] == 1
+    assert (tgt[4:] == 2).all()
+    # untouched pages never occupy an intermediate tier
+    assert (tgt[6:] == 2).all()
+
+
+def test_three_tier_memos_loop_distributes_and_migrates():
+    """End to end: the memos loop on a 3-tier store promotes the hot set
+    to HBM, parks the warm set in the DRAM-sim tier, sinks the cold set
+    to NVM, and moves pages across both boundaries."""
+    s = make_3tier_store(n=24, hbm=4, dram=6, nvm=24, seed=5)
+    mgr = MemosManager(s, MemosConfig(interval=2, adaptive_interval=False))
+    sm = sysmon.init(24, s.cfg.n_banks, s.cfg.n_slabs)
+    expect = {p: s.read_page(p).copy() for p in range(24)}
+    rng = np.random.RandomState(6)
+    for step in range(24):
+        phase = step // 12
+        hot = jnp.arange(phase * 4, phase * 4 + 4)      # shifts once
+        warm = jnp.asarray(rng.randint(8, 12, size=2))  # read-mostly
+        sm = sysmon.record(sm, hot, is_write=True)
+        sm = sysmon.record(sm, warm, is_write=False)
+        sm, rep = mgr.maybe_step(sm)
+    used = s.tier_used()
+    assert used[0] > 0 and used[2] > 0
+    assert sum(used) == 24
+    # both hierarchy boundaries carried traffic during the run
+    b01 = s.traffic[(0, 1)] + s.traffic[(1, 0)]
+    b12 = s.traffic[(1, 2)] + s.traffic[(2, 1)]
+    b02 = s.traffic[(0, 2)] + s.traffic[(2, 0)]
+    assert b01 + b02 > 0, "nothing crossed the HBM boundary"
+    assert b12 + b02 > 0, "nothing crossed the NVM boundary"
+    # the current hot set ends HBM-resident; contents survive everything
+    assert all(int(s.tier[p]) == 0 for p in range(4, 8))
+    for p in range(24):
+        np.testing.assert_array_equal(s.read_page(p), expect[p])
+
+
+# =============================================================================
+# wear/energy telemetry attaches per wear_tracked tier
+# =============================================================================
+
+def test_wear_attaches_to_any_wear_tracked_tier():
+    """A hierarchy with two wear-tracked host tiers gets two independent
+    trackers and two energy meters feeding the memos report."""
+    h = MemoryHierarchy(tiers=(
+        MediumSpec("HBM", 4, cm.HBM, residency="device"),
+        MediumSpec("CXL-NVM", 8, cm.NVM, residency="host",
+                   wear_tracked=True),
+        MediumSpec("NVM", 16, cm.NVM, residency="host", wear_tracked=True,
+                   wear_leveling=True, gap_write_interval=4),
+    ))
+    s = TierStore(StoreConfig(n_pages=16, page_shape=(4,), hierarchy=h,
+                              n_banks=2, n_slabs=2))
+    assert set(s.wear_by_tier) == {1, 2}
+    assert set(s.leveler_by_tier) == {2}
+    for p in range(16):
+        assert s.allocate(p, 2)
+        s.write_page(p, np.full(4, p, np.float32))
+    eng = BatchedMigrationEngine(s)
+    eng.migrate_locked(range(4), 1)      # demotion commits charge tier 1
+    assert s.wear_by_tier[1].writes_total == 4
+    assert s.wear_by_tier[2].writes_total == 16
+    s.write_page(0, np.zeros(4, np.float32))   # page 0 now lives in tier 1
+    assert s.wear_by_tier[1].writes_total == 5
+    mgr = MemosManager(s, MemosConfig(interval=1, adaptive_interval=False))
+    assert set(mgr.meters) == {1, 2}
+    # meters report per-pass deltas: writes landing after meter creation
+    s.write_page(1, np.zeros(4, np.float32))   # tier 1
+    s.write_page(8, np.zeros(4, np.float32))   # tier 2
+    sm = sysmon.init(16, s.cfg.n_banks, s.cfg.n_slabs)
+    sm = sysmon.record(sm, jnp.asarray([0, 1]), is_write=True)
+    sm, rep = mgr.maybe_step(sm)
+    assert set(rep.nvm_by_tier) == {1, 2}
+    assert rep.nvm is rep.nvm_by_tier[2]        # compat alias: deepest
+    assert rep.nvm_by_tier[1].slow_writes >= 1
+    assert rep.nvm_by_tier[2].slow_writes >= 1
+    assert rep.nvm_by_tier[1].wear_max >= 1
+    s.wear_by_tier[1].check()
+    s.wear_by_tier[2].check()

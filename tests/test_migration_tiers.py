@@ -8,7 +8,7 @@ from helpers.optional_hypothesis import given, settings, st
 from repro.core import sysmon
 from repro.core.memos import MemosConfig, MemosManager
 from repro.core.migration import MigrationEngine
-from repro.core.placement import FAST, SLOW
+from repro.core.hierarchy import FAST, SLOW
 from repro.core.tiers import NO_SLOT, TierConfig, TierStore
 
 

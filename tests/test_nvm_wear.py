@@ -18,7 +18,8 @@ from repro.core import costmodel as cm
 from repro.core import sysmon
 from repro.core.memos import MemosConfig, MemosManager
 from repro.core.migration import BatchedMigrationEngine, MigrationEngine
-from repro.core.placement import FAST, SLOW, BandwidthBalancer, plan, target_tier
+from repro.core.hierarchy import FAST, SLOW
+from repro.core.placement import BandwidthBalancer, plan, target_tier
 from repro.core.tiers import TierConfig, TierStore
 from repro.kernels.wear_update import wear_update, wear_update_ref
 from repro.nvm import EnergyMeter, NvmWear, StartGapLeveler, init_wear

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import registry, smoke
-from repro.core.placement import FAST, SLOW
+from repro.core.hierarchy import FAST, SLOW, MemoryHierarchy
 from repro.models import transformer as T
 from repro.serving import ContinuousBatcher, PagedServingEngine, Request, ServeConfig
 
@@ -157,6 +157,39 @@ def test_fused_dispatch_amortization(model):
     n_fused = len(history(decode_block=16))
     assert n_ref == 32                   # one step per token: 2 prompt + 30
     assert n_fused <= -(-32 // 16) + 2   # one step per dispatch (+pow2 tail)
+
+
+def test_three_tier_serving_end_to_end(model):
+    """The HBM -> DRAM-sim -> NVM-sim hierarchy serves correctly under
+    pressure: 8 HBM slots + a 12-slot DRAM-sim middle tier + host NVM,
+    3 concurrent sequences, memos passes migrating between dispatches.
+    Generated tokens must equal the dense-model oracle (tiering round
+    trips are lossless) and pages must cross both hierarchy boundaries."""
+    cfg, params = model
+    # 8 + 4 device slots < the ~13-page working set, so pages spill all
+    # the way to the host NVM tier and get promoted back on demand
+    hier = MemoryHierarchy.three_tier(8, 4, 128)
+    eng = PagedServingEngine(cfg, params, ServeConfig(
+        page_size=8, max_batch=3, hierarchy=hier, memos_interval=8,
+        decode_block=8))
+    prompts = [[5, 7, 9, 11, 13], [21, 22, 23], [1, 2, 3, 4, 5, 6, 7, 8, 9]]
+    reqs = [eng.submit(p, max_new=24) for p in prompts]
+    eng.run(max_steps=600)
+    assert eng.batcher.all_done()
+    assert eng.memos.reports, "memos never ran between dispatches"
+    st = eng.kv.store
+    assert st.n_tiers == 3
+    hbm_boundary = st.traffic[(0, 1)] + st.traffic[(1, 0)] \
+        + st.traffic[(0, 2)] + st.traffic[(2, 0)]
+    nvm_boundary = st.traffic[(1, 2)] + st.traffic[(2, 1)] \
+        + st.traffic[(0, 2)] + st.traffic[(2, 0)]
+    assert hbm_boundary > 0, "no pages crossed the HBM boundary"
+    assert nvm_boundary > 0, "no pages crossed the NVM boundary"
+    for p, r in zip(prompts, reqs):
+        assert r.generated == ref_greedy(cfg, params, p, 24), \
+            "3-tier round trip corrupted KV"
+    occ = eng.kv.occupancy()
+    assert occ["t1_dram_total"] == 4 and "t2_nvm_used" in occ
 
 
 def test_moe_engine_tracks_expert_hotness():
