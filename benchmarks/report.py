@@ -130,11 +130,17 @@ def _scalar_rows(obj, prefix: str = "", depth: int = 2) -> list[tuple[str, str]]
 def serving_sweep_rows(r: dict) -> list[str]:
     """Render the serving_throughput K x memos sweep as one table: each
     engine path's tokens/s with memos on/off, plus the speedup over the
-    pre-fusion reference path."""
+    pre-fusion reference path.  Async-pipeline paths (``k16+overlap``,
+    ``k16+pinned``, ...) only run memos-on; their delta vs the
+    synchronous K_max path gets its own row block."""
+
+    def path_key(p: str):
+        base = p.split("+", 1)[0]
+        k = int(base[1:]) if base.startswith("k") and base[1:].isdigit() else 0
+        return (p != "reference", k, p.count("+"), p)
+
     sweep = r.get("sweep", {})
-    paths = sorted({k.rsplit("_", 1)[0] for k in sweep},
-                   key=lambda p: (p != "reference",
-                                  int(p[1:]) if p.startswith("k") else 0))
+    paths = sorted({k.rsplit("_", 1)[0] for k in sweep}, key=path_key)
     base = sweep.get("reference_memos", {}).get("tokens_per_s")
     lines = ["| path | tok/s (memos on) | tok/s (memos off) | "
              "vs reference (memos on) |", "|---|---|---|---|"]
@@ -142,8 +148,19 @@ def serving_sweep_rows(r: dict) -> list[str]:
         on = sweep.get(f"{p}_memos", {}).get("tokens_per_s")
         off = sweep.get(f"{p}_nomemos", {}).get("tokens_per_s")
         rel = f"{on / base:.2f}x" if on and base else "—"
-        lines.append(f"| {p} | {on:.1f} | {off:.1f} | {rel} |"
-                     if on and off else f"| {p} | — | — | — |")
+        on_s = f"{on:.1f}" if on else "—"
+        off_s = f"{off:.1f}" if off else "—"
+        lines.append(f"| {p} | {on_s} | {off_s} | {rel} |"
+                     if on or off else f"| {p} | — | — | — |")
+    kmax = r.get("k_max")
+    deltas = [(name, r.get(f"speedup_{name}_vs_sync"))
+              for name in ("overlap", "pinned", "overlap_pinned")]
+    if kmax and any(v for _, v in deltas):
+        lines.append("")
+        lines.append(f"Async memos pipeline at K={kmax} (memos on, "
+                     f"vs the synchronous k{kmax} path): " + ", ".join(
+                         f"{name.replace('_', '+')} = {v:.2f}x"
+                         for name, v in deltas if v))
     return lines
 
 

@@ -12,8 +12,21 @@ engine and the ``K=1 path`` every later PR must beat):
   * fused K=4/16 — one dispatch and one device->host token-block
                    transfer per K tokens (lax.scan inner loop).
 
-The acceptance bar for the fusion PR is fused K=16 >= 3x the K=1 path
-with memos enabled.  Results land in
+At K_max x memos-on the sweep adds the **asynchronous memos pipeline**
+axes (the PR 5 tentpole):
+
+  * +overlap        — the memos plan phase runs on a worker thread
+                      overlapping the next dispatch (snapshot -> plan ->
+                      versioned commit, degrading to sync on conflict);
+  * +pinned         — the slow tier is a pinned-host jax pool: demotion
+                      commits donate the pool, slow-tier KV appends and
+                      wear telemetry join the fused dispatch;
+  * +overlap+pinned — both.
+
+Bars: fused K=16 >= 3x the K=1 reference path (the fusion PR's bar), and
+the overlapped pipeline must not regress below the synchronous path
+(``--overlap-bar``, default 0.9 to absorb CI timer noise; the committed
+full-run JSON shows > 1x).  Results land in
 benchmarks/results/serving_throughput.json (aggregated by
 benchmarks/report.py into results/summary.md).
 
@@ -30,14 +43,19 @@ import numpy as np
 ROOT = Path(__file__).resolve().parents[1]
 
 
-def build_engine(cfg, params, *, k, memos, reference, args):
+def build_engine(cfg, params, *, k, memos, reference, args,
+                 overlap=False, pinned=False):
+    from repro.core.hierarchy import MemoryHierarchy
     from repro.serving import PagedServingEngine, ServeConfig
+    hier = (MemoryHierarchy.two_tier(args.fast_slots, args.slow_slots,
+                                     pinned_slow=True)
+            if pinned else None)
     return PagedServingEngine(cfg, params, ServeConfig(
         page_size=args.page_size, max_batch=args.batch,
         fast_slots=args.fast_slots, slow_slots=args.slow_slots,
-        memos_interval=args.memos_interval, memos_enabled=memos,
-        max_pages_per_seq=args.max_pages, decode_block=k,
-        reference=reference))
+        hierarchy=hier, memos_interval=args.memos_interval,
+        memos_enabled=memos, max_pages_per_seq=args.max_pages,
+        decode_block=k, overlap_plan=overlap, reference=reference))
 
 
 def serve_round(engine, cfg, args, rng):
@@ -54,14 +72,22 @@ def serve_round(engine, cfg, args, rng):
     return engine_reqs, dt
 
 
-def measure(cfg, params, *, k, memos, reference, args):
+def measure(cfg, params, *, k, memos, reference, args,
+            overlap=False, pinned=False):
     """Throughput for one engine config.  The engine persists across
     rounds (as in a real server), so jit caches stay warm; round 0 pays
     every compile and is discarded."""
     label = ("reference" if reference else f"k{k}") + \
+        ("+overlap" if overlap else "") + ("+pinned" if pinned else "") + \
         ("_memos" if memos else "_nomemos")
     engine = build_engine(cfg, params, k=k, memos=memos,
-                          reference=reference, args=args)
+                          reference=reference, args=args,
+                          overlap=overlap, pinned=pinned)
+    if not reference:
+        # compile every dispatch variant up front (tail-shrunken K,
+        # dual-pool when pinned) — which variant a boundary needs depends
+        # on runtime state, and a mid-round compile would be timed
+        engine.warmup()
     best = float("inf")
     for rep in range(args.repeats + 1):       # rep 0 warms compile caches
         rng = np.random.RandomState(0)
@@ -76,10 +102,13 @@ def measure(cfg, params, *, k, memos, reference, args):
         "tokens_per_s": toks / best,
         "memos_passes": len(engine.memos.reports),
         "migrated": sum(r.migrations.migrated for r in engine.memos.reports),
+        "plan_commits": engine.memos.plan_commits,
+        "plan_conflicts": engine.memos.plan_conflicts,
     }
     print(f"  {label:18s}: {best * 1e3:8.1f} ms  "
           f"{row['tokens_per_s']:10.1f} tok/s  "
           f"(memos passes {row['memos_passes']})")
+    engine.close()        # stop the async plan worker, if any
     return label, row
 
 
@@ -98,9 +127,17 @@ def main():
     ap.add_argument("--ks", type=int, nargs="+", default=[1, 4, 16])
     ap.add_argument("--repeats", type=int, default=2)
     ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke: minimal sweep, seconds total, no bar")
+                    help="CI smoke: minimal sweep, seconds total; the 3x "
+                         "fusion bar is waived but the overlap regression "
+                         "bar still applies")
     ap.add_argument("--no-check", action="store_true",
-                    help="always exit 0 regardless of the 3x bar")
+                    help="always exit 0 regardless of any bar")
+    ap.add_argument("--overlap-bar", type=float, default=0.9,
+                    help="min BEST-async-axis/sync tokens/s ratio: the "
+                         "better of +overlap and +overlap+pinned must "
+                         "stay within this factor of the synchronous "
+                         "K_max path (per-axis gating is too noisy on "
+                         "shared CPU runners; full runs should show > 1)")
     ap.add_argument("--out", type=Path,
                     default=ROOT / "benchmarks" / "results" /
                     "serving_throughput.json")
@@ -111,7 +148,10 @@ def main():
         args.max_new = min(args.max_new, 16)
         args.prompt_len = min(args.prompt_len, 8)
         args.ks = [1, 4]
-        args.repeats = 1
+        # two measured rounds: engine state differs between rounds (page
+        # residency, memos cadence), so a round can hit a not-yet-compiled
+        # dispatch variant — min-over-rounds absorbs one such compile
+        args.repeats = 2
 
     import jax
     from repro.configs import registry, smoke
@@ -137,6 +177,13 @@ def main():
 
     sweep = results["sweep"]
     kmax = max(args.ks)
+    # async-pipeline axes at K_max, memos on: overlapped plan phase,
+    # pinned-host slow tier, and the combination (the PR 5 tentpole)
+    for overlap, pinned in ((True, False), (False, True), (True, True)):
+        label, row = measure(cfg, params, k=kmax, memos=True,
+                             reference=False, args=args,
+                             overlap=overlap, pinned=pinned)
+        results["sweep"][label] = row
     # the headline ratio: fused K_max vs the K=1 path (the pre-fusion
     # reference engine — host sampling + standalone SysMon records),
     # both with memos enabled
@@ -149,6 +196,12 @@ def main():
     if speedup_fused1 is not None:
         results["speedup_kmax_vs_fused_k1_memos"] = speedup_fused1
     results["k_max"] = kmax
+    sync_base = sweep[f"k{kmax}_memos"]["tokens_per_s"]
+    for suffix in ("+overlap", "+pinned", "+overlap+pinned"):
+        row = sweep.get(f"k{kmax}{suffix}_memos")
+        if row:
+            results[f"speedup_{suffix.replace('+', '_').lstrip('_')}"
+                    "_vs_sync"] = row["tokens_per_s"] / sync_base
     results["config"] = {
         "arch": args.arch, "batch": args.batch, "requests": args.requests,
         "prompt_len": args.prompt_len, "max_new": args.max_new,
@@ -163,11 +216,20 @@ def main():
     print(f"  speedup  : K={kmax} fused = {speedup:.1f}x the K=1 path "
           f"(memos on; {'meets' if speedup >= bar else 'BELOW'} the "
           f"{bar:.0f}x bar){vs_fused1}")
+    overlap_ratio = results.get("speedup_overlap_pinned_vs_sync")
+    overlap_only = results.get("speedup_overlap_vs_sync")
+    if overlap_only is not None:
+        print(f"  overlap  : +overlap = {overlap_only:.2f}x sync, "
+              f"+overlap+pinned = {overlap_ratio:.2f}x sync "
+              f"(bar {args.overlap_bar:.2f})")
 
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(results, indent=2))
     print(f"wrote {args.out}")
-    return 0 if speedup >= bar or args.no_check or args.tiny else 1
+    ok = (speedup >= bar or args.tiny) and (
+        overlap_ratio is None or
+        max(overlap_ratio, overlap_only or 0.0) >= args.overlap_bar)
+    return 0 if ok or args.no_check else 1
 
 
 if __name__ == "__main__":

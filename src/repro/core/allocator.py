@@ -189,6 +189,24 @@ class SubBuddyAllocator:
             order += 1
         self._push(start, order)
 
+    def clone(self) -> "SubBuddyAllocator":
+        """A bookkeeping deep copy sharing the (immutable) config.
+
+        The asynchronous memos plan phase simulates Algorithm-2 slot
+        reservations against a clone on its worker thread, so the live
+        allocator is never touched off the dispatch-boundary path; the
+        commit replays the recorded reservations against the live
+        allocator and degrades to a synchronous re-plan if any replay
+        diverges."""
+        other = object.__new__(SubBuddyAllocator)
+        other.cfg = self.cfg
+        other.free_lists = [{c: deque(dq) for c, dq in bucket.items()}
+                            for bucket in self.free_lists]
+        other._free_blocks = set(self._free_blocks)
+        other._allocated = set(self._allocated)
+        other.n_free = self.n_free
+        return other
+
     def check_consistency(self) -> None:
         """Bookkeeping invariants (test support): the free-block set and the
         allocation set partition the pool exactly, ``n_free`` matches the

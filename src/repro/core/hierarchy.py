@@ -50,6 +50,8 @@ SLOW = 1  # deepest tier of a two_tier() hierarchy (NVM / host analogue)
 
 DEVICE = "device"   # jax array pool (HBM-resident)
 HOST = "host"       # numpy pool (host DRAM; the NVM-channel analogue)
+PINNED_HOST = "pinned_host"  # jax pool in pinned host memory: host-class
+                             # capacity, addressable from device code
 
 
 @dataclass(frozen=True)
@@ -63,8 +65,17 @@ class MediumSpec:
     per-physical-slot write counters of ``repro.nvm`` to this tier;
     ``wear_leveling`` adds Start-Gap rotation on top.  ``quantize_int8``
     stores pages as int8 + per-page scale (the soft-NVM read-cheap /
-    write-lossy analogue).  Wear, leveling, and quantization require
-    ``residency == "host"``.
+    write-lossy analogue).  Wear, leveling, and quantization are
+    host-class features: they require ``residency == "host"`` or
+    ``residency == "pinned_host"``.
+
+    ``pinned_host`` is the NVM/CXL analogue with device addressability:
+    the pool is one jax buffer placed in pinned host memory (plain host
+    placement where the backend has no memory kinds), so migrations in
+    and out of it stay inside the jax runtime (donated scatters instead
+    of numpy staging copies), the fused serving dispatch can append KV
+    into it and charge its wear counters on device, and int8
+    quantization fuses into the demotion gather as one kernel.
     """
 
     name: str
@@ -78,9 +89,9 @@ class MediumSpec:
     quantize_int8: bool = False
 
     def __post_init__(self):
-        if self.residency not in (DEVICE, HOST):
-            raise ValueError(f"residency must be '{DEVICE}' or '{HOST}', "
-                             f"got {self.residency!r}")
+        if self.residency not in (DEVICE, HOST, PINNED_HOST):
+            raise ValueError(f"residency must be '{DEVICE}', '{HOST}' or "
+                             f"'{PINNED_HOST}', got {self.residency!r}")
         if self.slots < 1:
             raise ValueError(f"tier {self.name!r} needs at least 1 slot")
         if self.residency == DEVICE and (self.wear_tracked
@@ -88,8 +99,9 @@ class MediumSpec:
                                          or self.quantize_int8):
             raise ValueError(
                 f"tier {self.name!r}: wear tracking / leveling / int8 "
-                "quantization are host-pool features (the device pool is "
-                "touched inside jitted steps with no accounting hook)")
+                "quantization are host-class features (the device pool is "
+                "touched inside jitted steps with no accounting hook; "
+                "pinned_host tiers support them)")
         if self.wear_leveling and not self.wear_tracked:
             raise ValueError(f"tier {self.name!r}: wear_leveling requires "
                              "wear_tracked")
@@ -97,6 +109,16 @@ class MediumSpec:
     @property
     def is_device(self) -> bool:
         return self.residency == DEVICE
+
+    @property
+    def is_pinned(self) -> bool:
+        return self.residency == PINNED_HOST
+
+    @property
+    def is_device_addressable(self) -> bool:
+        """Whether jitted device code can gather/scatter this tier's pool
+        directly (device tiers and pinned-host tiers)."""
+        return self.residency in (DEVICE, PINNED_HOST)
 
     def read_cost_ns(self) -> float:
         return cm.access_latency_ns(self.medium, is_write=False)
@@ -142,6 +164,9 @@ class MemoryHierarchy:
     def host_tiers(self) -> list[int]:
         return [i for i, t in enumerate(self.tiers) if not t.is_device]
 
+    def pinned_tiers(self) -> list[int]:
+        return [i for i, t in enumerate(self.tiers) if t.is_pinned]
+
     def wear_tiers(self) -> list[int]:
         return [i for i, t in enumerate(self.tiers) if t.wear_tracked]
 
@@ -157,13 +182,17 @@ class MemoryHierarchy:
     def two_tier(cls, fast_slots: int, slow_slots: int, *,
                  quantize_slow: bool = False, track_wear: bool = True,
                  wear_leveling: bool = True,
-                 gap_write_interval: int | None = None) -> "MemoryHierarchy":
+                 gap_write_interval: int | None = None,
+                 pinned_slow: bool = False) -> "MemoryHierarchy":
         """The pre-redesign FAST/SLOW pair: a device HBM tier over a host
         NVM-analogue tier.  Behaviorally bit-identical to the old
-        hardcoded ``TierStore`` (parity-pinned against a golden trace)."""
+        hardcoded ``TierStore`` (parity-pinned against a golden trace).
+        ``pinned_slow`` backs the NVM tier with a pinned-host jax buffer
+        instead of a numpy pool — same telemetry, device-addressable."""
         return cls(tiers=(
             MediumSpec("HBM", fast_slots, cm.HBM, residency=DEVICE),
-            MediumSpec("NVM", slow_slots, cm.NVM, residency=HOST,
+            MediumSpec("NVM", slow_slots, cm.NVM,
+                       residency=PINNED_HOST if pinned_slow else HOST,
                        wear_tracked=track_wear,
                        wear_leveling=track_wear and wear_leveling,
                        gap_write_interval=gap_write_interval,
@@ -174,15 +203,18 @@ class MemoryHierarchy:
     def three_tier(cls, hbm_slots: int, dram_slots: int, nvm_slots: int, *,
                    quantize_nvm: bool = False, track_wear: bool = True,
                    wear_leveling: bool = True,
-                   gap_write_interval: int | None = None) -> "MemoryHierarchy":
+                   gap_write_interval: int | None = None,
+                   pinned_nvm: bool = False) -> "MemoryHierarchy":
         """The HBM -> DRAM -> NVM demo hierarchy: a second device-resident
         pool simulates the DRAM channel (device<->device migration stays
         on-accelerator), backed by the host NVM-analogue tier with wear
-        telemetry."""
+        telemetry.  ``pinned_nvm`` makes the NVM tier a pinned-host jax
+        pool (device-addressable, donated demotion commits)."""
         return cls(tiers=(
             MediumSpec("HBM", hbm_slots, cm.HBM, residency=DEVICE),
             MediumSpec("DRAM", dram_slots, cm.DRAM, residency=DEVICE),
-            MediumSpec("NVM", nvm_slots, cm.NVM, residency=HOST,
+            MediumSpec("NVM", nvm_slots, cm.NVM,
+                       residency=PINNED_HOST if pinned_nvm else HOST,
                        wear_tracked=track_wear,
                        wear_leveling=track_wear and wear_leveling,
                        gap_write_interval=gap_write_interval,

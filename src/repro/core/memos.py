@@ -12,7 +12,8 @@ Ties SysMon -> predictor -> placement -> migration together:
        slots via Algorithm 2 (coldest bank x coldest slab) in the
        destination tier's own allocator
     5. bandwidth balancing: spill RD (then coolest WD) pages off the
-       fast channel while it is saturated
+       fast channel while it is saturated, into the backing tier with
+       the most bandwidth headroom
     6. NVM telemetry (Sec. 7.1): close the energy/lifetime accounting
        window of **every wear-tracked tier**; when any tier's projected
        lifetime from the live wear counters drops below
@@ -22,15 +23,42 @@ Ties SysMon -> predictor -> placement -> migration together:
 
 Overhead controls from Sec. 7.4 are exposed: sampling subset fraction and
 an adaptively growing interval once patterns stabilize.
+
+Asynchronous pipeline (``MemosConfig.async_plan``)
+--------------------------------------------------
+The paper's monitor and migration engine run *concurrently* with the
+application; the synchronous ``run_pass`` instead blocks the serving loop
+for the whole pass.  With ``async_plan`` the pass splits into a
+snapshot -> plan -> commit pipeline:
+
+  * **snapshot** (dispatch boundary, cheap): close the SysMon pass, pull
+    the summary, snapshot the page table / version counters / cloned
+    allocators (:class:`~repro.core.migration.StoreView`) and the wear
+    projection;
+  * **plan** (worker thread, overlapped with the next jitted K-token
+    dispatch): pattern classification + placement + Algorithm-2 slot
+    targeting simulated on the cloned allocators + spill candidate
+    selection — pure numpy against the immutable snapshot;
+  * **commit** (next dispatch boundary): validate the snapshot — any
+    planned page whose version counter advanced mid-plan (the same
+    counters the optimistic migration path uses as dirty bits), changed
+    tier, or whose replayed slot reservation diverges, is a conflict —
+    then execute the reserved plans as bulk moves.  On conflict the whole
+    pass **degrades to the synchronous path**: the stale plan is
+    discarded (reservations rolled back) and plan+execute re-run against
+    live state, so a conflicted pass is exactly a synchronous pass that
+    fired one dispatch later.
 """
 from __future__ import annotations
 
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from . import sysmon as sysmon_mod
-from .migration import MigrationStats, make_engine
+from .migration import (MigrationStats, StoreView, make_engine, plan_decision,
+                        plan_optimistic, replay_reservations)
 from .placement import BandwidthBalancer, plan
 from .tiers import TierStore
 
@@ -50,6 +78,9 @@ class MemosConfig:
     lifetime_horizon_years: float | None = None
     wear_penalty: float = 4.0     # HL-ranking boost for WD pages under pressure
     pass_window_s: float = 1.0    # notional wall-clock span of one pass
+    # overlap the plan phase with the next dispatch on a worker thread
+    # (snapshot -> plan -> commit; see module docstring)
+    async_plan: bool = False
 
 
 @dataclass
@@ -65,6 +96,21 @@ class MemosReport:
     nvm: object | None = None     # deepest wear-tracked tier's NvmReport
     nvm_by_tier: dict = field(default_factory=dict)  # tier -> NvmReport
     wear_pressure: bool = False   # wear penalty applied to this pass's plan
+    committed_async: bool = False  # pass went through the overlapped commit
+    plan_conflict: bool = False    # plan was stale; degraded to sync path
+
+
+@dataclass
+class _PlanTicket:
+    """One in-flight asynchronous pass: the immutable snapshot plus the
+    worker future that resolves to (decision, plans, spill_plan)."""
+    step: int
+    summary: object               # PassSummary with numpy leaves
+    view: StoreView
+    wear_pressure: bool
+    spilling: bool
+    spill_dst: int
+    future: Future | None = None
 
 
 class MemosManager:
@@ -86,6 +132,17 @@ class MemosManager:
         self._last_pass_step = 0
         self.reports: list[MemosReport] = []
         self.step_count = 0
+        # async pipeline state
+        if self.cfg.async_plan and not hasattr(self.engine, "execute_plan"):
+            raise ValueError("async_plan requires a plan-executing engine "
+                             "(MemosConfig.engine='batched')")
+        self._executor: ThreadPoolExecutor | None = None
+        self._ticket: _PlanTicket | None = None
+        self.plan_commits = 0         # overlapped passes committed clean
+        self.plan_conflicts = 0       # overlapped passes degraded to sync
+        # test hook: called with (manager, decision, plans) between the
+        # worker join and validation — simulates writes landing mid-plan
+        self._mid_plan_hook = None
 
     @property
     def meter(self):
@@ -94,37 +151,82 @@ class MemosManager:
         return self.meters[wt[-1]] if wt else None
 
     def maybe_step(self, sm_state: sysmon_mod.SysmonState,
-                   fast_bw_util: float = 0.0, steps: int = 1):
+                   fast_bw_util: float = 0.0, steps: int = 1,
+                   on_commit=None):
         """Call once per training/serving step — or once per fused decode
         dispatch with ``steps`` = the number of inner steps it covered, so
         the interval stays token-granular across dispatch sizes; fires the
         memos loop on the configured interval.  Returns (new sysmon state,
-        report|None)."""
+        report|None).  In async mode the report belongs to the *previous*
+        boundary's pass, committed here after overlapping with the
+        dispatch in between; ``on_commit(report)`` runs between that
+        commit and the next snapshot, so caller reactions to the pass
+        (e.g. the serving engine re-promoting demoted active pages) are
+        *inside* the next plan's snapshot instead of dirtying it
+        mid-plan."""
+        report = self.commit_pending()
+        if report is not None and on_commit is not None:
+            on_commit(report)
         self.step_count += steps
         self._steps_since += steps
         if self._steps_since < self.interval:
-            return sm_state, None
-        # a pass can only fire at a call (dispatch) boundary, so keep the
-        # token-granular cadence by carrying the remainder modulo the
-        # interval instead of discarding it — overshoot from one large
-        # dispatch does not push the next pass a full interval out
-        self._steps_since %= self.interval
+            return sm_state, report
+        # a pass can only fire at a call (dispatch) boundary; keep the
+        # token-granular cadence exact by carrying the full overshoot —
+        # subtracting one interval instead of snapping to the remainder —
+        # so a dispatch spanning more than one interval (decode_block >
+        # interval, or shrunken dispatches near sequence ends) fires its
+        # skipped pass at the next boundary instead of double-counting a
+        # whole interval.  The carried credit is capped at one interval:
+        # the cadence can never exceed one pass per boundary, so credit
+        # beyond that is unspendable and would only grow without bound.
+        self._steps_since = min(self._steps_since - self.interval,
+                                self.interval)
+        if self.cfg.async_plan:
+            sm_state = self.begin_pass(sm_state, fast_bw_util)
+            return sm_state, report
         return self.run_pass(sm_state, fast_bw_util)
+
+    # =========================================================================
+    # synchronous pass
+    # =========================================================================
 
     def run_pass(self, sm_state: sysmon_mod.SysmonState,
                  fast_bw_util: float = 0.0):
         # 1-2) close the pass; classification + prediction happen on device
         sm_state, summary = sysmon_mod.end_pass(sm_state)
+        wear_pressure = self._wear_pressure()
+        spilling = self.balancer.update(fast_bw_util)
+        report = self._plan_execute_finish(summary, wear_pressure, spilling,
+                                           self._spill_dst())
+        return sm_state, report
 
-        # 3) plan: mark will-be-migrated, rank HL; under NVM wear pressure
-        # (any wear-tracked tier's projected lifetime below the horizon) WD
-        # pages get the penalty term: pinned to fast, ranked first,
-        # excluded from spills
-        wear_pressure = False
-        if self.meters and self.cfg.lifetime_horizon_years:
-            wear_pressure = any(
-                m.project_lifetime() < self.cfg.lifetime_horizon_years
-                for m in self.meters.values())
+    def _wear_pressure(self) -> bool:
+        """Whether any wear-tracked tier's projected lifetime (from the
+        live counters) has dropped below the horizon."""
+        if not (self.meters and self.cfg.lifetime_horizon_years):
+            return False
+        return any(m.project_lifetime() < self.cfg.lifetime_horizon_years
+                   for m in self.meters.values())
+
+    def _spill_dst(self) -> int:
+        """Bandwidth-aware spill destination: the backing tier with the
+        most channel headroom over the current traffic window (ties break
+        toward the faster tier, which reduces to tier 1 for unmodeled
+        bandwidths), skipping capacity-exhausted pools."""
+        order = self.store.backing_tier_order()
+        for t in order:
+            if self.store.alloc[t].n_free > 0:
+                return t
+        return order[0] if order else self.store.hierarchy.deepest
+
+    def _plan_execute_finish(self, summary, wear_pressure: bool,
+                             spilling: bool, spill_dst: int, *,
+                             committed_async: bool = False,
+                             plan_conflict: bool = False) -> MemosReport:
+        """Steps 3-6 of the pass against *live* state: plan placement,
+        execute migrations, spill, close telemetry.  Both the synchronous
+        path and the degraded (conflicted) async commit run this body."""
         penalty = self.cfg.wear_penalty if wear_pressure else 0.0
         current = self.store.tier.copy()
         decision = plan(summary, current, max_migrations=self.cfg.max_migrations,
@@ -137,18 +239,28 @@ class MemosManager:
         # 4) migrate
         stats = self.engine.execute(decision, bank_freq, slab_freq, reuse)
 
-        # 5) bandwidth balancing (spill off the fast channel into the next
-        # tier down while the fast channel is saturated)
+        # 5) bandwidth balancing (spill off the fast channel into the
+        # backing tier with the most headroom while it is saturated)
         spilled = 0
-        if self.balancer.update(fast_bw_util):
+        if spilling:
             cands = self.balancer.spill_candidates(
                 np.asarray(summary.wd_code), np.asarray(summary.hotness),
                 self.store.tier, n=self.cfg.max_migrations or 64,
                 exclude_wd=wear_pressure)
-            st = self.engine.migrate_optimistic(cands, 1, bank_freq,
+            st = self.engine.migrate_optimistic(cands, spill_dst, bank_freq,
                                                 slab_freq, reuse)
             spilled = st.migrated
 
+        return self._finish_pass(decision, stats, spilled, summary,
+                                 wear_pressure,
+                                 committed_async=committed_async,
+                                 plan_conflict=plan_conflict)
+
+    def _finish_pass(self, decision, stats: MigrationStats, spilled: int,
+                     summary, wear_pressure: bool, *,
+                     committed_async: bool = False,
+                     plan_conflict: bool = False) -> MemosReport:
+        """Close the pass: adaptive interval, telemetry windows, report."""
         # adaptive interval (Sec. 7.4): grow when the plan barely changes
         tgt = np.asarray(decision.target_tier)
         if self.cfg.adaptive_interval and self._last_target is not None:
@@ -172,7 +284,9 @@ class MemosManager:
             nvm_by_tier = {t: m.end_pass(window_s=window)
                            for t, m in self.meters.items()}
         self._last_pass_step = self.step_count
+        self.store.roll_traffic_window()
 
+        bank_freq = np.asarray(summary.bank_freq)
         tier_pages = [int((self.store.tier == t).sum())
                       for t in range(self.store.n_tiers)]
         wt = self.store.hierarchy.wear_tiers()
@@ -188,6 +302,135 @@ class MemosManager:
             nvm=nvm_by_tier.get(wt[-1]) if wt else None,
             nvm_by_tier=nvm_by_tier,
             wear_pressure=wear_pressure,
+            committed_async=committed_async,
+            plan_conflict=plan_conflict,
         )
         self.reports.append(report)
-        return sm_state, report
+        return report
+
+    # =========================================================================
+    # asynchronous pipeline: snapshot -> plan (worker) -> commit
+    # =========================================================================
+
+    def begin_pass(self, sm_state: sysmon_mod.SysmonState,
+                   fast_bw_util: float = 0.0) -> sysmon_mod.SysmonState:
+        """Snapshot phase, at a dispatch boundary: close the SysMon pass,
+        freeze the placement-visible store state, and hand the plan to
+        the worker thread.  Returns the reset SysMon state immediately so
+        the next dispatch launches while the worker plans."""
+        assert self._ticket is None, "previous plan not committed"
+        sm_state, summary = sysmon_mod.end_pass(sm_state)
+        # numpy-ify the summary once (device sync) so the worker is
+        # jax-free — classification itself already ran on device
+        summary_np = type(summary)(*[np.asarray(f) for f in summary])
+        ticket = _PlanTicket(
+            step=self.step_count,
+            summary=summary_np,
+            view=StoreView(self.store),
+            wear_pressure=self._wear_pressure(),
+            spilling=self.balancer.update(fast_bw_util),
+            spill_dst=self._spill_dst(),
+        )
+        if self._executor is None:
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="memos-plan")
+        ticket.future = self._executor.submit(self._plan_job, ticket)
+        self._ticket = ticket
+        return sm_state
+
+    def _plan_job(self, t: _PlanTicket):
+        """Worker-thread plan phase: classification + placement +
+        Algorithm-2 slot targeting, all against the immutable snapshot
+        (reservations simulated on the cloned allocators).  Pure numpy —
+        no jax, no live-store access."""
+        penalty = self.cfg.wear_penalty if t.wear_pressure else 0.0
+        decision = plan(t.summary, t.view.tier.copy(),
+                        max_migrations=self.cfg.max_migrations,
+                        wear_penalty=penalty,
+                        hierarchy=self.store.hierarchy)
+        bank_freq = np.asarray(t.summary.bank_freq)
+        slab_freq = np.asarray(t.summary.slab_freq)
+        reuse = np.asarray(t.summary.reuse_class)
+        plans = plan_decision(t.view, decision, bank_freq, slab_freq, reuse)
+        spill_plan = None
+        if t.spilling:
+            cands = self.balancer.spill_candidates(
+                np.asarray(t.summary.wd_code), np.asarray(t.summary.hotness),
+                t.view.tier, n=self.cfg.max_migrations or 64,
+                exclude_wd=t.wear_pressure)
+            # candidates come from the snapshot's tier table, so exclude
+            # pages this pass already plans to move — the synchronous path
+            # picks candidates *after* migrating, so a just-demoted page
+            # can never be spilled twice
+            planned = {int(p) for pl in plans for p in pl.pages}
+            cands = np.asarray([p for p in cands if int(p) not in planned],
+                               np.int64)
+            spill_plan = plan_optimistic(t.view, cands, t.spill_dst,
+                                         bank_freq, slab_freq, reuse)
+        return decision, plans, spill_plan
+
+    def commit_pending(self) -> MemosReport | None:
+        """Commit phase, at the next dispatch boundary: join the worker,
+        validate the snapshot against pages dirtied mid-plan, and either
+        bulk-execute the reserved plans or degrade to the synchronous
+        path.  No-op when no plan is in flight."""
+        if self._ticket is None:
+            return None
+        t, self._ticket = self._ticket, None
+        decision, plans, spill_plan = t.future.result()
+        if self._mid_plan_hook is not None:
+            self._mid_plan_hook(self, decision, plans)
+        all_plans = plans + ([spill_plan] if spill_plan is not None else [])
+
+        if not self._validate(t, all_plans) \
+                or not replay_reservations(self.store, all_plans):
+            # conflict: writes (or page moves / interleaved allocations)
+            # landed under the plan mid-dispatch — discard it and run the
+            # pass synchronously against live state, exactly as if the
+            # pass had fired at this boundary
+            self.plan_conflicts += 1
+            return self._plan_execute_finish(
+                t.summary, t.wear_pressure, t.spilling, t.spill_dst,
+                committed_async=True, plan_conflict=True)
+
+        # clean commit: every reservation replayed onto the live
+        # allocators — execute the plans as bulk moves, in the same order
+        # the synchronous pass would have
+        stats = MigrationStats()
+        for p in plans:
+            stats.merge(self.engine.execute_plan(p))
+        spilled = 0
+        if spill_plan is not None:
+            spilled = self.engine.execute_plan(spill_plan).migrated
+        self.plan_commits += 1
+        return self._finish_pass(decision, stats, spilled, t.summary,
+                                 t.wear_pressure, committed_async=True)
+
+    def _validate(self, t: _PlanTicket, plans) -> bool:
+        """Snapshot still current for every page the plan touches?  Uses
+        the optimistic-migration version counters as the dirty bits, plus
+        the page table itself (a page promoted/released mid-plan is as
+        stale as a dirtied one)."""
+        if not plans:
+            return True
+        pages = np.concatenate([p.pages for p in plans]) if plans else None
+        if pages is None or pages.size == 0:
+            return True
+        pages = pages.astype(np.int64)
+        if (self.store.version[pages] != t.view.version[pages]).any():
+            return False
+        if (self.store.tier[pages] != t.view.tier[pages]).any():
+            return False
+        if (self.store.slot[pages] != t.view.slot[pages]).any():
+            return False
+        return True
+
+    def flush(self) -> MemosReport | None:
+        """Commit any in-flight plan (end of serving / shutdown)."""
+        return self.commit_pending()
+
+    def close(self) -> None:
+        self.flush()
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None

@@ -56,18 +56,20 @@ from dataclasses import dataclass, field
 from typing import Callable, Iterable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from . import placement
-from .tiers import TierStore, NO_SLOT
+from .tiers import NO_SLOT, TierStore, _pad_idx_np, _pad_pages, _pow2
 
 # Bump when engine semantics / data layout change; recorded in benchmark
 # result JSONs so trajectory comparisons across machines and revisions
 # aren't apples-to-oranges.
-ENGINE_VERSION = "3.0"  # 1.x: per-page reference loop; 2.x: batched bulk
+ENGINE_VERSION = "4.0"  # 1.x: per-page reference loop; 2.x: batched bulk
                         # mover + NVM wear accounting on the slow path;
                         # 3.x: N-tier plans (per-page src tier, device<->
-                        # device moves)
+                        # device moves); 4.x: replayable reservations
+                        # (async plan/commit) + pinned-host tier routing
 
 
 def bench_env() -> dict:
@@ -152,19 +154,34 @@ def target_color(store: TierStore, dst_tier: int,
     return bank * cfg.n_slabs + slab, cfg.n_colors - 1
 
 
-def _alloc_target_slot(store: TierStore, dst_tier: int,
-                       bank_freq: np.ndarray | None,
-                       slab_freq: np.ndarray | None,
-                       reuse_class: int | None) -> int | None:
+def _alloc_target_slot_rec(store, dst_tier: int,
+                           bank_freq: np.ndarray | None,
+                           slab_freq: np.ndarray | None,
+                           reuse_class: int | None
+                           ) -> tuple[int | None, int, int]:
     """Reserve one destination slot per Algorithm 2, falling back to any
     color when the targeted slab walk is exhausted (capacity is the real
-    bound, not color)."""
+    bound, not color).  Returns (slot, color, mask) where color/mask
+    record the allocator call that actually produced the slot (-1 = any
+    color) — the asynchronous commit replays exactly these calls against
+    the live allocator and treats any divergence as a plan conflict."""
     color, mask = target_color(store, dst_tier, bank_freq, slab_freq,
                                reuse_class)
     slot = store.alloc[dst_tier].alloc(0, color, mask)
-    if slot is None and color is not None:
+    if slot is not None:
+        return slot, (-1 if color is None else int(color)), \
+            (-1 if mask is None else int(mask))
+    if color is not None:
         slot = store.alloc[dst_tier].alloc(0, None)
-    return slot
+    return slot, -1, -1
+
+
+def _alloc_target_slot(store, dst_tier: int,
+                       bank_freq: np.ndarray | None,
+                       slab_freq: np.ndarray | None,
+                       reuse_class: int | None) -> int | None:
+    return _alloc_target_slot_rec(store, dst_tier, bank_freq, slab_freq,
+                                  reuse_class)[0]
 
 
 # =============================================================================
@@ -180,6 +197,16 @@ class MigrationPlan:
     mixed within one plan.  ``trivial`` counts pages that were requested
     but already sit in ``dst_tier`` (the locked path reports them as
     migrated without moving data, like the reference).
+
+    ``colors``/``masks`` record the Algorithm-2 allocator call that
+    reserved each slot (-1 = any color): a plan produced against a
+    :class:`StoreView` snapshot has its reservations *simulated* on
+    cloned allocators, and ``replay_reservations`` re-issues exactly
+    these calls against the live store at commit time.  ``reads_by_tier``
+    carries the staging read charge for optimistic plans (the unlocked
+    copy stages every pending page, including ones later dropped for
+    capacity, so the async commit charges the same reads the synchronous
+    path would).
     """
     dst_tier: int
     pages: np.ndarray       # int64 [k]
@@ -187,6 +214,9 @@ class MigrationPlan:
     src_slots: np.ndarray   # int64 [k]
     dst_slots: np.ndarray   # int64 [k]
     trivial: int = 0
+    colors: np.ndarray | None = None   # int64 [k], -1 = any
+    masks: np.ndarray | None = None    # int64 [k], -1 = full mask
+    reads_by_tier: dict = field(default_factory=dict)
 
     def __len__(self) -> int:
         return int(self.pages.size)
@@ -205,6 +235,8 @@ def plan_locked(store: TierStore, pages: Iterable[int], dst_tier: int,
     src_tiers: list[int] = []
     src_slots: list[int] = []
     dst_slots: list[int] = []
+    colors: list[int] = []
+    masks: list[int] = []
     planned: dict[int, int] = {}            # page -> reserved dst slot
     trivial = 0
 
@@ -226,13 +258,16 @@ def plan_locked(store: TierStore, pages: Iterable[int], dst_tier: int,
         if cur_slot == NO_SLOT:
             continue                        # released page: nothing to move
         rc = None if reuse_class is None else int(reuse_class[p])
-        new_slot = _alloc_target_slot(store, dst_tier, bank_freq, slab_freq, rc)
+        new_slot, color, mask = _alloc_target_slot_rec(
+            store, dst_tier, bank_freq, slab_freq, rc)
         if new_slot is None:
             continue
         mv_pages.append(p)
         src_tiers.append(int(store.tier[p]))
         src_slots.append(cur_slot)
         dst_slots.append(new_slot)
+        colors.append(color)
+        masks.append(mask)
         planned[p] = new_slot
         account(new_slot)
     return MigrationPlan(
@@ -242,7 +277,153 @@ def plan_locked(store: TierStore, pages: Iterable[int], dst_tier: int,
         src_slots=np.asarray(src_slots, np.int64),
         dst_slots=np.asarray(dst_slots, np.int64),
         trivial=trivial,
+        colors=np.asarray(colors, np.int64),
+        masks=np.asarray(masks, np.int64),
     )
+
+
+def plan_optimistic(store, pages: Iterable[int], dst_tier: int,
+                    bank_freq: np.ndarray | None = None,
+                    slab_freq: np.ndarray | None = None,
+                    reuse_class: np.ndarray | None = None) -> MigrationPlan:
+    """Phase 1 for the optimistic path: the reservation sequence of one
+    clean ``migrate_optimistic`` attempt (dedupe, skip already-there /
+    released pages, one Algorithm-2 allocator call per page in list
+    order, *no* bank-frequency accounting between picks) without touching
+    any data.  Run against a :class:`StoreView` this simulates the whole
+    demotion commit on the plan worker; the version check that the
+    synchronous path does after staging becomes the commit-time snapshot
+    validation."""
+    pending = [int(p) for p in dict.fromkeys(int(p) for p in pages)
+               if int(store.tier[p]) != dst_tier
+               and int(store.slot[p]) != NO_SLOT]
+    bank_freq = None if bank_freq is None else np.array(bank_freq)
+    mv_pages: list[int] = []
+    src_tiers: list[int] = []
+    src_slots: list[int] = []
+    dst_slots: list[int] = []
+    colors: list[int] = []
+    masks: list[int] = []
+    reads_by_tier: dict[int, int] = {}
+    for p in pending:
+        # the unlocked copy stages every pending page before the dirty
+        # check — mirror its read charge even for pages dropped below
+        t = int(store.tier[p])
+        reads_by_tier[t] = reads_by_tier.get(t, 0) + 1
+    for p in pending:
+        rc = None if reuse_class is None else int(reuse_class[p])
+        new_slot, color, mask = _alloc_target_slot_rec(
+            store, dst_tier, bank_freq, slab_freq, rc)
+        if new_slot is None:
+            continue          # capacity exhausted: drop, like the engines
+        mv_pages.append(p)
+        src_tiers.append(int(store.tier[p]))
+        src_slots.append(int(store.slot[p]))
+        dst_slots.append(new_slot)
+        colors.append(color)
+        masks.append(mask)
+    return MigrationPlan(
+        dst_tier=dst_tier,
+        pages=np.asarray(mv_pages, np.int64),
+        src_tiers=np.asarray(src_tiers, np.int8),
+        src_slots=np.asarray(src_slots, np.int64),
+        dst_slots=np.asarray(dst_slots, np.int64),
+        trivial=0,
+        colors=np.asarray(colors, np.int64),
+        masks=np.asarray(masks, np.int64),
+        reads_by_tier=reads_by_tier,
+    )
+
+
+class StoreView:
+    """Immutable-world facade for the asynchronous plan phase.
+
+    Snapshots the placement-visible store state (page table, version
+    counters, cloned per-tier allocators) at a dispatch boundary; the
+    plan worker runs ``plan_locked`` / ``plan_optimistic`` against it —
+    they only touch ``tier``/``slot``/``alloc`` — so Algorithm-2 slot
+    targeting simulates its reservations off-thread while the next
+    dispatch runs.  The commit validates the snapshot against the live
+    store (version counters + replayed reservations) before any data
+    moves."""
+
+    def __init__(self, store: TierStore):
+        self.tier = store.tier.copy()
+        self.slot = store.slot.copy()
+        self.version = store.version.copy()
+        self.alloc = [a.clone() for a in store.alloc]
+        self.hierarchy = store.hierarchy
+        self.n_tiers = store.n_tiers
+
+
+def _group_decision(store, decision: placement.PlacementDecision
+                    ) -> tuple[dict, dict]:
+    """(promotions, demotions) per destination tier, in hotness-list
+    order — THE grouping both ``execute_decision`` and ``plan_decision``
+    must share: the async commit's every-page-lands-in-the-same-slot
+    guarantee holds only while their allocator call order is identical."""
+    cur = store.tier
+    tgt = decision.target_tier
+    promos = {t: [] for t in range(store.n_tiers)}
+    demos = {t: [] for t in range(store.n_tiers)}
+    for p in decision.hotness_list:
+        src, dst = int(cur[p]), int(tgt[p])
+        if dst == src:
+            continue
+        (promos if dst < src else demos)[dst].append(int(p))
+    return promos, demos
+
+
+def plan_decision(store, decision: placement.PlacementDecision,
+                  bank_freq: np.ndarray | None = None,
+                  slab_freq: np.ndarray | None = None,
+                  reuse_class: np.ndarray | None = None) -> list[MigrationPlan]:
+    """Reserve every migration of a ``PlacementDecision`` without moving
+    data: the same destination grouping and allocator call order as
+    ``execute_decision`` (promotions per dst tier shallowest-first via
+    the locked sequence, then demotions via the optimistic sequence), so
+    a conflict-free commit lands every page in exactly the slot the
+    synchronous pass would have picked.  ``store`` may be a live
+    ``TierStore`` or a :class:`StoreView` snapshot."""
+    n_tiers = store.n_tiers
+    promos, demos = _group_decision(store, decision)
+    plans: list[MigrationPlan] = []
+    for dst in range(n_tiers):
+        if promos[dst]:
+            plans.append(plan_locked(store, promos[dst], dst, bank_freq,
+                                     slab_freq, reuse_class))
+    for dst in range(n_tiers):
+        if demos[dst]:
+            plans.append(plan_optimistic(store, demos[dst], dst, bank_freq,
+                                         slab_freq, reuse_class))
+    return plans
+
+
+def replay_reservations(store: TierStore,
+                        plans: Iterable[MigrationPlan]) -> bool:
+    """Re-issue a snapshot plan's recorded allocator calls on the live
+    store.  Returns True when every call lands on exactly the slot the
+    plan reserved (the live allocators are then in the same state the
+    synchronous pass would have left); on any divergence — an interleaved
+    allocation claimed a block the plan counted on — every replayed
+    reservation is rolled back and the caller degrades to the
+    synchronous path."""
+    done: list[tuple[int, int]] = []
+    for plan in plans:
+        assert plan.colors is not None and plan.masks is not None, \
+            "replay needs a plan with recorded allocator calls"
+        for i in range(len(plan)):
+            c, m = int(plan.colors[i]), int(plan.masks[i])
+            s = store.alloc[plan.dst_tier].alloc(
+                0, None if c < 0 else c, None if m < 0 else m)
+            if s != int(plan.dst_slots[i]):
+                if s is not None:
+                    store.alloc[plan.dst_tier].free(s, 0)
+                for dt, ds in reversed(done):
+                    store.alloc[dt].free(ds, 0)
+                return False
+            done.append((plan.dst_tier, s))
+    return True
 
 
 def execute_decision(engine, decision: placement.PlacementDecision,
@@ -257,17 +438,8 @@ def execute_decision(engine, decision: placement.PlacementDecision,
     hotness-list order within each group) so both engines make identical
     allocator calls in identical order."""
     st = MigrationStats()
-    hl = decision.hotness_list
-    cur = engine.store.tier
-    tgt = decision.target_tier
     n_tiers = engine.store.n_tiers
-    promos = {t: [] for t in range(n_tiers)}
-    demos = {t: [] for t in range(n_tiers)}
-    for p in hl:
-        src, dst = int(cur[p]), int(tgt[p])
-        if dst == src:
-            continue
-        (promos if dst < src else demos)[dst].append(int(p))
+    promos, demos = _group_decision(engine.store, decision)
     for dst in range(n_tiers):
         if promos[dst]:
             st.merge(engine.migrate_locked(promos[dst], dst, bank_freq,
@@ -433,41 +605,52 @@ class BatchedMigrationEngine:
             return np.zeros((0, *self.store.cfg.page_shape), np.float32)
         bufs = []
         for i in range(0, slots.size, self.chunk_pages):
-            g = self.store.gather_device(src_tier, slots[i:i + self.chunk_pages])
+            chunk = slots[i:i + self.chunk_pages]
+            g = self.store.gather_device(src_tier, chunk)
             try:
                 g.copy_to_host_async()
             except AttributeError:      # older jax array types
                 pass
-            bufs.append(g)
-        return np.concatenate([np.asarray(b, np.float32) for b in bufs])
+            bufs.append((g, chunk.size))
+        # gathers come back pow2-padded; slice to true counts in numpy
+        return np.concatenate([np.asarray(b, np.float32)[:n]
+                               for b, n in bufs])
 
     def _stage_host_to_device(self, dst_tier: int, dst_slots: np.ndarray,
                               values: np.ndarray) -> None:
         """Scatter host pages into their planned device-pool slots (Pallas
         page_scatter, pool donated).  Chunk *i+1*'s host→device transfer is
         issued before chunk *i*'s scatter blocks, double-buffering the
-        upload."""
+        upload.  Chunks are pow2-padded on the host pre-transfer so ragged
+        tails don't mint fresh executables."""
         dst_slots = np.asarray(dst_slots, np.int64)
         k = dst_slots.size
         if k == 0:
             return
         c = self.chunk_pages
-        nxt = jax.device_put(values[:c])
+
+        def staged_chunk(i):
+            v = values[i:i + c]
+            return jax.device_put(_pad_pages(v, _pow2(v.shape[0])))
+
+        nxt = staged_chunk(0)
         for i in range(0, k, c):
             cur = nxt
             if i + c < k:
-                nxt = jax.device_put(values[i + c:i + 2 * c])
+                nxt = staged_chunk(i + c)
             self.store.scatter_device(dst_tier, dst_slots[i:i + c], cur)
 
     def _move_group(self, src_tier: int, dst_tier: int,
                     src_slots: np.ndarray, dst_slots: np.ndarray) -> None:
         """Bulk-move one (src, dst) tier pair's data by residency:
-        device->device stays on-accelerator (gather + scatter), the
-        device<->host pairs go through chunked staging, host->host is one
-        vectorized numpy copy."""
+        device-addressable pairs (device and pinned-host tiers) stay
+        inside the jax runtime — gather + donated scatter, with int8
+        quantization fused into the pinned pool's scatter — the
+        device<->numpy-host pairs go through chunked staging, and
+        host->host is one vectorized numpy copy."""
         store = self.store
-        src_dev = store.is_device_tier(src_tier)
-        dst_dev = store.is_device_tier(dst_tier)
+        src_dev = store.is_addressable_tier(src_tier)
+        dst_dev = store.is_addressable_tier(dst_tier)
         if src_dev and dst_dev:
             staged = store.gather_device(src_tier, src_slots)
             store.scatter_device(dst_tier, dst_slots, staged)
@@ -488,12 +671,18 @@ class BatchedMigrationEngine:
         st = MigrationStats()
         k = len(plan)
         store = self.store
+        if plan.reads_by_tier:
+            # optimistic plans stage every *pending* page before the dirty
+            # check — charge the reads the synchronous unlocked copy would
+            for t, n in plan.reads_by_tier.items():
+                store.reads_from[int(t)] += int(n)
         if k:
             for src_t in np.unique(plan.src_tiers):
                 idx = np.nonzero(plan.src_tiers == src_t)[0]
                 self._move_group(int(src_t), plan.dst_tier,
                                  plan.src_slots[idx], plan.dst_slots[idx])
-                store.reads_from[int(src_t)] += idx.size
+                if not plan.reads_by_tier:
+                    store.reads_from[int(src_t)] += idx.size
                 st.note_move(int(src_t), plan.dst_tier, idx.size)
             store.commit_moves(plan.pages, plan.dst_tier, plan.dst_slots)
         st.migrated = k + plan.trivial
@@ -543,22 +732,28 @@ class BatchedMigrationEngine:
             vsnap = store.version[pending].copy()
             src_tiers = store.tier[pending].copy()
             src_slots = store.slot[pending].copy()
-            dst_dev = store.is_device_tier(dst_tier)
+            dst_dev = store.is_addressable_tier(dst_tier)
             staged = {}                      # src tier -> group buffer
             local_of = np.zeros(pending.size, np.int64)  # pos within group
             groups = {int(t): np.nonzero(src_tiers == t)[0]
                       for t in np.unique(src_tiers)}
             for src_t, idx in groups.items():
                 local_of[idx] = np.arange(idx.size)
-                if not store.is_device_tier(src_t):
+                if not store.is_addressable_tier(src_t):
                     staged[src_t] = store.host_read_batch(src_t,
                                                           src_slots[idx])
                 elif dst_dev:
+                    # both ends device-addressable: staging never leaves
+                    # the jax runtime (pinned tiers included)
                     staged[src_t] = store.gather_device(src_t,
                                                         src_slots[idx])
-                else:
+                elif store.is_device_tier(src_t):
                     staged[src_t] = self._stage_device_to_host(
                         src_t, src_slots[idx])
+                else:   # pinned src -> numpy-host dst
+                    staged[src_t] = np.asarray(
+                        store.gather_device(src_t, src_slots[idx]),
+                        np.float32)[:idx.size]     # drop the pow2 padding
                 store.reads_from[src_t] += idx.size
             if concurrent_writer is not None:
                 concurrent_writer()
@@ -586,11 +781,19 @@ class BatchedMigrationEngine:
                     sel = idx[m]                         # pending positions
                     if sel.size == 0:
                         continue
-                    vals = staged[src_t][local_of[sel]]
+                    li = local_of[sel]
+                    buf = staged[src_t]
+                    if isinstance(buf, np.ndarray):
+                        vals = buf[li]
+                    else:
+                        # device staging: pow2-pad the sub-gather too, so
+                        # the commit's shapes stay bucketed (the matching
+                        # scatter pads its slot vector the same way)
+                        vals = buf[jnp.asarray(_pad_idx_np(li), jnp.int32)]
                     sslots = slots[m]
                     if not dst_dev:
                         store.host_write_batch(dst_tier, sslots, vals)
-                    elif store.is_device_tier(src_t):
+                    elif store.is_addressable_tier(src_t):
                         store.scatter_device(dst_tier, sslots, vals)
                     else:
                         self._stage_host_to_device(dst_tier, sslots, vals)

@@ -10,7 +10,12 @@ Logical pages live in one of the pools described by a
   * **host** tiers — numpy pools (the NVM/CXL analogue), optionally
     int8-quantized to model NVM's cheap-read/expensive-write asymmetry,
     and storing bfloat16 payloads as their uint16 bit-pattern (no silent
-    widening to float32).
+    widening to float32);
+  * **pinned_host** tiers — host-capacity jax pools addressable from
+    device code: migrations donate the buffer instead of staging numpy
+    copies, int8 quantization fuses into the gather/scatter dispatch,
+    and the fused serving dispatch appends KV and charges wear counters
+    into them directly.
 
 A page table maps logical page -> (tier, slot); per-page version counters
 are bumped by every write so the optimistic (unlocked-DMA) migration path
@@ -44,7 +49,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.page_gather import page_gather, page_scatter
+from repro.kernels.page_gather import (page_gather, page_gather_dequant,
+                                       page_gather_quant, page_scatter,
+                                       page_scatter_quant)
 
 from .allocator import SubBuddyAllocator, SubBuddyConfig
 from .hierarchy import MediumSpec, MemoryHierarchy
@@ -109,35 +116,95 @@ class StoreConfig:
         return self.hierarchy[self.hierarchy.deepest].quantize_int8
 
 
+def _shrink_to_fit(n_banks: int, n_slabs: int, slots: int) -> tuple[int, int]:
+    """Halve banks, then slabs, until every color exists in a pool of
+    ``slots`` pages (the PFN space always contains all colors; a slot
+    pool only does when n_colors <= n_slots)."""
+    while n_banks * n_slabs > max(slots, 1) and n_banks > 1:
+        n_banks //= 2
+    while n_banks * n_slabs > max(slots, 1) and n_slabs > 1:
+        n_slabs //= 2
+    return n_banks, n_slabs
+
+
 def _clamp_geometry(cfg: StoreConfig) -> StoreConfig:
-    """Shrink the color geometry until every color exists in every pool
-    (the PFN space always contains all colors; a slot pool only does when
-    n_colors <= n_slots).  The default (``n_banks``/``n_slabs`` = None)
-    auto-sizes silently up to 32 x 16; an *explicitly requested* geometry
-    that doesn't fit is clamped with a warning — silently changing what
-    the caller asked for hid real misconfigurations."""
+    """Resolve the *monitor* color geometry (SysMon's bank/slab frequency
+    tables): the default (``n_banks``/``n_slabs`` = None) auto-sizes
+    silently up to 32 x 16 so every color exists in the smallest pool; an
+    *explicitly requested* geometry that can't fit everywhere is clamped
+    with a warning — silently changing what the caller asked for hid real
+    misconfigurations.  Each tier's *allocator* geometry is derived
+    separately from its own ``MediumSpec.slots`` (see ``_tier_geometry``);
+    ``target_color`` folds the monitor's frequency space onto each tier's
+    allocator geometry."""
     explicit = cfg.n_banks is not None or cfg.n_slabs is not None
     want_banks = 32 if cfg.n_banks is None else cfg.n_banks
     want_slabs = 16 if cfg.n_slabs is None else cfg.n_slabs
-    n_banks, n_slabs = want_banks, want_slabs
     min_slots = min(t.slots for t in cfg.hierarchy)
-    while n_banks * n_slabs > max(min_slots, 1) and n_banks > 1:
-        n_banks //= 2
-    while n_banks * n_slabs > max(min_slots, 1) and n_slabs > 1:
-        n_slabs //= 2
+    n_banks, n_slabs = _shrink_to_fit(want_banks, want_slabs, min_slots)
     if explicit and (n_banks, n_slabs) != (want_banks, want_slabs):
         warnings.warn(
             f"TierStore color geometry {want_banks}x{want_slabs} "
             f"(banks x slabs) exceeds the smallest pool "
-            f"({min_slots} slots); clamped to {n_banks}x{n_slabs} so every "
-            "color exists in every tier",
+            f"({min_slots} slots); monitor geometry clamped to "
+            f"{n_banks}x{n_slabs} (each tier's allocator keeps its own "
+            "geometry sized to its pool)",
             UserWarning, stacklevel=3)
     return replace(cfg, n_banks=n_banks, n_slabs=n_slabs)
+
+
+def _tier_geometry(want_banks: int | None, want_slabs: int | None,
+                   spec: MediumSpec) -> tuple[int, int]:
+    """Per-tier allocator geometry derived from the tier's own capacity:
+    the requested (or default 32x16) grid shrunk until every color exists
+    in *this* tier's pool — a 64-slot HBM tier no longer forces a
+    4096-slot NVM tier down to the same handful of colors."""
+    return _shrink_to_fit(32 if want_banks is None else want_banks,
+                          16 if want_slabs is None else want_slabs,
+                          spec.slots)
 
 
 # =============================================================================
 # per-tier pools
 # =============================================================================
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _pad_idx_np(slots) -> np.ndarray:
+    """Pad an index vector to the next power-of-two length by repeating
+    its last entry — **in numpy**, before anything touches jax.
+
+    Migration batch sizes are data-dependent, and every distinct
+    gather/scatter length would otherwise compile its own XLA executable
+    (including the padding concatenate itself, were it a jnp op) — pow2
+    bucketing bounds the jit cache to log2(max) shapes.  A duplicated
+    index is harmless: gathers just produce extra rows (staging buffers
+    stay padded end-to-end; host copies slice in numpy), and scatters
+    rewrite the same slot with the same value."""
+    slots = np.asarray(slots, np.int64).reshape(-1)
+    pad = _pow2(slots.size) - slots.size
+    if pad:
+        slots = np.concatenate([slots, np.repeat(slots[-1:], pad)])
+    return slots
+
+
+def _pad_pages(pages, k_padded: int):
+    """Pad a page batch to match its padded index vector: numpy batches
+    pad by repeating the last page; a jax batch must already be padded
+    (it came out of a padded gather with the matching length)."""
+    if pages.shape[0] == k_padded:
+        return pages
+    if isinstance(pages, np.ndarray):
+        pad = k_padded - pages.shape[0]
+        return np.concatenate([
+            pages, np.repeat(pages[-1:], pad, axis=0)])
+    raise ValueError(
+        f"device page batch of {pages.shape[0]} rows does not match its "
+        f"padded index vector ({k_padded}); pass staging buffers through "
+        "unsliced, or pad on the host")
+
 
 class DevicePool:
     """A jax-resident page pool ([slots, *page_shape] in the store dtype)."""
@@ -155,14 +222,21 @@ class DevicePool:
 
     def gather(self, slots) -> jnp.ndarray:
         """Pack discontiguous slots into one contiguous staging buffer on
-        device (Pallas page_gather on TPU, XLA gather elsewhere)."""
-        return page_gather(self.data, jnp.asarray(slots, jnp.int32))
+        device (Pallas page_gather on TPU, XLA gather elsewhere).  The
+        result is **pow2-padded** (trailing rows repeat the last page);
+        host consumers slice to the true count in numpy."""
+        idx = _pad_idx_np(slots)
+        return page_gather(self.data, jnp.asarray(idx, jnp.int32))
 
     def scatter(self, slots, pages: jnp.ndarray) -> None:
         """pool[slots[i]] = pages[i]; the pool buffer is donated, slots
-        not referenced pass through untouched."""
-        self.data = page_scatter(self.data, jnp.asarray(slots, jnp.int32),
-                                 pages.astype(self.dtype))
+        not referenced pass through untouched.  ``pages`` may be the
+        padded output of a matching-size gather, or an exact-count numpy
+        batch (padded here)."""
+        idx = _pad_idx_np(slots)
+        pages = _pad_pages(pages, idx.size)
+        self.data = page_scatter(self.data, jnp.asarray(idx, jnp.int32),
+                                 jnp.asarray(pages).astype(self.dtype))
 
 
 class HostPool:
@@ -233,12 +307,108 @@ class HostPool:
             return self.data[phys].view(jnp.bfloat16).astype(np.float32)
         return np.asarray(self.data[phys], np.float32)
 
+    def swap_rows(self, a: int, b: int) -> None:
+        """Swap two physical rows in place (Start-Gap leveling advance)."""
+        self.data[[a, b]] = self.data[[b, a]]
+        if self.scale is not None:
+            self.scale[[a, b]] = self.scale[[b, a]]
+
+
+def _pin_host(x: jnp.ndarray) -> jnp.ndarray:
+    """Place a jax array in pinned host memory where the backend supports
+    memory kinds (TPU/GPU); plain default placement otherwise (on the CPU
+    backend every buffer already lives in host RAM)."""
+    try:
+        dev = x.devices().pop() if hasattr(x, "devices") else jax.devices()[0]
+        sharding = jax.sharding.SingleDeviceSharding(
+            dev, memory_kind="pinned_host")
+        return jax.device_put(x, sharding)
+    except (ValueError, NotImplementedError, TypeError):
+        return x
+
+
+class PinnedHostPool:
+    """A host-capacity page pool addressable from device code.
+
+    The pool is a single jax buffer placed in pinned host memory
+    (``memory_kind="pinned_host"`` where the backend supports it, plain
+    placement otherwise), so migration engines gather/scatter it inside
+    the jax runtime — demotion commits *donate* the pool buffer through
+    ``page_scatter`` instead of staging a numpy copy — and the fused
+    serving dispatch can append KV into it and bump its wear counters
+    without a host round trip.
+
+    ``quantize_int8`` keeps the pool as int8 + per-page scale with the
+    quantization fused into the gather/scatter dispatch
+    (``page_gather_quant`` / ``page_scatter_quant``: one kernel instead
+    of gather -> host -> numpy quantize).  Non-quantized pools store the
+    store dtype natively (bf16 stays bf16 — no uint16 bit-pattern
+    gymnastics needed, the buffer is a real jax array).
+    """
+
+    def __init__(self, spec: MediumSpec, page_shape: tuple[int, ...], dtype):
+        self.spec = spec
+        self.page_shape = page_shape
+        self.dtype = dtype
+        self.quantized = spec.quantize_int8
+        self.scale = None
+        if self.quantized:
+            self.data = _pin_host(jnp.zeros((spec.slots, *page_shape),
+                                            jnp.int8))
+            self.scale = _pin_host(jnp.ones((spec.slots,), jnp.float32))
+        else:
+            self.data = _pin_host(jnp.zeros((spec.slots, *page_shape), dtype))
+
+    # -- HostPool-compatible per-physical-slot API -----------------------------
+    def write_one(self, phys: int, value: np.ndarray) -> None:
+        self.write_batch(np.asarray([phys], np.int64), value[None])
+
+    def read_one(self, phys: int) -> np.ndarray:
+        return self.read_batch(np.asarray([phys], np.int64))[0]
+
+    def write_batch(self, phys: np.ndarray, values: np.ndarray) -> None:
+        self.scatter(phys, np.asarray(values, np.float32))
+
+    def read_batch(self, phys: np.ndarray) -> np.ndarray:
+        k = np.asarray(phys).size
+        return np.asarray(self.gather(phys), np.float32)[:k]
+
+    # -- device-addressable bulk API (jax in, jax out) -------------------------
+    def gather(self, phys) -> jnp.ndarray:
+        """Pow2-padded gather, like :meth:`DevicePool.gather` (fused
+        dequantize for int8 pools)."""
+        idx = jnp.asarray(_pad_idx_np(phys), jnp.int32)
+        if self.quantized:
+            return page_gather_dequant(self.data, self.scale, idx)
+        return page_gather(self.data, idx)
+
+    def scatter(self, phys, pages) -> None:
+        """pool[phys[i]] = pages[i], pool buffer donated; fuses the int8
+        quantize into the same dispatch for quantized pools."""
+        idx = _pad_idx_np(phys)
+        pages = _pad_pages(pages, idx.size)
+        idx = jnp.asarray(idx, jnp.int32)
+        if self.quantized:
+            self.data, self.scale = page_scatter_quant(
+                self.data, self.scale, idx,
+                jnp.asarray(pages).astype(jnp.float32))
+        else:
+            self.data = page_scatter(self.data, idx,
+                                     jnp.asarray(pages).astype(self.dtype))
+
+    def swap_rows(self, a: int, b: int) -> None:
+        pair = jnp.asarray([a, b], jnp.int32)
+        rev = jnp.asarray([b, a], jnp.int32)
+        self.data = self.data.at[pair].set(self.data[rev])
+        if self.scale is not None:
+            self.scale = self.scale.at[pair].set(self.scale[rev])
+
 
 class _LevelerView:
     """Adapter handing ``StartGapLeveler`` one host tier's pool (the
     leveler's ``slow_pool``/``slow_scale`` contract predates N tiers)."""
 
-    def __init__(self, pool: HostPool):
+    def __init__(self, pool: HostPool | PinnedHostPool):
         self._pool = pool
 
     @property
@@ -248,6 +418,9 @@ class _LevelerView:
     @property
     def slow_scale(self) -> np.ndarray | None:
         return self._pool.scale
+
+    def swap_rows(self, a: int, b: int) -> None:
+        self._pool.swap_rows(a, b)
 
 
 # =============================================================================
@@ -260,27 +433,39 @@ class TierStore:
             cfg = StoreConfig(n_pages=cfg.n_pages, page_shape=cfg.page_shape,
                               hierarchy=cfg.hierarchy(), dtype=cfg.dtype,
                               n_banks=cfg.n_banks, n_slabs=cfg.n_slabs)
+        want_banks, want_slabs = cfg.n_banks, cfg.n_slabs   # pre-clamp ask
         cfg = _clamp_geometry(cfg)
         self.cfg = cfg
         self.hierarchy = cfg.hierarchy
         self.n_tiers = cfg.hierarchy.n_tiers
 
-        self.pools: list[DevicePool | HostPool] = [
-            (DevicePool if t.is_device else HostPool)(t, cfg.page_shape,
-                                                      cfg.dtype)
-            for t in cfg.hierarchy
+        def make_pool(t: MediumSpec):
+            if t.is_device:
+                return DevicePool(t, cfg.page_shape, cfg.dtype)
+            if t.is_pinned:
+                return PinnedHostPool(t, cfg.page_shape, cfg.dtype)
+            return HostPool(t, cfg.page_shape, cfg.dtype)
+
+        self.pools: list[DevicePool | HostPool | PinnedHostPool] = [
+            make_pool(t) for t in cfg.hierarchy
         ]
         # pages start (unallocated) in the deepest tier, as in the paper's
         # everything-begins-on-NVM bring-up
         self.tier = np.full((cfg.n_pages,), cfg.hierarchy.deepest, np.int8)
         self.slot = np.full((cfg.n_pages,), NO_SLOT, np.int64)
         self.version = np.zeros((cfg.n_pages,), np.int64)
-        bcfg = dict(n_banks=cfg.n_banks, n_slabs=cfg.n_slabs)
-        self.alloc = [SubBuddyAllocator(SubBuddyConfig(t.slots, **bcfg))
-                      for t in cfg.hierarchy]
-        # bytes moved per (src, dst) tier pair, for the balancer / figs
+        # per-tier allocator geometry derived from each tier's own slots
+        # (the monitor geometry in cfg.n_banks/n_slabs stays global)
+        self.alloc = [SubBuddyAllocator(SubBuddyConfig(
+            t.slots, *_tier_geometry(want_banks, want_slabs, t)))
+            for t in cfg.hierarchy]
+        # bytes moved per (src, dst) tier pair, for the balancer / figs;
+        # _traffic_snap marks the last memos-pass boundary so spill/cascade
+        # targeting can rank tiers by bandwidth headroom over the current
+        # window (roll_traffic_window)
         self.traffic = {(i, j): 0 for i in range(self.n_tiers)
                         for j in range(self.n_tiers) if i != j}
+        self._traffic_snap = dict(self.traffic)
         self.writes_to = {t: 0 for t in range(self.n_tiers)}
         self.reads_from = {t: 0 for t in range(self.n_tiers)}
         # per-tier NVM wear telemetry + Start-Gap leveling (host tiers with
@@ -335,6 +520,14 @@ class TierStore:
     # -- tier predicates -------------------------------------------------------
     def is_device_tier(self, tier: int) -> bool:
         return self.hierarchy[tier].is_device
+
+    def is_pinned_tier(self, tier: int) -> bool:
+        return self.hierarchy[tier].is_pinned
+
+    def is_addressable_tier(self, tier: int) -> bool:
+        """Device code can gather/scatter this tier's pool directly
+        (device tiers and pinned-host tiers)."""
+        return self.hierarchy[tier].is_device_addressable
 
     # -- page lifecycle -----------------------------------------------------
     @property
@@ -395,6 +588,15 @@ class TierStore:
             lv.note_writes(_LevelerView(self.pools[tier]),
                            np.asarray(phys).size)
 
+    def note_leveling_writes(self, tier: int, n: int) -> None:
+        """Drive ``tier``'s Start-Gap leveler for ``n`` demand writes that
+        were charged elsewhere (the fused dispatch counts pinned-tier KV
+        appends on device; the leveler itself only advances at dispatch
+        boundaries, on the host)."""
+        lv = self.leveler_by_tier.get(tier)
+        if lv is not None and n:
+            lv.note_writes(_LevelerView(self.pools[tier]), int(n))
+
     def _host_write(self, tier: int, slot: int, value: np.ndarray) -> None:
         w = self.wear_by_tier.get(tier)
         p = slot if w is None else w.phys_one(slot)
@@ -408,9 +610,24 @@ class TierStore:
 
     # -- batched data access (the migration engine's bulk primitives) ----------
     def gather_device(self, tier: int, slots) -> jnp.ndarray:
+        """Pack a device-addressable tier's (logical) slots into one
+        contiguous jax staging buffer.  Pinned-host tiers translate
+        through the wear remap and fuse dequantization into the gather."""
+        if self.is_pinned_tier(tier):
+            phys = self._phys(tier, np.asarray(slots, np.int64))
+            return self.pools[tier].gather(phys)
         return self.pools[tier].gather(slots)
 
     def scatter_device(self, tier: int, slots, pages: jnp.ndarray) -> None:
+        """pool[slots[i]] = pages[i] on a device-addressable tier (pool
+        donated).  Pinned-host tiers go through the wear remap, fuse int8
+        quantization into the same dispatch, and charge wear counters —
+        the demotion commit donates the slow pool instead of copying."""
+        if self.is_pinned_tier(tier):
+            phys = self._phys(tier, np.asarray(slots, np.int64))
+            self.pools[tier].scatter(phys, pages)
+            self._account_host_writes(tier, phys)
+            return
         self.pools[tier].scatter(slots, pages)
 
     # tier-0 compat names (the serving hot path's pool primitives)
@@ -453,6 +670,53 @@ class TierStore:
         self.version += page_writes
         self.writes_to[0] += int(page_writes.sum())
         self.reads_from[0] += int(n_reads)
+
+    def charge_accesses(self, page_writes: np.ndarray,
+                        page_reads: np.ndarray) -> None:
+        """Apply one dispatch's access accounting split by residency:
+        per-page write/read counts (computed on device / closed-form on
+        host) bump the version counters and each page's *current* tier's
+        read/write counters — the pinned-serving dispatch touches both
+        the tier-0 pool and the pinned deepest tier, so the charge can't
+        assume tier 0 like ``charge_fast_accesses``."""
+        page_writes = np.asarray(page_writes, np.int64)
+        page_reads = np.asarray(page_reads, np.int64)
+        self.version += page_writes
+        for t in range(self.n_tiers):
+            m = self.tier == t
+            w = int(page_writes[m].sum())
+            r = int(page_reads[m].sum())
+            if w:
+                self.writes_to[t] += w
+            if r:
+                self.reads_from[t] += r
+
+    # -- bandwidth headroom (spill / cascade targeting) ------------------------
+    def roll_traffic_window(self) -> None:
+        """Mark a pass boundary for the per-tier inflow window."""
+        self._traffic_snap = dict(self.traffic)
+
+    def tier_inflow_bytes(self, tier: int) -> int:
+        """Bytes that landed in ``tier`` since the last window roll."""
+        return sum(self.traffic[(s, tier)] - self._traffic_snap[(s, tier)]
+                   for s in range(self.n_tiers) if s != tier)
+
+    def backing_tier_order(self, start: int = 1) -> list[int]:
+        """Backing tiers ``start..deepest`` ordered by bandwidth headroom:
+        tiers whose channel absorbed the smallest fraction of their
+        ``MediumSpec.bandwidth_gbps`` over the current traffic window come
+        first (unmodeled bandwidth = 0 counts as unconstrained), ties
+        break toward the faster tier — which reduces to plain tier order
+        for the default unmodeled hierarchies, so ``new_page`` cascades
+        and bandwidth spills only re-route when a channel is actually
+        saturated."""
+        def utilization(t: int) -> float:
+            bw = self.hierarchy[t].bandwidth_gbps
+            if bw <= 0:
+                return 0.0
+            return self.tier_inflow_bytes(t) / (bw * 2**30)
+        return sorted(range(start, self.n_tiers),
+                      key=lambda t: (utilization(t), t))
 
     def commit_moves(self, pages: np.ndarray, dst_tier: int,
                      new_slots: np.ndarray) -> None:

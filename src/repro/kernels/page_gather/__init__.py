@@ -1,4 +1,10 @@
-from .ops import page_gather, page_scatter
-from .ref import page_gather_ref, page_scatter_ref
+from .ops import (page_gather, page_gather_dequant, page_gather_quant,
+                  page_scatter, page_scatter_quant)
+from .ref import (page_gather_dequant_ref, page_gather_quant_ref,
+                  page_gather_ref, page_scatter_ref, quantize_pages_ref)
 
-__all__ = ["page_gather", "page_scatter", "page_gather_ref", "page_scatter_ref"]
+__all__ = [
+    "page_gather", "page_scatter", "page_gather_quant", "page_gather_dequant",
+    "page_scatter_quant", "page_gather_ref", "page_scatter_ref",
+    "page_gather_quant_ref", "page_gather_dequant_ref", "quantize_pages_ref",
+]

@@ -21,7 +21,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .page_gather import page_gather_pallas, page_scatter_pallas
+from .page_gather import (page_gather_pallas, page_gather_quant_pallas,
+                          page_scatter_pallas)
+from .ref import page_gather_dequant_ref, page_gather_quant_ref
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -62,3 +64,44 @@ def page_scatter(pool, idx, pages, *, interpret: bool | None = None):
             return _scatter_xla(pool, idx, pages)
         interpret = False
     return _scatter_pallas(pool, idx, pages, interpret=interpret)
+
+
+# -- fused int8 paths (quantize_int8 pinned-host tiers) -----------------------
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _gather_quant_pallas(pool, idx, *, interpret: bool):
+    return page_gather_quant_pallas(pool, idx, interpret=interpret)
+
+
+_gather_quant_xla = jax.jit(page_gather_quant_ref)
+_gather_dequant_xla = jax.jit(page_gather_dequant_ref)
+
+
+def page_gather_quant(pool, idx, *, interpret: bool | None = None):
+    """Fused pack + per-page int8 quantize: (int8 [k, *page], f32 [k]).
+
+    One dispatch instead of gather -> host copy -> numpy quantize; the
+    demotion path into an int8 pinned-host tier uses this directly."""
+    idx = idx.astype(jnp.int32)
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return _gather_quant_xla(pool, idx)
+        interpret = False
+    return _gather_quant_pallas(pool, idx, interpret=interpret)
+
+
+def page_gather_dequant(pool_q, pool_scale, idx):
+    """Fused unpack + dequantize out of an int8 pool -> f32 [k, *page]."""
+    return _gather_dequant_xla(pool_q, pool_scale, idx.astype(jnp.int32))
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def page_scatter_quant(pool_q, pool_scale, idx, pages):
+    """Fused per-page int8 quantize + scatter into a donated int8 pool:
+    (pool_q, pool_scale) with pages[i] quantized into slot idx[i].  The
+    demotion commit into a ``quantize_int8`` pinned-host tier is this one
+    dispatch — no host staging copy, pool buffers donated in place."""
+    from .ref import quantize_pages_ref
+    q, scale = quantize_pages_ref(pages)
+    idx = idx.astype(jnp.int32)
+    return pool_q.at[idx].set(q), pool_scale.at[idx].set(scale)

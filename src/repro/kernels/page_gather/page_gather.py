@@ -10,6 +10,12 @@ automatically by the Pallas pipeline).
 
 gather:  staging[i] = pool[idx[i]]   (pack for eviction / host copy-out)
 scatter: pool[idx[i]] = staging[i]   (unpack after promotion / copy-in)
+
+``page_gather_quant_pallas`` fuses the demotion gather with per-page
+int8 quantization for ``quantize_int8`` pinned-host tiers: one kernel
+packs pool pages into (int8 staging, per-page scale) instead of
+gather -> host copy -> numpy quantize — the page never round-trips
+through host float32.
 """
 from __future__ import annotations
 
@@ -76,3 +82,42 @@ def page_scatter_pallas(pool: jnp.ndarray, idx: jnp.ndarray,
         input_output_aliases={2: 0},  # pool -> out (operand idx incl. prefetch)
         interpret=interpret,
     )(idx.astype(jnp.int32), pages, pool)
+
+
+def _gather_quant_kernel(idx_ref, src_ref, q_ref, scale_ref):
+    page = src_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(page)), 1e-8) / 127.0
+    scale_ref[...] = jnp.full(scale_ref.shape, scale, jnp.float32)
+    q_ref[...] = jnp.clip(jnp.round(page / scale), -127, 127).astype(jnp.int8)
+
+
+def page_gather_quant_pallas(pool: jnp.ndarray, idx: jnp.ndarray, *,
+                             interpret: bool = False):
+    """Fused pack + int8 quantize: pool [n_slots, *page_shape]; idx int32
+    [k] -> (int8 [k, *page_shape], f32 scale [k]).  Same scalar-prefetch
+    DMA pipeline as ``page_gather_pallas`` with the per-page absmax /
+    round / clip folded into the copy — the staging buffer leaves the
+    kernel already quantized (scale = max(absmax, 1e-8)/127, matching
+    the host-pool quantizer bit for bit)."""
+    k = idx.shape[0]
+    page_shape = pool.shape[1:]
+    blk = (1, *page_shape)
+    zeros = (0,) * len(page_shape)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec(blk, lambda i, idx: (idx[i], *zeros))],
+        out_specs=[
+            pl.BlockSpec(blk, lambda i, idx: (i, *zeros)),
+            pl.BlockSpec((1,), lambda i, idx: (i,)),
+        ],
+    )
+    return pl.pallas_call(
+        _gather_quant_kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((k, *page_shape), jnp.int8),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), pool)

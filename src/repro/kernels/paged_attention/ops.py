@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from .paged_attention import paged_attention_pooled
-from .ref import paged_attention_ref
+from .ref import paged_attention_pages_ref, paged_attention_ref
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -43,4 +43,24 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
                                      block_table.astype(jnp.int32),
                                      lengths.astype(jnp.int32),
                                      interpret=bool(interpret))
+    return out.reshape(B, Hq, D)
+
+
+@jax.jit
+def paged_attention_pages(q: jnp.ndarray, k_pages: jnp.ndarray,
+                          v_pages: jnp.ndarray,
+                          lengths: jnp.ndarray) -> jnp.ndarray:
+    """Decode attention over pre-gathered pages (the dual-pool serving
+    path: the caller selects each page from the tier-0 pool or the
+    pinned-host pool before attending).  q: [B, Hq, D]; k/v_pages:
+    [B, n_pages, page, Hkv, D]; lengths: [B].  XLA everywhere — the
+    Pallas pooled kernel reads straight from a single pool and does not
+    apply; identical math to ``paged_attention`` on the same pages."""
+    B, Hq, D = q.shape
+    Hkv = k_pages.shape[3]
+    G = Hq // Hkv
+    scale = D ** -0.5
+    qg = (q * scale).reshape(B, Hkv, G, D)
+    out = paged_attention_pages_ref(qg, k_pages, v_pages,
+                                    lengths.astype(jnp.int32))
     return out.reshape(B, Hq, D)

@@ -5,16 +5,18 @@ import jax
 import jax.numpy as jnp
 
 
-def paged_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
-                        v_pool: jnp.ndarray, block_table: jnp.ndarray,
-                        lengths: jnp.ndarray) -> jnp.ndarray:
-    """Same signature as paged_attention_pooled (q pre-scaled)."""
+def paged_attention_pages_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                              v_pages: jnp.ndarray,
+                              lengths: jnp.ndarray) -> jnp.ndarray:
+    """Attention over pre-gathered pages (q pre-scaled).
+
+    k_pages/v_pages: [B, n_pages, page, Hkv, D] — the caller already
+    resolved the block table, e.g. by selecting between the tier-0 pool
+    and a pinned-host pool per page (the dual-pool serving path)."""
     B, Hkv, G, D = q.shape
-    n_pages = block_table.shape[1]
-    page = k_pool.shape[1]
-    # gather pages -> dense [B, n_pages*page, Hkv, D]
-    k = k_pool[block_table].reshape(B, n_pages * page, Hkv, D)
-    v = v_pool[block_table].reshape(B, n_pages * page, Hkv, D)
+    n_pages, page = k_pages.shape[1:3]
+    k = k_pages.reshape(B, n_pages * page, Hkv, D)
+    v = v_pages.reshape(B, n_pages * page, Hkv, D)
     s = jnp.einsum("bhgd,bkhd->bhgk", q.astype(jnp.float32),
                    k.astype(jnp.float32))
     pos = jnp.arange(n_pages * page)[None, None, None, :]
@@ -22,3 +24,12 @@ def paged_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def paged_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                        v_pool: jnp.ndarray, block_table: jnp.ndarray,
+                        lengths: jnp.ndarray) -> jnp.ndarray:
+    """Same signature as paged_attention_pooled (q pre-scaled)."""
+    # gather pages -> dense, then attend (shared with the dual-pool path)
+    return paged_attention_pages_ref(q, k_pool[block_table],
+                                     v_pool[block_table], lengths)

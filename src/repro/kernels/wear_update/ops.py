@@ -40,17 +40,43 @@ def wear_update(wear, slot_ids, amount=None, *, valid=None, block: int = 512,
     events so padded id lists stay jit-friendly.  ``amount`` defaults to
     one write per event.
     """
+    import numpy as np
+    from jax.core import Tracer
     wear = jnp.asarray(wear, jnp.int32)
-    ids = jnp.clip(jnp.asarray(slot_ids, jnp.int32).reshape(-1), 0,
-                   wear.shape[0] - 1)
-    if amount is None:
-        amount = jnp.ones(ids.shape, jnp.int32)
-    amount = jnp.broadcast_to(jnp.asarray(amount, jnp.int32).reshape(-1),
-                              ids.shape)
-    if valid is not None:
-        amount = jnp.where(jnp.asarray(valid).reshape(-1), amount, 0)
-    if ids.shape[0] == 0:
-        return wear
+    eager = not any(isinstance(x, Tracer) for x in (slot_ids, amount, valid))
+    if eager:
+        # eager callers (the TierStore flush path) hand in data-dependent
+        # event-list sizes almost every pass: normalize + bucket the
+        # length to multiples of 128 **in numpy** (zero-amount padding
+        # pointed at slot 0), so neither the clip/where ops nor the
+        # scatter itself mint a fresh executable per size
+        ids_np = np.clip(np.asarray(slot_ids, np.int64).reshape(-1), 0,
+                         wear.shape[0] - 1)
+        if ids_np.size == 0:
+            return wear
+        amt_np = (np.ones(ids_np.shape, np.int64) if amount is None
+                  else np.broadcast_to(
+                      np.asarray(amount, np.int64).reshape(-1),
+                      ids_np.shape).copy())
+        if valid is not None:
+            amt_np[~np.asarray(valid).reshape(-1)] = 0
+        kpad = (-ids_np.size) % 128
+        if kpad:
+            ids_np = np.concatenate([ids_np, np.zeros(kpad, np.int64)])
+            amt_np = np.concatenate([amt_np, np.zeros(kpad, np.int64)])
+        ids = jnp.asarray(ids_np, jnp.int32)
+        amount = jnp.asarray(amt_np, jnp.int32)
+    else:
+        ids = jnp.clip(jnp.asarray(slot_ids, jnp.int32).reshape(-1), 0,
+                       wear.shape[0] - 1)
+        if amount is None:
+            amount = jnp.ones(ids.shape, jnp.int32)
+        amount = jnp.broadcast_to(jnp.asarray(amount, jnp.int32).reshape(-1),
+                                  ids.shape)
+        if valid is not None:
+            amount = jnp.where(jnp.asarray(valid).reshape(-1), amount, 0)
+        if ids.shape[0] == 0:
+            return wear
     if interpret is None:
         if jax.default_backend() != "tpu":
             return _wear_xla(wear, ids, amount)

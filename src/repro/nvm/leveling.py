@@ -62,13 +62,19 @@ class StartGapLeveler:
         return done
 
     def advance(self, store) -> None:
-        """One gap move: swap physical rows (gap, gap+1) of the slow pool."""
+        """One gap move: swap physical rows (gap, gap+1) of the slow pool.
+        ``store`` may expose ``swap_rows`` (host *and* pinned-host jax
+        pools route through it); the legacy numpy fancy-index swap is kept
+        for bare-pool callers."""
         a = self.stats.gap
         b = a + 1
-        pool = store.slow_pool
-        pool[[a, b]] = pool[[b, a]]
-        if store.slow_scale is not None:
-            store.slow_scale[[a, b]] = store.slow_scale[[b, a]]
+        if hasattr(store, "swap_rows"):
+            store.swap_rows(a, b)
+        else:
+            pool = store.slow_pool
+            pool[[a, b]] = pool[[b, a]]
+            if store.slow_scale is not None:
+                store.slow_scale[[a, b]] = store.slow_scale[[b, a]]
         self.wear.swap_phys(a, b)
         # the swap physically rewrites both rows
         self.wear.record_phys([a, b], leveling=True)

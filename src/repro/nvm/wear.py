@@ -110,6 +110,19 @@ class NvmWear:
             self._pending[ids] = 0
         return self.state
 
+    def adopt_scan_writes(self, new_wear, n_app_writes: int) -> None:
+        """Adopt counters updated *inside* a fused device dispatch.
+
+        The pinned-host serving path carries this tracker's ``wear``
+        array through the decode ``lax.scan`` and scatter-adds each
+        slow-tier KV append on device (zero-round-trip telemetry); at the
+        dispatch boundary the engine hands the updated array back here
+        and credits the app-write total.  Host-side pending events are a
+        separate buffer and are unaffected."""
+        self.state = self.state._replace(wear=jnp.asarray(new_wear,
+                                                          jnp.int32))
+        self.writes_total += int(n_app_writes)
+
     # -- leveler hook -----------------------------------------------------------
     def swap_phys(self, a: int, b: int) -> None:
         """Swap which logical slots map to physical ``a`` and ``b`` (the

@@ -48,7 +48,8 @@ from repro.configs.base import ArchConfig
 from repro.core import sysmon as sysmon_mod
 from repro.core.hierarchy import MemoryHierarchy
 from repro.core.memos import MemosConfig, MemosManager
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import paged_attention, paged_attention_pages
+from repro.kernels.wear_update import wear_update
 from repro.models import attention as attn_mod
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -73,6 +74,11 @@ class ServeConfig:
     # K: inner decode steps per fused dispatch (latency vs. dispatch
     # amortization; the effective K shrinks near sequence ends)
     decode_block: int = 8
+    # overlap the memos *plan* phase with the next dispatch on a worker
+    # thread (snapshot -> plan -> commit; the pass's migrations commit at
+    # the following dispatch boundary, degrading to the synchronous pass
+    # when pages were dirtied mid-plan)
+    overlap_plan: bool = False
     # retained unfused K=1 path — host-side sampling + standalone SysMon
     # records; the parity oracle and the pre-fusion throughput baseline
     reference: bool = False
@@ -90,12 +96,21 @@ class PagedServingEngine:
             fast_slots=scfg.fast_slots, slow_slots=scfg.slow_slots,
             hierarchy=scfg.hierarchy))
         store = self.kv.store
+        # dual-pool serving: when the deepest tier is a (lossless)
+        # pinned-host pool, its pages are served and appended in place by
+        # the fused dispatch — no promote-before-attend, and the tier's
+        # wear counters ride the scan
+        pt = self.kv.pinned_tier
+        if pt is not None and store.pools[pt].quantized:
+            pt = None     # int8 pools can't absorb token-granular appends
+        self.pinned_tier = pt
         self.sysmon = sysmon_mod.init(
             self.kv.n_pages, n_banks=store.cfg.n_banks,
             n_slabs=store.cfg.n_slabs)
         self.memos = MemosManager(store, MemosConfig(
             interval=scfg.memos_interval, adaptive_interval=False,
-            lifetime_horizon_years=scfg.lifetime_horizon_years))
+            lifetime_horizon_years=scfg.lifetime_horizon_years,
+            async_plan=scfg.overlap_plan))
         self.batcher = ContinuousBatcher(scfg.max_batch)
         self.step_count = 0
         self.expert_counts = (np.zeros(cfg.n_experts, np.int64)
@@ -104,7 +119,10 @@ class PagedServingEngine:
         self.rid = 0
         self.last_logits = None     # final inner step's logits, on device
         self._decode_fn = jax.jit(self._decode_batch, donate_argnums=(5,))
+        self._decode_pinned_fn = jax.jit(self._decode_batch_pinned,
+                                         donate_argnums=(6, 7))
         self._fused_fns: dict[int, object] = {}
+        self._fused_pinned_fns: dict[int, object] = {}
 
     # -- request API -----------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int) -> Request:
@@ -120,11 +138,19 @@ class PagedServingEngine:
         return req
 
     # -- page management ---------------------------------------------------------
+    def _servable_mask(self, pids):
+        """Pages the dispatch can attend to: tier-0 residents, plus the
+        pinned deepest tier's residents on the dual-pool path."""
+        if self.pinned_tier is not None:
+            return self.kv.servable_mask(pids)
+        return self.kv.resident_mask(pids)
+
     def _ensure_pages(self, req: Request, k: int = 1) -> bool:
         """Provision ``req`` for the next ``k`` decode positions: allocate
         the tail pages covering pos .. pos+k-1 and promote every
-        non-resident page — the whole span must be HBM-resident for the
-        dispatch's block table."""
+        non-servable page — the whole span must be addressable by the
+        dispatch's block table (HBM, or the pinned-host tier on the
+        dual-pool path, where pages are served in place)."""
         need = (req.pos + k - 1) // self.scfg.page_size + 1
         while len(req.pages) < need:
             pid = self.kv.new_page(SERVE_TIER)
@@ -134,17 +160,17 @@ class PagedServingEngine:
         return self._promote_all([req])
 
     def _promote_all(self, reqs: list[Request]) -> bool:
-        """Promote every non-resident page of ``reqs`` in one batched
+        """Promote every non-servable page of ``reqs`` in one batched
         migration (single plan->execute bulk move instead of per-request
         per-page copies)."""
         pids = [p for req in reqs for p in req.pages]
         if not pids:
             return True
-        mask = self.kv.resident_mask(pids)
+        mask = self._servable_mask(pids)
         if not mask.all():
             cold = [p for p, m in zip(pids, mask) if not m]
             self.memos.engine.migrate_locked(cold, SERVE_TIER)
-            mask = self.kv.resident_mask(pids)
+            mask = self._servable_mask(pids)
         return bool(mask.all())
 
     def _make_room(self) -> bool:
@@ -215,6 +241,81 @@ class PagedServingEngine:
         SysMon charging stay on the host."""
         return self._decode_core(params, tokens[:, 0], positions,
                                  block_tables, lengths, fast_pool)
+
+    # -- dual-pool (pinned-host deepest tier) decode -----------------------------
+    def _decode_core_pinned(self, params, tokens, positions, block_tables,
+                            pool_sel, lengths, fast_pool, pinned_pool):
+        """One decode step with the KV split across the tier-0 pool and
+        the pinned-host pool: pages are attended wherever they live
+        (per-page select after a dual gather) and the new token's K/V
+        lands in whichever pool holds the tail page — the slow-tier KV
+        append joins the dispatch instead of forcing a promotion.
+
+        block_tables [B,P] hold each page's slot *in its own pool*
+        (pinned rows pre-translated through the wear remap); pool_sel
+        [B,P] is 1 for pinned pages.  Rows whose tail lives in the other
+        pool write through an out-of-range index dropped by the scatter
+        (``mode="drop"``), so a numeric slot collision between the two
+        pools can never clobber a real write."""
+        cfg = self.cfg
+        page = self.scfg.page_size
+        B = tokens.shape[0]
+        h = T.embed_in(params, cfg, {"tokens": tokens[:, None]}, None)
+        cos, sin = L.rope_angles(positions[:, None], cfg.head_dim,
+                                 cfg.rope_theta)
+        b_idx = jnp.arange(B)
+        tailcol = positions // page
+        slot = block_tables[b_idx, tailcol]
+        sel_tail = pool_sel[b_idx, tailcol] > 0
+        off = positions % page
+        n_fast = fast_pool.shape[0]
+        n_pin = pinned_pool.shape[0]
+        f_idx = jnp.where(sel_tail, n_fast, slot)   # OOB for pinned tails
+        p_idx = jnp.where(sel_tail, slot, n_pin)    # OOB for fast tails
+        sel_pages = (pool_sel > 0)[:, :, None, None, None]
+        counts_acc = (jnp.zeros((cfg.n_experts,), jnp.int32)
+                      if cfg.is_moe else jnp.int32(0))
+        for l in range(cfg.n_layers):
+            lp = T._tree_slice(params["layers"], l)
+            x = L.rms_norm(h, lp["ln1"], eps=cfg.norm_eps,
+                           gemma_style=cfg.gemma_norm)
+            p = T._attn_from_dict(lp["attn"])
+            q, k, v = attn_mod.project_qkv(p, x, cos, sin)
+            fd, pd = fast_pool.dtype, pinned_pool.dtype
+            fast_pool = fast_pool.at[f_idx, l, 0, off].set(
+                k[:, 0].astype(fd), mode="drop")
+            fast_pool = fast_pool.at[f_idx, l, 1, off].set(
+                v[:, 0].astype(fd), mode="drop")
+            pinned_pool = pinned_pool.at[p_idx, l, 0, off].set(
+                k[:, 0].astype(pd), mode="drop")
+            pinned_pool = pinned_pool.at[p_idx, l, 1, off].set(
+                v[:, 0].astype(pd), mode="drop")
+            # dual gather + per-page select (out-of-range slots clamp and
+            # are discarded by the select)
+            k_pages = jnp.where(sel_pages,
+                                pinned_pool[block_tables, l, 0].astype(fd),
+                                fast_pool[block_tables, l, 0])
+            v_pages = jnp.where(sel_pages,
+                                pinned_pool[block_tables, l, 1].astype(fd),
+                                fast_pool[block_tables, l, 1])
+            out = paged_attention_pages(q[:, 0], k_pages, v_pages, lengths)
+            out = jnp.einsum("bhk,hkd->bd", out.reshape(
+                B, cfg.n_heads, cfg.head_dim), p.wo)[:, None, :]
+            h = h + out
+            h, counts, _ = T._ffn_block(lp, cfg, h, None)
+            if cfg.is_moe and counts is not None:
+                counts_acc = counts_acc + counts
+        h = L.rms_norm(h, params["final_norm"], eps=cfg.norm_eps,
+                       gemma_style=cfg.gemma_norm)
+        logits = T.logits_out(params, cfg, h)[:, 0]
+        return logits, counts_acc, fast_pool, pinned_pool
+
+    def _decode_batch_pinned(self, params, tokens, positions, block_tables,
+                             pool_sel, lengths, fast_pool, pinned_pool):
+        """Retained K=1 reference entry point for the dual-pool path."""
+        return self._decode_core_pinned(params, tokens[:, 0], positions,
+                                        block_tables, pool_sel, lengths,
+                                        fast_pool, pinned_pool)
 
     def _fused_decode(self, params, tokens, positions, prompt_buf,
                       prompt_len, page_tables, block_tables, sm_state,
@@ -288,6 +389,125 @@ class PagedServingEngine:
             self._fused_fns[k] = fn
         return fn
 
+    def _fused_decode_pinned(self, params, tokens, positions, prompt_buf,
+                             prompt_len, page_tables, block_tables, pool_sel,
+                             sm_state, fast_pool, pinned_pool, wear, *,
+                             k_steps: int):
+        """The dual-pool fused dispatch: K inner steps with KV appends
+        landing in either pool and the pinned tier's **wear counters
+        riding the scan carry** — each inner step's slow-tier tail write
+        scatter-adds its physical row through the ``wear_update`` kernel,
+        so NVM telemetry stays zero-round-trip (the PR 2 follow-up);
+        SysMon, sampling, and the page-write counters are unchanged from
+        the single-pool path."""
+        cfg = self.cfg
+        page = self.scfg.page_size
+        B, P = block_tables.shape
+        b_idx = jnp.arange(B)
+        col = jnp.arange(P, dtype=jnp.int32)[None, :]
+        vp = (params["embed"].shape[0] if cfg.tie_embeddings
+              else params["lm_head"].shape[1])
+        counts0 = (jnp.zeros((cfg.n_experts,), jnp.int32)
+                   if cfg.is_moe else jnp.int32(0))
+
+        def body(carry, _):
+            (tokens, positions, sm, fpool, ppool, wear, page_writes,
+             counts_acc, _) = carry
+            logits, counts, fpool, ppool = self._decode_core_pinned(
+                params, tokens, positions, block_tables, pool_sel,
+                positions + 1, fpool, ppool)
+            sampled = jnp.argmax(logits[:, :cfg.vocab],
+                                 axis=-1).astype(jnp.int32)
+            nxt_pos = positions + 1
+            prompt_next = prompt_buf[
+                b_idx, jnp.clip(nxt_pos, 0, prompt_buf.shape[1] - 1)]
+            nxt_tok = jnp.where(nxt_pos < prompt_len, prompt_next, sampled)
+            tailcol = positions // page
+            sm = sysmon_mod.record(
+                sm, page_tables.reshape(-1), is_write=False,
+                valid=(col <= tailcol[:, None]).reshape(-1))
+            tails = page_tables[b_idx, tailcol]
+            sm = sysmon_mod.record(sm, tails, is_write=True)
+            page_writes = page_writes.at[tails].add(1)
+            # pinned-tier wear: tails living in the pinned pool charge
+            # their physical row on device (amount 0 for fast tails)
+            tail_slot = block_tables[b_idx, tailcol]
+            tail_pin = pool_sel[b_idx, tailcol]
+            wear = wear_update(wear, tail_slot, amount=tail_pin)
+            if cfg.is_moe:
+                counts_acc = counts_acc + counts
+            return (nxt_tok, nxt_pos, sm, fpool, ppool, wear, page_writes,
+                    counts_acc, logits), sampled
+
+        carry0 = (tokens, positions, sm_state, fast_pool, pinned_pool, wear,
+                  jnp.zeros((sm_state.n_pages,), jnp.int32), counts0,
+                  jnp.zeros((B, vp), jnp.float32))
+        (_, _, sm, fpool, ppool, wear, page_writes, counts, logits), \
+            sampled = jax.lax.scan(body, carry0, None, length=k_steps)
+        return sampled, logits, sm, fpool, ppool, wear, page_writes, counts
+
+    def _get_fused_pinned(self, k: int):
+        fn = self._fused_pinned_fns.get(k)
+        if fn is None:
+            fn = jax.jit(partial(self._fused_decode_pinned, k_steps=k),
+                         donate_argnums=(9, 10))   # fast_pool, pinned_pool
+            self._fused_pinned_fns[k] = fn
+        return fn
+
+    def _page_read_counts(self, positions: np.ndarray,
+                          page_tables: np.ndarray, k: int) -> np.ndarray:
+        """Per-logical-page read counts for one K-step dispatch: page j of
+        a row is read by every inner step whose block-table prefix covers
+        it (closed form, no device work)."""
+        page = self.scfg.page_size
+        P = page_tables.shape[1]
+        n_prefix = (positions[:, None] + np.arange(k)[None, :]) // page + 1
+        cnt = (n_prefix[:, None, :] > np.arange(P)[None, :, None]).sum(2)
+        reads = np.zeros(self.kv.n_pages, np.int64)
+        np.add.at(reads, page_tables.reshape(-1), cnt.reshape(-1))
+        return reads
+
+    def warmup(self, batch: int | None = None) -> None:
+        """Pre-compile every fused dispatch variant this engine can emit
+        — each power-of-two K up to ``decode_block``, on the single-pool
+        path and (when a pinned tier exists) the dual-pool path — against
+        dummy inputs of the given batch width.  A production server does
+        this at boot: the dispatch variant actually used at a boundary
+        depends on runtime state (tail shrinkage, pinned residency), and
+        a mid-stream compile would stall serving for seconds."""
+        B = batch or self.scfg.max_batch
+        P = self.scfg.max_pages_per_seq
+        page = self.scfg.page_size
+        store = self.kv.store
+        sm = sysmon_mod.init(self.kv.n_pages, n_banks=store.cfg.n_banks,
+                             n_slabs=store.cfg.n_slabs)
+        zi = lambda *s: jnp.zeros(s, jnp.int32)  # noqa: E731
+        ks = []
+        k = 1
+        while k <= self.scfg.decode_block:
+            ks.append(k)
+            k *= 2
+        for k in ks:
+            args = (self.params, zi(B), zi(B), zi(B, P * page), zi(B),
+                    zi(B, P), zi(B, P))
+            # pools are donated by the dispatch: hand each call its own
+            # dummy copy, never the live buffers
+            jax.block_until_ready(
+                self._get_fused(k)(*args, sm,
+                                   jnp.zeros_like(store.fast_pool))[0])
+            if self.pinned_tier is not None:
+                ppool = store.pools[self.pinned_tier]
+                # match the live dispatch's wear-array shape exactly: the
+                # real tracker's counters, or the shape-(1,) dummy used
+                # when the pinned tier is untracked
+                wtr = store.wear_by_tier.get(self.pinned_tier)
+                wear = zi(ppool.data.shape[0] if wtr is not None else 1)
+                jax.block_until_ready(
+                    self._get_fused_pinned(k)(
+                        *args, zi(B, P), sm,
+                        jnp.zeros_like(store.fast_pool),
+                        jnp.zeros_like(ppool.data), wear)[0])
+
     # -- main loop (dispatch-boundary slow path) -----------------------------------
     def step(self) -> dict:
         # 1) admit / resume; make room by preempting if promotion fails.
@@ -353,14 +573,31 @@ class PagedServingEngine:
         P = self.scfg.max_pages_per_seq
         page = self.scfg.page_size
         store = self.kv.store
+        pt = self.pinned_tier
         positions = np.array([r.pos for r in active], np.int32)
         prompt_lens = np.array([len(r.prompt) for r in active], np.int32)
         tokens = np.array([(r.prompt + r.generated)[r.pos] for r in active],
                           np.int32)
-        page_tables, block_tables = self.kv.fill_tables(
-            [r.pages for r in active], P)
+        if pt is None:
+            page_tables, block_tables = self.kv.fill_tables(
+                [r.pages for r in active], P)
+            pool_sel = None
+            wear_tr = None
+        else:
+            page_tables, block_tables, pool_sel = self.kv.fill_tables_mixed(
+                [r.pages for r in active], P)
+            wear_tr = store.wear_by_tier.get(pt)
+            if not pool_sel.any():
+                # every page of this dispatch is tier-0 resident: the
+                # block tables are plain fast-pool slots, so take the
+                # single-pool fast path — the dual-pool dispatch (second
+                # gather + select per layer) only pays for itself when a
+                # page actually lives in the pinned tier
+                pt = None
+                pool_sel = None
+                wear_tr = None
 
-        if self.scfg.reference:
+        if self.scfg.reference and pt is None:
             # -- retained K=1 reference path (parity oracle / baseline) ----
             logits, ecounts, store.fast_pool = self._decode_fn(
                 self.params, jnp.asarray(tokens[:, None]),
@@ -382,7 +619,36 @@ class PagedServingEngine:
             page_writes = np.zeros(store.cfg.n_pages, np.int64)
             np.add.at(page_writes, tails, 1)
             self.last_logits = logits
-        else:
+        elif self.scfg.reference:
+            # -- K=1 reference path over the dual pools (parity oracle) ----
+            ppool = store.pools[pt]
+            logits, ecounts, store.fast_pool, ppool.data = \
+                self._decode_pinned_fn(
+                    self.params, jnp.asarray(tokens[:, None]),
+                    jnp.asarray(positions), jnp.asarray(block_tables),
+                    jnp.asarray(pool_sel), jnp.asarray(positions + 1),
+                    store.fast_pool, ppool.data)
+            sampled = np.asarray(
+                jnp.argmax(logits[:, :self.cfg.vocab], axis=-1),
+                np.int32)[None, :]
+            read_valid = np.arange(P)[None, :] <= (positions // page)[:, None]
+            self.sysmon = sysmon_mod.record(
+                self.sysmon, jnp.asarray(page_tables.reshape(-1)),
+                is_write=False, valid=jnp.asarray(read_valid.reshape(-1)))
+            tails = page_tables[np.arange(B), positions // page]
+            self.sysmon = sysmon_mod.record(
+                self.sysmon, jnp.asarray(tails), is_write=True)
+            page_writes = np.zeros(store.cfg.n_pages, np.int64)
+            np.add.at(page_writes, tails, 1)
+            # host-side wear charge for pinned tail writes (the fused path
+            # folds this into the scan; totals are bit-identical)
+            tcol = positions // page
+            tslot = block_tables[np.arange(B), tcol]
+            tpin = pool_sel[np.arange(B), tcol] > 0
+            if wear_tr is not None and tpin.any():
+                store._account_host_writes(pt, tslot[tpin])
+            self.last_logits = logits
+        elif pt is None:
             # -- fused K-step dispatch -------------------------------------
             prompt_buf = np.zeros((B, P * page), np.int32)
             for i, r in enumerate(active):
@@ -397,15 +663,45 @@ class PagedServingEngine:
             sampled = np.asarray(sampled_d)   # one transfer per K tokens
             page_writes = np.asarray(page_writes_d)
             self.last_logits = logits
+        else:
+            # -- fused K-step dual-pool dispatch: slow-tier KV appends and
+            # the wear_update scatter-add ride the same scan --------------
+            ppool = store.pools[pt]
+            prompt_buf = np.zeros((B, P * page), np.int32)
+            for i, r in enumerate(active):
+                prompt_buf[i, :len(r.prompt)] = r.prompt
+            wear_arr = (wear_tr.state.wear if wear_tr is not None
+                        else jnp.zeros((1,), jnp.int32))
+            fn = self._get_fused_pinned(k)
+            (sampled_d, logits, self.sysmon, store.fast_pool, ppool.data,
+             wear_out, page_writes_d, ecounts) = fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(prompt_buf), jnp.asarray(prompt_lens),
+                jnp.asarray(page_tables), jnp.asarray(block_tables),
+                jnp.asarray(pool_sel), self.sysmon, store.fast_pool,
+                ppool.data, wear_arr)
+            sampled = np.asarray(sampled_d)
+            page_writes = np.asarray(page_writes_d)
+            if wear_tr is not None:
+                n_pin = int(page_writes[store.tier == pt].sum())
+                wear_tr.adopt_scan_writes(wear_out, n_pin)
+                store.note_leveling_writes(pt, n_pin)
+            self.last_logits = logits
 
         if self.expert_counts is not None:
             self.expert_counts += np.asarray(ecounts, np.int64)
 
-        # 4) fast-tier accounting, vectorized: device-counted page writes
-        # bump versions in one add; the read count is closed-form
-        n_reads = int(((positions[:, None] + np.arange(k)[None, :])
-                       // page + 1).sum())
-        store.charge_fast_accesses(page_writes, n_reads)
+        # 4) access accounting, vectorized: device-counted page writes
+        # bump versions in one add; reads are closed-form.  The dual-pool
+        # path splits the charge by each page's tier (the dispatch touched
+        # both the fast pool and the pinned tier).
+        if pt is None:
+            n_reads = int(((positions[:, None] + np.arange(k)[None, :])
+                           // page + 1).sum())
+            store.charge_fast_accesses(page_writes, n_reads)
+        else:
+            page_reads = self._page_read_counts(positions, page_tables, k)
+            store.charge_accesses(page_writes, page_reads)
 
         # 5) advance sequences from the returned token block: tokens
         # sampled at inner step s >= emit_from[i] are new generations
@@ -424,15 +720,27 @@ class PagedServingEngine:
                 req.pages = []
 
         # 6) memos loop between dispatches (hot pages stay; cold/preempted
-        # pages drain to host) — pass granularity, off the decode hot path
+        # pages drain to host) — pass granularity, off the decode hot
+        # path.  With overlap_plan the pass's plan phase runs on a worker
+        # thread across the *next* dispatch and commits at the following
+        # boundary (maybe_step returns that commit's report).
         if self.scfg.memos_enabled:
-            self.sysmon, report = self.memos.maybe_step(self.sysmon, steps=k)
+            # on_commit: re-promote pages an async commit demoted out from
+            # under running sequences *before* the next plan snapshots, so
+            # the reaction is part of the snapshot instead of a guaranteed
+            # mid-plan conflict at the next commit
+            self.sysmon, report = self.memos.maybe_step(
+                self.sysmon, steps=k,
+                on_commit=lambda rep: self._promote_all(
+                    list(self.batcher.active)))
             if report is not None:
                 stats["memos"] = {
                     "migrated": report.migrations.migrated,
                     "to_fast": report.migrations.to_fast,
                     "to_slow": report.migrations.to_slow,
                     "wear_pressure": report.wear_pressure,
+                    "committed_async": report.committed_async,
+                    "plan_conflict": report.plan_conflict,
                 }
                 if report.nvm is not None:
                     stats["nvm"] = {
@@ -442,8 +750,16 @@ class PagedServingEngine:
                         "lifetime_years": report.nvm.lifetime_years_actual,
                     }
                 # single bulk promotion for every page the memos pass
-                # demoted out from under a still-running sequence
-                self._promote_all(list(self.batcher.active))
+                # demoted out from under a still-running sequence (async
+                # commits already promoted via on_commit above)
+                if not self.scfg.overlap_plan:
+                    self._promote_all(list(self.batcher.active))
+
+        if not self.scfg.memos_enabled:
+            # no memos pass ever rolls the bandwidth-headroom window, so
+            # roll it at dispatch boundaries — otherwise cascade targeting
+            # would rank tiers by lifetime-cumulative inflow
+            store.roll_traffic_window()
 
         self.step_count += k
         stats["decode_block"] = k
@@ -455,4 +771,15 @@ class PagedServingEngine:
         hist = []
         while not self.batcher.all_done() and self.step_count < max_steps:
             hist.append(self.step())
+        # commit any plan still overlapping when the workload drains, so
+        # stores/telemetry are consistent for inspection across runs
+        if self.scfg.memos_enabled:
+            report = self.memos.flush()
+            if report is not None and self.batcher.active:
+                self._promote_all(list(self.batcher.active))
         return hist
+
+    def close(self) -> None:
+        """Release the engine's background resources (the async memos
+        plan worker); safe to call multiple times."""
+        self.memos.close()

@@ -59,15 +59,28 @@ class PagedKVCache:
         self.n_pages = n_pages
         self._free_ids = list(range(n_pages - 1, -1, -1))
 
+    @property
+    def pinned_tier(self) -> int | None:
+        """The deepest tier when it is a pinned-host pool (addressable
+        from device code, so the fused dispatch can serve KV out of it
+        and append to it); None otherwise."""
+        deepest = self.store.hierarchy.deepest
+        return deepest if self.store.hierarchy[deepest].is_pinned else None
+
     # -- logical page lifecycle ------------------------------------------------
     def new_page(self, tier: int = SERVE_TIER) -> int | None:
         """Bind a fresh logical page, preferring ``tier`` and cascading
         down the hierarchy when a pool is full (HBM full -> next tier,
-        promote later)."""
+        promote later).  The backing tiers are tried in bandwidth-headroom
+        order — per-``MediumSpec`` peak bandwidth against the (src, dst)
+        traffic counters' current window — so a saturated middle channel
+        is skipped; with unmodeled bandwidths this reduces to plain tier
+        order."""
         if not self._free_ids:
             return None
         pid = self._free_ids.pop()
-        for t in range(tier, self.store.n_tiers):
+        order = [tier] + self.store.backing_tier_order(start=tier + 1)
+        for t in order:
             if self.store.allocate(pid, t):
                 return pid
         self._free_ids.append(pid)
@@ -91,6 +104,18 @@ class PagedKVCache:
         pids = np.asarray(pids, np.int64)
         return (self.store.tier[pids] == SERVE_TIER) & \
             (self.store.slot[pids] != NO_SLOT)
+
+    def servable_mask(self, pids) -> np.ndarray:
+        """bool [k]: which of ``pids`` the fused dispatch can attend to —
+        tier-0 residents plus, when the deepest tier is pinned-host,
+        residents of that pool (served in place, no promotion needed)."""
+        pids = np.asarray(pids, np.int64)
+        live = self.store.slot[pids] != NO_SLOT
+        ok = self.store.tier[pids] == SERVE_TIER
+        pt = self.pinned_tier
+        if pt is not None:
+            ok = ok | (self.store.tier[pids] == pt)
+        return ok & live
 
     def fast_slots_of(self, pids) -> np.ndarray:
         """int32 [k] tier-0 pool slots for a batch of logical pages — the
@@ -116,6 +141,37 @@ class PagedKVCache:
             block_tables[i, :len(pg)] = self.fast_slots_of(pg)
         return page_tables, block_tables
 
+    def fill_tables_mixed(self, pages_rows: list[list[int]], n_cols: int
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(page_tables, block_tables, pool_sel) for the dual-pool fused
+        dispatch: every page must be *servable* (tier 0 or the pinned
+        deepest tier).  ``block_tables`` holds the slot in the page's own
+        pool — tier-0 pool slot, or the pinned pool's **physical** row
+        (wear-leveling remap applied here, on the host, so the jitted
+        scan addresses stable rows); ``pool_sel`` is 1 where the page is
+        pinned-resident."""
+        pt = self.pinned_tier
+        assert pt is not None, "fill_tables_mixed needs a pinned deepest tier"
+        store = self.store
+        wear = store.wear_by_tier.get(pt)
+        B = len(pages_rows)
+        page_tables = np.zeros((B, n_cols), np.int32)
+        block_tables = np.zeros((B, n_cols), np.int32)
+        pool_sel = np.zeros((B, n_cols), np.int32)
+        for i, pg in enumerate(pages_rows):
+            pg = np.asarray(pg[:n_cols], np.int64)
+            assert self.servable_mask(pg).all(), \
+                f"non-servable pages in {pg.tolist()}"
+            sel = (store.tier[pg] == pt).astype(np.int32)
+            slots = store.slot[pg].copy()
+            pin = np.nonzero(sel)[0]
+            if pin.size and wear is not None:
+                slots[pin] = wear.phys(slots[pin])
+            page_tables[i, :len(pg)] = pg
+            block_tables[i, :len(pg)] = slots.astype(np.int32)
+            pool_sel[i, :len(pg)] = sel
+        return page_tables, block_tables, pool_sel
+
     # -- data access -------------------------------------------------------------
     def write_token_kv(self, pid: int, layer_kv: jnp.ndarray,
                        offset: int) -> None:
@@ -129,6 +185,17 @@ class PagedKVCache:
             pool = self.store.pools[t]
             pool.data = pool.data.at[slot, :, :, offset].set(
                 layer_kv.astype(pool.dtype))
+        elif self.store.is_pinned_tier(t):
+            # pinned pool: one jitted in-place token write (no host
+            # read-modify-write round trip), charged to the wear remap
+            wear = self.store.wear_by_tier.get(t)
+            phys = slot if wear is None else wear.phys_one(slot)
+            pool = self.store.pools[t]
+            assert not pool.quantized, \
+                "token-granular appends need a lossless pinned pool"
+            pool.data = pool.data.at[phys, :, :, offset].set(
+                layer_kv.astype(pool.data.dtype))
+            self.store._account_host_writes(t, np.asarray([phys]))
         else:
             page = self.store._host_read(t, slot)
             page[:, :, offset] = np.asarray(layer_kv, np.float32)

@@ -1,0 +1,228 @@
+"""Asynchronous memos pipeline: snapshot -> plan (worker) -> commit.
+
+The overlapped pipeline must be *bit-identical* to the synchronous pass:
+a clean commit replays the exact Algorithm-2 reservations the plan
+simulated on its cloned allocators, and a conflicted commit (pages
+dirtied mid-plan, detected through the optimistic-migration version
+counters) degrades to the synchronous path.  Driven directly against a
+TierStore so nothing else mutates state between boundaries — every
+observable array (page table, pool contents, wear counters, traffic,
+per-pass stats) is compared bit for bit.  Also pins the exact
+token-granular interval accounting of ``maybe_step``."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sysmon
+from repro.core.memos import MemosConfig, MemosManager
+from repro.core.migration import StoreView, plan_locked, replay_reservations
+from repro.core.tiers import TierConfig, TierStore
+
+
+def make_store(seed=0):
+    store = TierStore(TierConfig(
+        n_pages=32, fast_slots=8, slow_slots=32, page_shape=(4,),
+        dtype=jnp.float32, n_banks=2, n_slabs=4, gap_write_interval=5))
+    rng = np.random.RandomState(seed)
+    for p in range(32):
+        assert store.allocate(p, int(store.tier[p]))
+        store.write_page(p, rng.standard_normal(4).astype(np.float32))
+    return store
+
+
+def drive(mgr, n_steps=24, mid_plan_hook=None, bump_after_pass=None):
+    """Golden-style scenario: phased hot sets forcing promotions and
+    demotions, no data writes between boundaries (so every byte of state
+    is comparable).  ``mid_plan_hook`` installs the async conflict
+    injector; ``bump_after_pass`` replays the injector's version bumps
+    into the synchronous oracle at the equivalent point."""
+    if mid_plan_hook is not None:
+        mgr._mid_plan_hook = mid_plan_hook
+    sm = sysmon.init(32, mgr.store.cfg.n_banks, mgr.store.cfg.n_slabs)
+    rng = np.random.RandomState(7)
+    for step in range(n_steps):
+        phase = step // 8
+        hot = np.arange(phase * 6, phase * 6 + 6)
+        warm = rng.randint(20, 32, size=3)
+        sm = sysmon.record(sm, jnp.asarray(hot, jnp.int32), is_write=True)
+        sm = sysmon.record(sm, jnp.asarray(warm, jnp.int32), is_write=False)
+        n_before = len(mgr.reports)
+        sm, rep = mgr.maybe_step(sm)
+        if rep is not None and bump_after_pass is not None:
+            bump_after_pass(mgr, n_before)
+    mgr.flush()
+    return sm
+
+
+def collect(store, mgr):
+    return {
+        "tier": store.tier.copy(),
+        "slot": store.slot.copy(),
+        "version": store.version.copy(),
+        "fast_pool": np.asarray(store.fast_pool, np.float32),
+        "slow_pool": store.slow_pool.copy(),
+        "pages": np.stack([store.read_page(p) for p in range(32)]),
+        "wear": store.wear.wear_counts(),
+        "remap": store.wear._remap.copy(),
+        "writes_total": np.int64(store.wear.writes_total),
+        "leveling": np.int64(store.wear.leveling_writes),
+        "migrated": np.asarray([r.migrations.migrated for r in mgr.reports]),
+        "to_fast": np.asarray([r.migrations.to_fast for r in mgr.reports]),
+        "to_slow": np.asarray([r.migrations.to_slow for r in mgr.reports]),
+        "n_marked": np.asarray([r.n_marked for r in mgr.reports]),
+    }
+
+
+def assert_identical(sync_state, async_state):
+    for key in sync_state:
+        np.testing.assert_array_equal(
+            sync_state[key], async_state[key],
+            err_msg=f"async pipeline diverged from the synchronous "
+                    f"path at {key!r}")
+
+
+def cfg(async_plan):
+    return MemosConfig(interval=4, adaptive_interval=False,
+                       async_plan=async_plan)
+
+
+def test_async_clean_commit_bit_identical_to_sync():
+    """No mid-plan interference: every pass commits through the
+    overlapped path and the final state matches the synchronous run bit
+    for bit (replayed reservations land every page in the same slot)."""
+    s_store, a_store = make_store(), make_store()
+    s_mgr = MemosManager(s_store, cfg(False))
+    a_mgr = MemosManager(a_store, cfg(True))
+    drive(s_mgr)
+    drive(a_mgr)
+    assert a_mgr.plan_commits > 0 and a_mgr.plan_conflicts == 0
+    assert len(s_mgr.reports) == len(a_mgr.reports) > 0
+    assert any(r.migrations.migrated for r in a_mgr.reports)
+    assert all(r.committed_async for r in a_mgr.reports)
+    assert_identical(collect(s_store, s_mgr), collect(a_store, a_mgr))
+    for t in range(a_store.n_tiers):
+        a_store.alloc[t].check_consistency()
+
+
+def test_async_forced_mid_plan_dirtying_degrades_bit_identical():
+    """Every pass gets a page dirtied mid-plan (version bump through the
+    optimistic-migration counters): the commit must detect the conflict,
+    degrade to the synchronous path, and still end bit-identical to a
+    synchronous run with the same bumps applied after each pass."""
+    a_store = make_store()
+    a_mgr = MemosManager(a_store, cfg(True))
+    bumped = {}                       # pass ordinal -> dirtied page
+
+    def dirty_first_planned(mgr, decision, plans):
+        for pl in plans:
+            if len(pl):
+                p = int(pl.pages[0])
+                bumped[len(mgr.reports)] = p
+                mgr.store.version[p] += 1   # a write landing mid-plan
+                return
+
+    drive(a_mgr, mid_plan_hook=dirty_first_planned)
+    assert a_mgr.plan_conflicts > 0, "scenario never exercised a conflict"
+    assert a_mgr.plan_conflicts == len(bumped)
+    assert any(r.plan_conflict for r in a_mgr.reports)
+
+    s_store = make_store()
+    s_mgr = MemosManager(s_store, cfg(False))
+
+    def replay_bump(mgr, pass_ordinal):
+        p = bumped.get(pass_ordinal)
+        if p is not None:
+            mgr.store.version[p] += 1
+
+    drive(s_mgr, bump_after_pass=replay_bump)
+    assert len(s_mgr.reports) == len(a_mgr.reports)
+    assert_identical(collect(s_store, s_mgr), collect(a_store, a_mgr))
+
+
+def test_replay_divergence_rolls_back_and_degrades():
+    """An interleaved allocation that steals a planned block makes the
+    reservation replay diverge: the commit rolls every replayed slot
+    back (allocator invariants intact) and degrades to the synchronous
+    path — migrations still happen, nothing leaks."""
+    store = make_store()
+    mgr = MemosManager(store, cfg(True))
+    stolen = []
+
+    def steal_a_slot(m, decision, plans):
+        # emulate a new_page allocation landing in the plan's destination
+        # tier mid-dispatch: the replay can no longer land the same slots
+        for pl in plans:
+            if len(pl):
+                s = m.store.alloc[pl.dst_tier].alloc(0, None)
+                if s is not None:
+                    stolen.append((pl.dst_tier, s))
+                return
+
+    drive(mgr, mid_plan_hook=steal_a_slot)
+    assert stolen, "hook never fired"
+    assert mgr.plan_conflicts > 0
+    for t in range(store.n_tiers):
+        store.alloc[t].check_consistency()
+    # the degraded passes still migrated pages around the stolen slots
+    assert any(r.migrations.migrated for r in mgr.reports)
+    live = store.slot != -1
+    tiers, slots = store.tier[live], store.slot[live]
+    for t in np.unique(tiers):
+        ss = slots[tiers == t]
+        assert len(set(ss.tolist())) == ss.size, "slot double-booked"
+
+
+def test_replay_reservations_exactness():
+    """Unit: a plan simulated on a StoreView replays onto the live store
+    landing identical slots; replay after an interfering allocation
+    reports divergence and restores the free count."""
+    store = make_store()
+    view = StoreView(store)
+    plan = plan_locked(view, range(6), 0,
+                       bank_freq=np.ones(2), slab_freq=np.ones(4))
+    assert len(plan) == 6
+    n_free = store.alloc[0].n_free
+    assert replay_reservations(store, [plan])
+    assert store.alloc[0].n_free == n_free - 6
+    # a second replay of the same plan must diverge (slots now taken)
+    assert not replay_reservations(store, [plan])
+    assert store.alloc[0].n_free == n_free - 6     # rollback exact
+    store.alloc[0].check_consistency()
+
+
+# =============================================================================
+# maybe_step interval accounting (the double-count bugfix)
+# =============================================================================
+
+def passes_after(steps_seq, interval=4):
+    store = make_store()
+    mgr = MemosManager(store, MemosConfig(interval=interval,
+                                          adaptive_interval=False))
+    sm = sysmon.init(32, store.cfg.n_banks, store.cfg.n_slabs)
+    counts = []
+    for k in steps_seq:
+        sm = sysmon.record(sm, jnp.asarray([0, 1], jnp.int32), is_write=True)
+        sm, _ = mgr.maybe_step(sm, steps=k)
+        counts.append(len(mgr.reports))
+    return counts
+
+
+def test_interval_accounting_exact_over_shrunken_dispatches():
+    """A dispatch spanning more than one interval banks its overshoot:
+    the skipped pass fires at the next boundary (even a 1-token one, the
+    min-remaining-steps shrinkage near sequence ends) instead of pushing
+    a full interval out — pass count tracks floor(tokens / interval)."""
+    # 8 tokens at once (K = 2 x interval), then 1-token tail dispatches
+    assert passes_after([8, 1, 1, 2]) == [1, 2, 2, 3]
+    # the old remainder-modulo accounting lost the banked interval:
+    # 8 % 4 = 0 -> the second pass needed 4 *more* tokens (fired at 12)
+
+
+def test_interval_accounting_exact_at_boundaries():
+    # plain cadence is untouched
+    assert passes_after([4, 4, 4]) == [1, 2, 3]
+    assert passes_after([2, 2, 2, 2]) == [0, 1, 1, 2]
+    # credit is capped at one interval: a giant dispatch banks at most
+    # one catch-up pass — it cannot force a pass at every boundary
+    # forever after
+    assert passes_after([16, 1, 1, 1]) == [1, 2, 2, 2]

@@ -291,6 +291,186 @@ def test_three_tier_memos_loop_distributes_and_migrates():
 
 
 # =============================================================================
+# pinned-host tiers: device-addressable slow pool
+# =============================================================================
+
+def two_tier_store(pinned, n=16, fast=4, slow=16, quantize=False, **kw):
+    h = MemoryHierarchy.two_tier(fast, slow, pinned_slow=pinned,
+                                 quantize_slow=quantize, **kw)
+    s = TierStore(StoreConfig(n_pages=n, page_shape=(4, 2), hierarchy=h,
+                              n_banks=2, n_slabs=2))
+    rng = np.random.RandomState(11)
+    for p in range(n):
+        assert s.allocate(p, h.deepest)
+        s.write_page(p, rng.standard_normal((4, 2)).astype(np.float32))
+    return s
+
+
+def test_pinned_tier_migration_matches_host_tier():
+    """A pinned-host slow tier behaves exactly like the numpy host tier
+    under the batched engine — same page table, same contents, same wear
+    accounting — it just never leaves the jax runtime."""
+    host = two_tier_store(pinned=False)
+    pin = two_tier_store(pinned=True)
+    assert pin.is_pinned_tier(1) and pin.is_addressable_tier(1)
+    assert not pin.is_device_tier(1)
+    ref_eng = BatchedMigrationEngine(host, chunk_pages=3)
+    pin_eng = BatchedMigrationEngine(pin, chunk_pages=3)
+    rng = np.random.RandomState(12)
+    for _ in range(8):
+        pages = rng.choice(16, size=rng.randint(1, 8), replace=False)
+        dst = int(rng.randint(2))
+        locked = rng.rand() < 0.5
+        (ref_eng.migrate_locked if locked else
+         ref_eng.migrate_optimistic)(pages, dst)
+        (pin_eng.migrate_locked if locked else
+         pin_eng.migrate_optimistic)(pages, dst)
+        np.testing.assert_array_equal(host.tier, pin.tier)
+        np.testing.assert_array_equal(host.slot, pin.slot)
+        for p in range(16):
+            np.testing.assert_array_equal(host.read_page(p),
+                                          pin.read_page(p))
+    np.testing.assert_array_equal(host.wear.wear_counts(),
+                                  pin.wear.wear_counts())
+    assert host.wear.writes_total == pin.wear.writes_total
+    pin.wear.check()
+
+
+@pytest.mark.parametrize("pinned", [False, True])
+def test_quantized_slow_tier_roundtrip(pinned):
+    """int8 quantization through the pinned pool's fused
+    gather/scatter kernels matches the numpy host pool's quantizer
+    (demotion gather fuses the quantize on device: one kernel)."""
+    s = two_tier_store(pinned=pinned, quantize=True, track_wear=False)
+    eng = BatchedMigrationEngine(s, chunk_pages=3)
+    expect = {p: s.read_page(p).copy() for p in range(16)}
+    eng.migrate_locked(range(4), 0)       # dequantized promotion
+    eng.migrate_optimistic(range(4), 1)   # requantized demotion
+    tol = 2 * (1 / 127 + 1e-6)
+    for p in range(16):
+        np.testing.assert_allclose(s.read_page(p), expect[p], atol=5 * tol)
+
+
+def test_pinned_leveling_rotation_preserves_contents():
+    """Start-Gap leveling rotates the pinned jax pool underneath stable
+    logical slots: contents survive arbitrary rotation, the remap stays a
+    permutation, leveling writes are charged."""
+    s = two_tier_store(pinned=True, gap_write_interval=3)
+    expect = {p: s.read_page(p).copy() for p in range(16)}
+    rng = np.random.RandomState(13)
+    for i in range(30):                       # drive many advances
+        p = int(rng.randint(16))
+        v = rng.standard_normal((4, 2)).astype(np.float32)
+        s.write_page(p, v)
+        expect[p] = s.read_page(p).copy()
+    assert s.leveler.stats.advances > 0, "leveler never advanced"
+    assert s.wear.leveling_writes == 2 * s.leveler.stats.advances
+    s.wear.check()
+    for p in range(16):
+        np.testing.assert_array_equal(s.read_page(p), expect[p])
+
+
+# =============================================================================
+# satellite: per-tier allocator color geometry
+# =============================================================================
+
+def test_per_tier_allocator_geometry():
+    """Each tier's allocator geometry derives from its own pool size: a
+    small HBM tier no longer collapses a large NVM tier's color space
+    (the monitor geometry still clamps to the smallest pool)."""
+    s = TierStore(StoreConfig(
+        n_pages=64, page_shape=(2,),
+        hierarchy=MemoryHierarchy.two_tier(8, 512)))
+    # monitor geometry: sized to the smallest pool, as before
+    assert s.cfg.n_banks * s.cfg.n_slabs <= 8
+    # tier-0 allocator matches its 8-slot pool; the 512-slot tier keeps
+    # the full default 32 x 16 grid
+    assert s.alloc[0].cfg.n_colors <= 8
+    assert (s.alloc[1].cfg.n_banks, s.alloc[1].cfg.n_slabs) == (32, 16)
+    # explicit geometry that fits everywhere is used verbatim per tier
+    s2 = TierStore(StoreConfig(
+        n_pages=16, page_shape=(2,),
+        hierarchy=MemoryHierarchy.two_tier(8, 512), n_banks=2, n_slabs=4))
+    assert (s2.alloc[0].cfg.n_banks, s2.alloc[0].cfg.n_slabs) == (2, 4)
+    assert (s2.alloc[1].cfg.n_banks, s2.alloc[1].cfg.n_slabs) == (2, 4)
+
+
+# =============================================================================
+# satellite: bandwidth-aware spill / cascade targeting
+# =============================================================================
+
+def test_backing_tier_order_ranks_by_headroom():
+    h = MemoryHierarchy(tiers=(
+        MediumSpec("HBM", 4, cm.HBM, residency="device"),
+        MediumSpec("DRAM", 8, cm.DRAM, residency="device",
+                   bandwidth_gbps=0.001),          # tiny channel
+        MediumSpec("NVM", 16, cm.NVM, residency="host",
+                   bandwidth_gbps=1000.0),
+    ))
+    s = TierStore(StoreConfig(n_pages=16, page_shape=(4,), hierarchy=h,
+                              n_banks=2, n_slabs=2))
+    # nothing has flowed yet: plain tier order
+    assert s.backing_tier_order() == [1, 2]
+    # saturate the DRAM channel's window -> NVM has more headroom
+    s.traffic[(0, 1)] += 10 * s.page_nbytes
+    assert s.backing_tier_order() == [2, 1]
+    # rolling the window forgives the old traffic
+    s.roll_traffic_window()
+    assert s.backing_tier_order() == [1, 2]
+
+
+def test_new_page_cascade_prefers_headroom():
+    from repro.serving.kv_cache import PagedKVCache, PagedKVConfig
+    h = MemoryHierarchy(tiers=(
+        MediumSpec("HBM", 2, cm.HBM, residency="device"),
+        MediumSpec("DRAM", 4, cm.DRAM, residency="device",
+                   bandwidth_gbps=0.001),
+        MediumSpec("NVM", 16, cm.NVM, residency="host",
+                   bandwidth_gbps=1000.0),
+    ))
+    kv = PagedKVCache(PagedKVConfig(n_layers=1, n_kv_heads=1, head_dim=2,
+                                    page_size=2, hierarchy=h, n_pages=16))
+    s = kv.store
+    # fill the serving tier
+    assert kv.new_page() is not None and kv.new_page() is not None
+    # saturated DRAM channel: the cascade skips it for the NVM tier
+    s.traffic[(0, 1)] += 100 * s.page_nbytes
+    pid = kv.new_page()
+    assert pid is not None and int(s.tier[pid]) == 2
+    # with the window rolled the middle tier is preferred again
+    s.roll_traffic_window()
+    pid2 = kv.new_page()
+    assert pid2 is not None and int(s.tier[pid2]) == 1
+
+
+def test_memos_spill_targets_headroom_tier():
+    """The bandwidth balancer's spill lands in the backing tier with the
+    most channel headroom, not blindly in tier 1."""
+    h = MemoryHierarchy(tiers=(
+        MediumSpec("HBM", 8, cm.HBM, residency="device"),
+        MediumSpec("DRAM", 8, cm.DRAM, residency="device",
+                   bandwidth_gbps=0.001),
+        MediumSpec("NVM", 32, cm.NVM, residency="host",
+                   bandwidth_gbps=1000.0),
+    ))
+    s = TierStore(StoreConfig(n_pages=16, page_shape=(4,), hierarchy=h,
+                              n_banks=2, n_slabs=2))
+    for p in range(8):
+        assert s.allocate(p, 0)
+        s.write_page(p, np.full(4, p, np.float32))
+    s.traffic[(0, 1)] += 100 * s.page_nbytes     # DRAM channel saturated
+    mgr = MemosManager(s, MemosConfig(interval=1, adaptive_interval=False))
+    sm = sysmon.init(16, s.cfg.n_banks, s.cfg.n_slabs)
+    # read-dominated tier-0 pages + saturated fast channel -> spill
+    sm = sysmon.record(sm, jnp.arange(8, dtype=jnp.int32), is_write=False)
+    sm, rep = mgr.maybe_step(sm, fast_bw_util=0.99)
+    assert rep is not None and rep.spilled > 0, "balancer never spilled"
+    spilled_tiers = {int(t) for t in s.tier[:8] if int(t) != 0}
+    assert spilled_tiers == {2}, \
+        f"spill ignored bandwidth headroom (landed in {spilled_tiers})"
+
+
+# =============================================================================
 # wear/energy telemetry attaches per wear_tracked tier
 # =============================================================================
 

@@ -192,6 +192,139 @@ def test_three_tier_serving_end_to_end(model):
     assert occ["t1_dram_total"] == 4 and "t2_nvm_used" in occ
 
 
+def test_overlap_plan_serving_parity(model):
+    """Async memos pipeline under real serving pressure: the overlapped
+    snapshot->plan->commit engine generates the same tokens as the
+    synchronous engine and the dense-model oracle, closes SysMon passes
+    at the same boundaries (identical WD history), and commits every
+    pass exactly once (clean commit or degraded-sync, never dropped)."""
+    cfg, params = model
+    prompts = [[5, 7, 9, 11, 13], [21, 22, 23], [1, 2, 3, 4, 5, 6, 7, 8, 9]]
+    kw = dict(max_new=16, memos_interval=8, fast_slots=8, decode_block=8)
+    sync_e, sync_r = _run_engine(cfg, params, prompts, **kw)
+    over_e, over_r = _run_engine(cfg, params, prompts, overlap_plan=True,
+                                 **kw)
+    assert over_e.memos.reports, "overlapped memos never committed"
+    assert over_e.memos.plan_commits + over_e.memos.plan_conflicts == \
+        len(over_e.memos.reports)
+    assert all(r.committed_async for r in over_e.memos.reports)
+    st = over_e.kv.store
+    assert st.traffic[(FAST, SLOW)] > 0 and st.traffic[(SLOW, FAST)] > 0, \
+        "no tiering traffic — the scenario exerts no HBM pressure"
+    for a, b in zip(sync_r, over_r):
+        assert a.generated == b.generated, "overlap commit corrupted KV"
+        assert a.generated == ref_greedy(cfg, params, a.prompt, 16)
+    assert len(sync_e.memos.reports) == len(over_e.memos.reports)
+    np.testing.assert_array_equal(np.asarray(sync_e.sysmon.hist),
+                                  np.asarray(over_e.sysmon.hist),
+                                  err_msg="sysmon.hist")
+
+
+def test_overlap_plan_forced_mid_plan_dirtying(model):
+    """Every overlapped pass gets a planned page dirtied mid-plan: the
+    versioned commit must detect each conflict, degrade to the
+    synchronous path, and keep serving losslessly."""
+    cfg, params = model
+    prompts = [[5, 7, 9, 11, 13], [21, 22, 23], [1, 2, 3, 4, 5, 6, 7, 8, 9]]
+    eng = PagedServingEngine(cfg, params, ServeConfig(
+        page_size=8, max_batch=3, fast_slots=8, slow_slots=128,
+        memos_interval=8, decode_block=8, overlap_plan=True))
+
+    dirtied = []
+
+    def dirty_first_planned(mgr, decision, plans):
+        for pl in plans:
+            if len(pl):
+                mgr.store.version[int(pl.pages[0])] += 1
+                dirtied.append(int(pl.pages[0]))
+                return
+
+    eng.memos._mid_plan_hook = dirty_first_planned
+    reqs = [eng.submit(p, max_new=16) for p in prompts]
+    eng.run(max_steps=600)
+    assert eng.batcher.all_done()
+    assert dirtied, "no pass ever planned a migration"
+    # every dirtied plan must conflict (empty plans commit trivially)
+    assert eng.memos.plan_conflicts == len(dirtied), \
+        "a dirtied plan slipped through the versioned commit"
+    assert sum(r.plan_conflict for r in eng.memos.reports) == len(dirtied)
+    for p, r in zip(prompts, reqs):
+        assert r.generated == ref_greedy(cfg, params, p, 16), \
+            "degraded commit corrupted KV"
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_pinned_tier_fused_parity_vs_reference(model, k):
+    """Dual-pool serving (pinned-host deepest tier): the fused K-step
+    dispatch — slow-tier KV appends and the wear_update scatter-add
+    riding the scan — is bit-identical to the per-token reference path:
+    tokens, every SysMon counter, version/read/write accounting, both
+    pool buffers, and the pinned tier's wear counters."""
+    cfg, params = model
+    # 2 fast slots force most pages (tails included) into the pinned pool;
+    # a huge gap interval keeps Start-Gap swaps out of the comparison
+    # window (the reference path levels between tokens, the fused path at
+    # dispatch boundaries)
+    def hier():
+        return MemoryHierarchy.two_tier(2, 128, pinned_slow=True,
+                                        gap_write_interval=10_000)
+    prompts = [[5, 7, 9, 11, 13], [21, 22, 23], [1, 2, 3, 4, 5, 6, 7, 8, 9]]
+    kw = dict(max_new=16, memos_enabled=False, hierarchy=hier())
+    ref, rref = _run_engine(cfg, params, prompts, reference=True, **kw)
+    fus, rfus = _run_engine(cfg, params, prompts, decode_block=k, **kw)
+    assert ref.pinned_tier == fus.pinned_tier == 1
+    sr, sf = ref.kv.store, fus.kv.store
+    assert sr.wear_by_tier[1].writes_total > 0, \
+        "no KV append ever landed in the pinned tier"
+    for a, b in zip(rref, rfus):
+        assert a.generated == b.generated
+        assert a.generated == ref_greedy(cfg, params, a.prompt, 16)
+    for f in SYSMON_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref.sysmon, f)),
+            np.asarray(getattr(fus.sysmon, f)), err_msg=f"sysmon.{f}")
+    np.testing.assert_array_equal(sr.version, sf.version)
+    assert sr.writes_to == sf.writes_to
+    assert sr.reads_from == sf.reads_from
+    np.testing.assert_array_equal(np.asarray(sr.fast_pool),
+                                  np.asarray(sf.fast_pool))
+    np.testing.assert_array_equal(np.asarray(sr.pools[1].data),
+                                  np.asarray(sf.pools[1].data))
+    np.testing.assert_array_equal(sr.wear_by_tier[1].wear_counts(),
+                                  sf.wear_by_tier[1].wear_counts())
+    assert sr.wear_by_tier[1].writes_total == sf.wear_by_tier[1].writes_total
+
+
+def test_pinned_three_tier_overlap_end_to_end(model):
+    """The full tentpole in one scenario: HBM -> DRAM-sim -> pinned NVM
+    hierarchy served with the overlapped memos pipeline.  Pages cross
+    both hierarchy boundaries, pinned-resident pages are attended and
+    appended in place, wear telemetry accumulates on device, and the
+    generated tokens equal the dense-model oracle."""
+    cfg, params = model
+    hier = MemoryHierarchy.three_tier(8, 4, 128, pinned_nvm=True)
+    eng = PagedServingEngine(cfg, params, ServeConfig(
+        page_size=8, max_batch=3, hierarchy=hier, memos_interval=8,
+        decode_block=8, overlap_plan=True))
+    assert eng.pinned_tier == 2
+    prompts = [[5, 7, 9, 11, 13], [21, 22, 23], [1, 2, 3, 4, 5, 6, 7, 8, 9]]
+    reqs = [eng.submit(p, max_new=24) for p in prompts]
+    eng.run(max_steps=600)
+    assert eng.batcher.all_done()
+    assert eng.memos.reports, "memos never committed between dispatches"
+    st = eng.kv.store
+    hbm_boundary = st.traffic[(0, 1)] + st.traffic[(1, 0)] \
+        + st.traffic[(0, 2)] + st.traffic[(2, 0)]
+    nvm_boundary = st.traffic[(1, 2)] + st.traffic[(2, 1)] \
+        + st.traffic[(0, 2)] + st.traffic[(2, 0)]
+    assert hbm_boundary > 0, "no pages crossed the HBM boundary"
+    assert nvm_boundary > 0, "no pages crossed the NVM boundary"
+    assert st.wear_by_tier[2].writes_total > 0
+    for p, r in zip(prompts, reqs):
+        assert r.generated == ref_greedy(cfg, params, p, 24), \
+            "pinned 3-tier round trip corrupted KV"
+
+
 def test_moe_engine_tracks_expert_hotness():
     cfg = smoke(registry()["olmoe_1b_7b"])
     params = T.init_params(cfg, jax.random.PRNGKey(1))
