@@ -153,14 +153,23 @@ def serving_sweep_rows(r: dict) -> list[str]:
         lines.append(f"| {p} | {on_s} | {off_s} | {rel} |"
                      if on or off else f"| {p} | — | — | — |")
     kmax = r.get("k_max")
-    deltas = [(name, r.get(f"speedup_{name}_vs_sync"))
-              for name in ("overlap", "pinned", "overlap_pinned")]
+    deltas = [("overlap vs sync", r.get("speedup_overlap_vs_sync")),
+              ("pinned vs sync", r.get("speedup_pinned_vs_sync")),
+              ("overlap+pinned vs pinned",
+               r.get("speedup_overlap_pinned_vs_pinned"))]
     if kmax and any(v for _, v in deltas):
         lines.append("")
-        lines.append(f"Async memos pipeline at K={kmax} (memos on, "
-                     f"vs the synchronous k{kmax} path): " + ", ".join(
-                         f"{name.replace('_', '+')} = {v:.2f}x"
-                         for name, v in deltas if v))
+        lines.append(f"Async memos pipeline at K={kmax} (memos on, each "
+                     f"vs its synchronous counterpart): " + ", ".join(
+                         f"{name} = {v:.2f}x" for name, v in deltas if v))
+        pages = [(p, sweep[f"{p}_memos"])
+                 for p in (f"k{kmax}+overlap", f"k{kmax}+overlap+pinned")
+                 if f"{p}_memos" in sweep]
+        if pages:
+            lines.append("Page-granular commits: " + ", ".join(
+                f"{p}: {row.get('pages_committed', 0)} committed / "
+                f"{row.get('pages_degraded', 0)} degraded"
+                for p, row in pages))
     return lines
 
 

@@ -24,9 +24,15 @@ axes (the PR 5 tentpole):
   * +overlap+pinned — both.
 
 Bars: fused K=16 >= 3x the K=1 reference path (the fusion PR's bar), and
-the overlapped pipeline must not regress below the synchronous path
-(``--overlap-bar``, default 0.9 to absorb CI timer noise; the committed
-full-run JSON shows > 1x).  Results land in
+EACH overlapped config must independently reach ``--overlap-bar`` x its
+own synchronous counterpart (+overlap vs the plain K_max path,
++overlap+pinned vs +pinned — so the pinned tier's inherent cost is never
+billed to the overlap machinery).  Default 1.0: with page-granular
+commits overlap is a strict win, so the gate is no-regression; a failure
+names the offending config.  A conflict-free
+serving run must also report ``pages_degraded == 0`` for every memos-on
+K_max config — a degrade there means the dirty-set validator flagged a
+page nothing touched.  Results land in
 benchmarks/results/serving_throughput.json (aggregated by
 benchmarks/report.py into results/summary.md).
 
@@ -102,8 +108,8 @@ def measure(cfg, params, *, k, memos, reference, args,
         "tokens_per_s": toks / best,
         "memos_passes": len(engine.memos.reports),
         "migrated": sum(r.migrations.migrated for r in engine.memos.reports),
-        "plan_commits": engine.memos.plan_commits,
-        "plan_conflicts": engine.memos.plan_conflicts,
+        "pages_committed": engine.memos.pages_committed,
+        "pages_degraded": engine.memos.pages_degraded,
     }
     print(f"  {label:18s}: {best * 1e3:8.1f} ms  "
           f"{row['tokens_per_s']:10.1f} tok/s  "
@@ -132,12 +138,13 @@ def main():
                          "bar still applies")
     ap.add_argument("--no-check", action="store_true",
                     help="always exit 0 regardless of any bar")
-    ap.add_argument("--overlap-bar", type=float, default=0.9,
-                    help="min BEST-async-axis/sync tokens/s ratio: the "
-                         "better of +overlap and +overlap+pinned must "
-                         "stay within this factor of the synchronous "
-                         "K_max path (per-axis gating is too noisy on "
-                         "shared CPU runners; full runs should show > 1)")
+    ap.add_argument("--overlap-bar", type=float, default=1.0,
+                    help="min overlap/sync tokens/s ratio, gated PER "
+                         "overlap config against its own synchronous "
+                         "counterpart (+overlap vs plain K_max, "
+                         "+overlap+pinned vs +pinned); page-granular "
+                         "commits make overlap a strict win, so the "
+                         "default is no-regression")
     ap.add_argument("--out", type=Path,
                     default=ROOT / "benchmarks" / "results" /
                     "serving_throughput.json")
@@ -148,10 +155,12 @@ def main():
         args.max_new = min(args.max_new, 16)
         args.prompt_len = min(args.prompt_len, 8)
         args.ks = [1, 4]
-        # two measured rounds: engine state differs between rounds (page
-        # residency, memos cadence), so a round can hit a not-yet-compiled
-        # dispatch variant — min-over-rounds absorbs one such compile
-        args.repeats = 2
+        # several measured rounds, two jobs: engine state differs between
+        # rounds (page residency, memos cadence), so a round can hit a
+        # not-yet-compiled dispatch variant, and each round is only ~tens
+        # of ms — min-over-rounds absorbs compiles AND the scheduler
+        # noise that would flake the per-config 1.0x overlap gate
+        args.repeats = 6
 
     import jax
     from repro.configs import registry, smoke
@@ -196,12 +205,20 @@ def main():
     if speedup_fused1 is not None:
         results["speedup_kmax_vs_fused_k1_memos"] = speedup_fused1
     results["k_max"] = kmax
+    # each async config vs its own synchronous counterpart — comparing
+    # +overlap+pinned against the non-pinned sync path would bill the
+    # pinned tier's inherent cost to the overlap machinery
     sync_base = sweep[f"k{kmax}_memos"]["tokens_per_s"]
-    for suffix in ("+overlap", "+pinned", "+overlap+pinned"):
+    pinned_row = sweep.get(f"k{kmax}+pinned_memos")
+    pinned_base = pinned_row["tokens_per_s"] if pinned_row else None
+    for suffix, key, base in (
+            ("+overlap", "speedup_overlap_vs_sync", sync_base),
+            ("+pinned", "speedup_pinned_vs_sync", sync_base),
+            ("+overlap+pinned", "speedup_overlap_pinned_vs_pinned",
+             pinned_base)):
         row = sweep.get(f"k{kmax}{suffix}_memos")
-        if row:
-            results[f"speedup_{suffix.replace('+', '_').lstrip('_')}"
-                    "_vs_sync"] = row["tokens_per_s"] / sync_base
+        if row and base:
+            results[key] = row["tokens_per_s"] / base
     results["config"] = {
         "arch": args.arch, "batch": args.batch, "requests": args.requests,
         "prompt_len": args.prompt_len, "max_new": args.max_new,
@@ -216,19 +233,40 @@ def main():
     print(f"  speedup  : K={kmax} fused = {speedup:.1f}x the K=1 path "
           f"(memos on; {'meets' if speedup >= bar else 'BELOW'} the "
           f"{bar:.0f}x bar){vs_fused1}")
-    overlap_ratio = results.get("speedup_overlap_pinned_vs_sync")
-    overlap_only = results.get("speedup_overlap_vs_sync")
-    if overlap_only is not None:
-        print(f"  overlap  : +overlap = {overlap_only:.2f}x sync, "
-              f"+overlap+pinned = {overlap_ratio:.2f}x sync "
-              f"(bar {args.overlap_bar:.2f})")
+    overlap_ratios = {
+        "+overlap vs sync": results.get("speedup_overlap_vs_sync"),
+        "+overlap+pinned vs +pinned":
+            results.get("speedup_overlap_pinned_vs_pinned")}
+    overlap_ratios = {s: r for s, r in overlap_ratios.items()
+                      if r is not None}
+    if overlap_ratios:
+        shown = ", ".join(f"{s} = {r:.2f}x"
+                          for s, r in overlap_ratios.items())
+        print(f"  overlap  : {shown} (bar {args.overlap_bar:.2f}, "
+              f"each config gated independently)")
+    # conflict-free serving must commit every planned page: any degrade
+    # here means the dirty-set validator flagged a page nothing touched
+    for suffix in ("", "+overlap", "+pinned", "+overlap+pinned"):
+        row = sweep.get(f"k{kmax}{suffix}_memos")
+        if row and row["pages_degraded"]:
+            raise AssertionError(
+                f"k{kmax}{suffix}_memos degraded {row['pages_degraded']} "
+                f"pages on a conflict-free run (committed "
+                f"{row['pages_committed']})")
 
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(results, indent=2))
     print(f"wrote {args.out}")
-    ok = (speedup >= bar or args.tiny) and (
-        overlap_ratio is None or
-        max(overlap_ratio, overlap_only or 0.0) >= args.overlap_bar)
+    # gate each overlap config independently — a passing +overlap+pinned
+    # must not mask a regressed +overlap (or vice versa)
+    below = {s: r for s, r in overlap_ratios.items()
+             if r < args.overlap_bar}
+    if below:
+        offenders = ", ".join(f"k{kmax}{s} = {r:.2f}x"
+                              for s, r in below.items())
+        print(f"  OVERLAP BAR FAILED ({args.overlap_bar:.2f}x): "
+              f"{offenders}")
+    ok = (speedup >= bar or args.tiny) and not below
     return 0 if ok or args.no_check else 1
 
 

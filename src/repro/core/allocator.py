@@ -61,6 +61,12 @@ class SubBuddyAllocator:
         self._free_blocks: set[tuple[int, int]] = set()  # (start, order)
         self._allocated: set[tuple[int, int]] = set()    # live allocations
         self.n_free = 0
+        # generation counter: bumped by every successful alloc/free, so a
+        # snapshot (clone) taken at generation g is interchangeable with
+        # the live allocator for as long as the live generation stays g —
+        # the async memos commit adopts the plan's clone wholesale when no
+        # allocator call interleaved, instead of replaying per reservation
+        self.gen = 0
         self._seed_initial_blocks()
 
     # -- internal ---------------------------------------------------------
@@ -109,6 +115,7 @@ class SubBuddyAllocator:
             got = self._alloc_any(order)
             if got is not None:
                 self._allocated.add((got, order))
+                self.gen += 1
             return got
         n_colors = self.cfg.n_colors
         mask = n_colors - 1 if color_mask is None else color_mask
@@ -120,6 +127,7 @@ class SubBuddyAllocator:
                 got = self._pop_exact(order, c)
                 if got is not None:
                     self._allocated.add((got, order))
+                    self.gen += 1
                     return got
 
         # 2) split a higher-order block covering a matching color.
@@ -138,6 +146,7 @@ class SubBuddyAllocator:
                     continue
                 got = self._expand_color_block(start, o, order, want, mask)
                 self._allocated.add((got, order))
+                self.gen += 1
                 return got
         return None
 
@@ -178,6 +187,7 @@ class SubBuddyAllocator:
         if (start, order) not in self._allocated:
             raise ValueError(f"double/invalid free of block ({start}, {order})")
         self._allocated.discard((start, order))
+        self.gen += 1
         while order < self.cfg.max_order:
             buddy = start ^ (1 << order)
             if (buddy, order) not in self._free_blocks:
@@ -194,10 +204,12 @@ class SubBuddyAllocator:
 
         The asynchronous memos plan phase simulates Algorithm-2 slot
         reservations against a clone on its worker thread, so the live
-        allocator is never touched off the dispatch-boundary path; the
-        commit replays the recorded reservations against the live
-        allocator and degrades to a synchronous re-plan if any replay
-        diverges."""
+        allocator is never touched off the dispatch-boundary path.  At
+        commit time, if the live allocator's ``gen`` still equals the
+        generation the clone was taken at, no call interleaved and the
+        clone (reservations included) simply *becomes* the live allocator
+        — an O(1) adoption; otherwise the recorded reservations are
+        replayed call by call and any matching prefix still commits."""
         other = object.__new__(SubBuddyAllocator)
         other.cfg = self.cfg
         other.free_lists = [{c: deque(dq) for c, dq in bucket.items()}
@@ -205,6 +217,7 @@ class SubBuddyAllocator:
         other._free_blocks = set(self._free_blocks)
         other._allocated = set(self._allocated)
         other.n_free = self.n_free
+        other.gen = self.gen
         return other
 
     def check_consistency(self) -> None:

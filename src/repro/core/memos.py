@@ -39,15 +39,23 @@ snapshot -> plan -> commit pipeline:
     dispatch): pattern classification + placement + Algorithm-2 slot
     targeting simulated on the cloned allocators + spill candidate
     selection — pure numpy against the immutable snapshot;
-  * **commit** (next dispatch boundary): validate the snapshot — any
-    planned page whose version counter advanced mid-plan (the same
-    counters the optimistic migration path uses as dirty bits), changed
-    tier, or whose replayed slot reservation diverges, is a conflict —
-    then execute the reserved plans as bulk moves.  On conflict the whole
-    pass **degrades to the synchronous path**: the stale plan is
-    discarded (reservations rolled back) and plan+execute re-run against
-    live state, so a conflicted pass is exactly a synchronous pass that
-    fired one dispatch later.
+  * **commit** (next dispatch boundary): **page-granular**.  The
+    snapshot opened a dirty-page epoch on the store (every version bump,
+    tier change, or slot change mid-dispatch is recorded incrementally),
+    so validation is a set lookup per planned page — O(dirtied pages)
+    overall, not O(plan).  Reservations land through
+    :func:`~repro.core.migration.commit_reservations`: a destination
+    tier with no interleaved allocator call adopts the plan's clone
+    wholesale (O(1), slots land exactly as simulated); otherwise the
+    recorded Algorithm-2 calls replay against the live allocator, each
+    reservation patched to the slot actually obtained — the slot a
+    synchronous pass planning at this boundary would take.  The *clean
+    subset* of every plan then executes as bulk moves — only pages
+    dirtied mid-plan (or out of destination capacity at commit time)
+    degrade: their reservations are released and they simply wait for
+    the next pass, which sees them in its fresh snapshot.  A conflict no
+    longer discards the whole plan or forces a synchronous re-plan;
+    ``pages_committed`` / ``pages_degraded`` count the split per page.
 """
 from __future__ import annotations
 
@@ -57,8 +65,9 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from . import sysmon as sysmon_mod
-from .migration import (MigrationStats, StoreView, make_engine, plan_decision,
-                        plan_optimistic, replay_reservations)
+from .migration import (MigrationStats, StoreView, commit_reservations,
+                        make_engine, plan_decision, plan_optimistic,
+                        subset_plan)
 from .placement import BandwidthBalancer, plan
 from .tiers import TierStore
 
@@ -97,7 +106,9 @@ class MemosReport:
     nvm_by_tier: dict = field(default_factory=dict)  # tier -> NvmReport
     wear_pressure: bool = False   # wear penalty applied to this pass's plan
     committed_async: bool = False  # pass went through the overlapped commit
-    plan_conflict: bool = False    # plan was stale; degraded to sync path
+    plan_conflict: bool = False    # some planned pages were stale (degraded)
+    pages_committed: int = 0      # planned pages committed by this pass
+    pages_degraded: int = 0       # planned pages left for the next pass
 
 
 @dataclass
@@ -138,8 +149,11 @@ class MemosManager:
                              "(MemosConfig.engine='batched')")
         self._executor: ThreadPoolExecutor | None = None
         self._ticket: _PlanTicket | None = None
-        self.plan_commits = 0         # overlapped passes committed clean
-        self.plan_conflicts = 0       # overlapped passes degraded to sync
+        # page-granular commit accounting: a partially-committed pass
+        # contributes to *both* counters, once per page — never
+        # double-counted as a whole-pass commit and a whole-pass conflict
+        self.pages_committed = 0      # planned pages committed async
+        self.pages_degraded = 0       # planned pages dirtied mid-plan
         # test hook: called with (manager, decision, plans) between the
         # worker join and validation — simulates writes landing mid-plan
         self._mid_plan_hook = None
@@ -221,12 +235,10 @@ class MemosManager:
         return order[0] if order else self.store.hierarchy.deepest
 
     def _plan_execute_finish(self, summary, wear_pressure: bool,
-                             spilling: bool, spill_dst: int, *,
-                             committed_async: bool = False,
-                             plan_conflict: bool = False) -> MemosReport:
+                             spilling: bool, spill_dst: int) -> MemosReport:
         """Steps 3-6 of the pass against *live* state: plan placement,
-        execute migrations, spill, close telemetry.  Both the synchronous
-        path and the degraded (conflicted) async commit run this body."""
+        execute migrations, spill, close telemetry — the synchronous
+        path."""
         penalty = self.cfg.wear_penalty if wear_pressure else 0.0
         current = self.store.tier.copy()
         decision = plan(summary, current, max_migrations=self.cfg.max_migrations,
@@ -252,14 +264,13 @@ class MemosManager:
             spilled = st.migrated
 
         return self._finish_pass(decision, stats, spilled, summary,
-                                 wear_pressure,
-                                 committed_async=committed_async,
-                                 plan_conflict=plan_conflict)
+                                 wear_pressure)
 
     def _finish_pass(self, decision, stats: MigrationStats, spilled: int,
                      summary, wear_pressure: bool, *,
                      committed_async: bool = False,
-                     plan_conflict: bool = False) -> MemosReport:
+                     pages_committed: int = 0,
+                     pages_degraded: int = 0) -> MemosReport:
         """Close the pass: adaptive interval, telemetry windows, report."""
         # adaptive interval (Sec. 7.4): grow when the plan barely changes
         tgt = np.asarray(decision.target_tier)
@@ -303,7 +314,9 @@ class MemosManager:
             nvm_by_tier=nvm_by_tier,
             wear_pressure=wear_pressure,
             committed_async=committed_async,
-            plan_conflict=plan_conflict,
+            plan_conflict=pages_degraded > 0,
+            pages_committed=pages_committed,
+            pages_degraded=pages_degraded,
         )
         self.reports.append(report)
         return report
@@ -370,10 +383,14 @@ class MemosManager:
         return decision, plans, spill_plan
 
     def commit_pending(self) -> MemosReport | None:
-        """Commit phase, at the next dispatch boundary: join the worker,
-        validate the snapshot against pages dirtied mid-plan, and either
-        bulk-execute the reserved plans or degrade to the synchronous
-        path.  No-op when no plan is in flight."""
+        """Commit phase, at the next dispatch boundary — page-granular:
+        join the worker, close the dirty-page epoch the snapshot opened,
+        land the reservations (O(1) clone adoption per quiet tier,
+        prefix replay otherwise), and bulk-execute the *clean subset* of
+        every plan.  Only pages dirtied mid-plan (or past a replay
+        divergence) degrade: their reservations are released and the
+        next pass picks them up from its own fresh snapshot.  No-op when
+        no plan is in flight."""
         if self._ticket is None:
             return None
         t, self._ticket = self._ticket, None
@@ -382,48 +399,39 @@ class MemosManager:
             self._mid_plan_hook(self, decision, plans)
         all_plans = plans + ([spill_plan] if spill_plan is not None else [])
 
-        if not self._validate(t, all_plans) \
-                or not replay_reservations(self.store, all_plans):
-            # conflict: writes (or page moves / interleaved allocations)
-            # landed under the plan mid-dispatch — discard it and run the
-            # pass synchronously against live state, exactly as if the
-            # pass had fired at this boundary
-            self.plan_conflicts += 1
-            return self._plan_execute_finish(
-                t.summary, t.wear_pressure, t.spilling, t.spill_dst,
-                committed_async=True, plan_conflict=True)
+        # pages whose version/tier/slot changed since the snapshot — the
+        # incremental epoch diff, recorded by the store as the dispatch
+        # ran, replaces any per-plan array re-validation
+        dirty = self.store.end_dirty_epoch()
+        landed = commit_reservations(self.store, t.view, all_plans)
 
-        # clean commit: every reservation replayed onto the live
-        # allocators — execute the plans as bulk moves, in the same order
-        # the synchronous pass would have
         stats = MigrationStats()
-        for p in plans:
-            stats.merge(self.engine.execute_plan(p))
         spilled = 0
-        if spill_plan is not None:
-            spilled = self.engine.execute_plan(spill_plan).migrated
-        self.plan_commits += 1
+        committed = degraded = 0
+        for pl, ok in zip(all_plans, landed):
+            keep = ok.copy()
+            if len(pl):
+                if dirty:
+                    keep &= np.asarray(
+                        [int(p) not in dirty for p in pl.pages])
+                # release reservations held for pages that degrade (a
+                # page the replay had no capacity for holds nothing)
+                for i in np.nonzero(ok & ~keep)[0]:
+                    self.store.alloc[pl.dst_tier].free(
+                        int(pl.dst_slots[i]), 0)
+            committed += int(keep.sum())
+            degraded += len(pl) - int(keep.sum())
+            st = self.engine.execute_plan(subset_plan(pl, keep))
+            if pl is spill_plan:
+                spilled = st.migrated
+            else:
+                stats.merge(st)
+        self.pages_committed += committed
+        self.pages_degraded += degraded
         return self._finish_pass(decision, stats, spilled, t.summary,
-                                 t.wear_pressure, committed_async=True)
-
-    def _validate(self, t: _PlanTicket, plans) -> bool:
-        """Snapshot still current for every page the plan touches?  Uses
-        the optimistic-migration version counters as the dirty bits, plus
-        the page table itself (a page promoted/released mid-plan is as
-        stale as a dirtied one)."""
-        if not plans:
-            return True
-        pages = np.concatenate([p.pages for p in plans]) if plans else None
-        if pages is None or pages.size == 0:
-            return True
-        pages = pages.astype(np.int64)
-        if (self.store.version[pages] != t.view.version[pages]).any():
-            return False
-        if (self.store.tier[pages] != t.view.tier[pages]).any():
-            return False
-        if (self.store.slot[pages] != t.view.slot[pages]).any():
-            return False
-        return True
+                                 t.wear_pressure, committed_async=True,
+                                 pages_committed=committed,
+                                 pages_degraded=degraded)
 
     def flush(self) -> MemosReport | None:
         """Commit any in-flight plan (end of serving / shutdown)."""

@@ -65,11 +65,14 @@ from .tiers import NO_SLOT, TierStore, _pad_idx_np, _pad_pages, _pow2
 # Bump when engine semantics / data layout change; recorded in benchmark
 # result JSONs so trajectory comparisons across machines and revisions
 # aren't apples-to-oranges.
-ENGINE_VERSION = "4.0"  # 1.x: per-page reference loop; 2.x: batched bulk
+ENGINE_VERSION = "4.1"  # 1.x: per-page reference loop; 2.x: batched bulk
                         # mover + NVM wear accounting on the slow path;
                         # 3.x: N-tier plans (per-page src tier, device<->
                         # device moves); 4.x: replayable reservations
-                        # (async plan/commit) + pinned-host tier routing
+                        # (async plan/commit) + pinned-host tier routing;
+                        # 4.1: page-granular async commits (clean subset
+                        # executes, only dirtied pages degrade) + O(1)
+                        # allocator adoption on quiet tiers
 
 
 def bench_env() -> dict:
@@ -201,8 +204,9 @@ class MigrationPlan:
     ``colors``/``masks`` record the Algorithm-2 allocator call that
     reserved each slot (-1 = any color): a plan produced against a
     :class:`StoreView` snapshot has its reservations *simulated* on
-    cloned allocators, and ``replay_reservations`` re-issues exactly
-    these calls against the live store at commit time.  ``reads_by_tier``
+    cloned allocators, and ``commit_reservations`` lands them on the
+    live store at commit time (clone adoption when the allocator saw no
+    interleaved call, per-call slot-patching replay otherwise).  ``reads_by_tier``
     carries the staging read charge for optimistic plans (the unlocked
     copy stages every pending page, including ones later dropped for
     capacity, so the async commit charges the same reads the synchronous
@@ -343,17 +347,21 @@ class StoreView:
     plan worker runs ``plan_locked`` / ``plan_optimistic`` against it —
     they only touch ``tier``/``slot``/``alloc`` — so Algorithm-2 slot
     targeting simulates its reservations off-thread while the next
-    dispatch runs.  The commit validates the snapshot against the live
-    store (version counters + replayed reservations) before any data
-    moves."""
+    dispatch runs.  Creating the view also records each tier allocator's
+    generation counter and opens the store's dirty-page epoch: the commit
+    validates per page against the epoch's dirty set (O(dirtied pages))
+    and adopts any clone whose tier saw no interleaved allocator call
+    (O(1)) instead of replaying every reservation."""
 
     def __init__(self, store: TierStore):
         self.tier = store.tier.copy()
         self.slot = store.slot.copy()
         self.version = store.version.copy()
         self.alloc = [a.clone() for a in store.alloc]
+        self.alloc_gen = [a.gen for a in store.alloc]
         self.hierarchy = store.hierarchy
         self.n_tiers = store.n_tiers
+        store.begin_dirty_epoch()
 
 
 def _group_decision(store, decision: placement.PlacementDecision
@@ -399,31 +407,82 @@ def plan_decision(store, decision: placement.PlacementDecision,
     return plans
 
 
-def replay_reservations(store: TierStore,
-                        plans: Iterable[MigrationPlan]) -> bool:
-    """Re-issue a snapshot plan's recorded allocator calls on the live
-    store.  Returns True when every call lands on exactly the slot the
-    plan reserved (the live allocators are then in the same state the
-    synchronous pass would have left); on any divergence — an interleaved
-    allocation claimed a block the plan counted on — every replayed
-    reservation is rolled back and the caller degrades to the
-    synchronous path."""
-    done: list[tuple[int, int]] = []
-    for plan in plans:
-        assert plan.colors is not None and plan.masks is not None, \
-            "replay needs a plan with recorded allocator calls"
-        for i in range(len(plan)):
-            c, m = int(plan.colors[i]), int(plan.masks[i])
-            s = store.alloc[plan.dst_tier].alloc(
-                0, None if c < 0 else c, None if m < 0 else m)
-            if s != int(plan.dst_slots[i]):
-                if s is not None:
-                    store.alloc[plan.dst_tier].free(s, 0)
-                for dt, ds in reversed(done):
-                    store.alloc[dt].free(ds, 0)
-                return False
-            done.append((plan.dst_tier, s))
-    return True
+def _replay_calls(store: TierStore, plan: MigrationPlan) -> np.ndarray:
+    """Re-issue one plan's recorded allocator calls on the live store, in
+    order.  Interleaved allocator activity (tail-page provisioning,
+    promotion frees) means the live free lists no longer match the
+    snapshot clones, so a call may land on a *different* slot than the
+    plan simulated — that is not a conflict: the page itself is still
+    clean, and the slot actually obtained is exactly what a synchronous
+    pass planning at this boundary would have taken, so the plan is
+    patched to it in place.  Only a capacity failure (the tier is full
+    even after the any-color fallback, mirroring the planners) drops a
+    reservation.  Returns the bool landed-mask."""
+    assert plan.colors is not None and plan.masks is not None, \
+        "replay needs a plan with recorded allocator calls"
+    ok = np.zeros(len(plan), bool)
+    for i in range(len(plan)):
+        c, m = int(plan.colors[i]), int(plan.masks[i])
+        s = store.alloc[plan.dst_tier].alloc(
+            0, None if c < 0 else c, None if m < 0 else m)
+        if s is None and c >= 0:
+            s = store.alloc[plan.dst_tier].alloc(0, None)
+        if s is None:
+            continue
+        plan.dst_slots[i] = s
+        ok[i] = True
+    return ok
+
+
+def commit_reservations(store: TierStore, view: StoreView,
+                        plans: list[MigrationPlan]) -> list[np.ndarray]:
+    """Make the live allocators hold each plan's reservations; returns
+    one bool landed-mask per plan (False = no capacity left for that
+    page at commit time).
+
+    Fast path: a destination tier whose live generation counter still
+    equals the snapshot's saw *no* allocator call during the dispatch, so
+    the view's clone — which already holds every simulated reservation —
+    simply becomes the live allocator (O(1), no per-call replay, slots
+    land exactly as simulated).  Tiers with interleaved activity (e.g.
+    tier 0 tail-page provisioning) fall back to per-call replay, which
+    patches each reservation to the slot the live allocator actually
+    hands out."""
+    landed = [np.zeros(len(pl), bool) for pl in plans]
+    by_tier: dict[int, list[int]] = {}
+    for i, pl in enumerate(plans):
+        by_tier.setdefault(pl.dst_tier, []).append(i)
+    for t, idxs in by_tier.items():
+        if store.alloc[t].gen == view.alloc_gen[t]:
+            store.alloc[t] = view.alloc[t]
+            for i in idxs:
+                landed[i][:] = True
+        else:
+            for i in idxs:        # plan order == simulation order
+                landed[i] = _replay_calls(store, plans[i])
+    return landed
+
+
+def subset_plan(plan: MigrationPlan, keep: np.ndarray) -> MigrationPlan:
+    """The sub-plan of ``plan`` restricted to the kept pages (bool mask).
+    ``trivial`` and ``reads_by_tier`` carry over whole: trivial pages
+    were never moving, and the optimistic staging read charge covers
+    every *pending* page — the synchronous unlocked copy stages dirtied
+    pages too before discarding them."""
+    keep = np.asarray(keep, bool)
+    if keep.all():
+        return plan
+    return MigrationPlan(
+        dst_tier=plan.dst_tier,
+        pages=plan.pages[keep],
+        src_tiers=plan.src_tiers[keep],
+        src_slots=plan.src_slots[keep],
+        dst_slots=plan.dst_slots[keep],
+        trivial=plan.trivial,
+        colors=None if plan.colors is None else plan.colors[keep],
+        masks=None if plan.masks is None else plan.masks[keep],
+        reads_by_tier=plan.reads_by_tier,
+    )
 
 
 def execute_decision(engine, decision: placement.PlacementDecision,
@@ -552,6 +611,7 @@ class MigrationEngine:
                 self.store.alloc[old_tier].free(old_slot, 0)
                 self.store.tier[p] = dst_tier
                 self.store.slot[p] = new_slot
+                self.store._mark_dirty_one(p)
                 self.store.traffic[(old_tier, dst_tier)] += self.store.page_nbytes
                 st.migrated += 1
                 st.bytes_moved += self.store.page_nbytes

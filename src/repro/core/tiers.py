@@ -454,6 +454,13 @@ class TierStore:
         self.tier = np.full((cfg.n_pages,), cfg.hierarchy.deepest, np.int8)
         self.slot = np.full((cfg.n_pages,), NO_SLOT, np.int64)
         self.version = np.zeros((cfg.n_pages,), np.int64)
+        # incremental dirty set (async memos validation): while an epoch
+        # is open, every page whose version/tier/slot changes is recorded
+        # here, so a commit validates in O(dirtied pages) instead of
+        # re-reading the whole version array per planned page.  Tracking
+        # is off outside an epoch — synchronous-only runs pay one branch.
+        self._dirty_tracking = False
+        self._dirty_pages: set[int] = set()
         # per-tier allocator geometry derived from each tier's own slots
         # (the monitor geometry in cfg.n_banks/n_slabs stays global)
         self.alloc = [SubBuddyAllocator(SubBuddyConfig(
@@ -529,6 +536,42 @@ class TierStore:
         (device tiers and pinned-host tiers)."""
         return self.hierarchy[tier].is_device_addressable
 
+    # -- dirty-set epochs (async memos validation) -----------------------------
+    def begin_dirty_epoch(self) -> None:
+        """Start recording pages whose plan-invalidating state changes:
+        placement (tier/slot — allocate, release, moves) and external
+        content writes (``write_page`` / ``bump_version``).  Opened when
+        an async memos pass snapshots the store; the commit reads the set
+        back and only those pages can be stale — the O(dirtied)
+        replacement for replaying the whole version array.  Dispatch
+        access charges are excluded by design: they account in-place
+        appends that a commit-time migration re-reads anyway."""
+        self._dirty_pages.clear()
+        self._dirty_tracking = True
+
+    def end_dirty_epoch(self) -> set[int]:
+        """Stop recording and return the pages dirtied since
+        :meth:`begin_dirty_epoch`."""
+        self._dirty_tracking = False
+        dirty, self._dirty_pages = self._dirty_pages, set()
+        return dirty
+
+    def _mark_dirty(self, pages) -> None:
+        if self._dirty_tracking:
+            self._dirty_pages.update(int(p) for p in np.atleast_1d(pages))
+
+    def _mark_dirty_one(self, page: int) -> None:
+        if self._dirty_tracking:
+            self._dirty_pages.add(int(page))
+
+    def bump_version(self, page: int) -> None:
+        """Advance a page's version counter (the optimistic-migration
+        dirty bit) through the store, so an open dirty epoch sees it.
+        External writers (and conflict-injection test hooks) must use
+        this instead of poking ``store.version`` directly."""
+        self.version[page] += 1
+        self._mark_dirty_one(page)
+
     # -- page lifecycle -----------------------------------------------------
     @property
     def page_nbytes(self) -> int:
@@ -543,6 +586,7 @@ class TierStore:
             return False
         self.tier[page] = tier
         self.slot[page] = s
+        self._mark_dirty_one(page)
         return True
 
     def release(self, page: int) -> None:
@@ -550,6 +594,7 @@ class TierStore:
         if s != NO_SLOT:
             self.alloc[int(self.tier[page])].free(s, 0)
             self.slot[page] = NO_SLOT
+            self._mark_dirty_one(page)
 
     # -- data access ----------------------------------------------------------
     def write_page(self, page: int, value) -> None:
@@ -559,7 +604,7 @@ class TierStore:
             self.pools[t].write_one(s, value)
         else:
             self._host_write(t, s, np.asarray(value, np.float32))
-        self.version[page] += 1
+        self.bump_version(page)
         self.writes_to[t] += 1
 
     def read_page(self, page: int) -> np.ndarray:
@@ -665,7 +710,14 @@ class TierStore:
         step) bumps the per-page version counters (the dirty bit for
         optimistic migration) and the tier write counter; ``n_reads`` is the
         dispatch's total page-read count.  One vectorized add instead of a
-        per-request Python loop per token."""
+        per-request Python loop per token.
+
+        Deliberately does NOT mark the pages dirty for an open async-plan
+        epoch: these are the dispatch's own in-place appends — the page
+        never leaves its slot, and a commit-boundary migration reads the
+        bytes fresh (``execute_plan`` stages at execute time), so the
+        plan stays valid.  External writers go through ``write_page`` /
+        ``bump_version``, which do mark."""
         page_writes = np.asarray(page_writes, np.int64)
         self.version += page_writes
         self.writes_to[0] += int(page_writes.sum())
@@ -678,7 +730,9 @@ class TierStore:
         host) bump the version counters and each page's *current* tier's
         read/write counters — the pinned-serving dispatch touches both
         the tier-0 pool and the pinned deepest tier, so the charge can't
-        assume tier 0 like ``charge_fast_accesses``."""
+        assume tier 0 like ``charge_fast_accesses``.  Like that method,
+        it does not dirty an open async-plan epoch — in-place dispatch
+        appends never invalidate a pending plan."""
         page_writes = np.asarray(page_writes, np.int64)
         page_reads = np.asarray(page_reads, np.int64)
         self.version += page_writes
@@ -735,6 +789,7 @@ class TierStore:
             self.alloc[int(self.tier[p])].free(int(s), 0)
         self.tier[pages] = dst_tier
         self.slot[pages] = new_slots
+        self._mark_dirty(pages)
         for t in np.unique(src_tiers):
             k = int((src_tiers == t).sum())
             self.traffic[(int(t), dst_tier)] += self.page_nbytes * k
@@ -765,6 +820,7 @@ class TierStore:
         self.alloc[src_tier].free(old_slot, 0)
         self.tier[page] = dst_tier
         self.slot[page] = new_slot
+        self._mark_dirty_one(page)
         self.traffic[(src_tier, dst_tier)] += self.page_nbytes
         return True
 

@@ -110,18 +110,36 @@ class NvmWear:
             self._pending[ids] = 0
         return self.state
 
-    def adopt_scan_writes(self, new_wear, n_app_writes: int) -> None:
+    def adopt_scan_writes(self, new_wear, n_app_writes: int,
+                          leveling_writes: int = 0) -> None:
         """Adopt counters updated *inside* a fused device dispatch.
 
         The pinned-host serving path carries this tracker's ``wear``
         array through the decode ``lax.scan`` and scatter-adds each
         slow-tier KV append on device (zero-round-trip telemetry); at the
         dispatch boundary the engine hands the updated array back here
-        and credits the app-write total.  Host-side pending events are a
-        separate buffer and are unaffected."""
+        and credits the app-write total.  ``leveling_writes`` credits the
+        extra row rewrites spent by in-dispatch Start-Gap advances (two
+        per advance), which the dispatch also charged into the array.
+        Host-side pending events are a separate buffer and are
+        unaffected."""
         self.state = self.state._replace(wear=jnp.asarray(new_wear,
                                                           jnp.int32))
         self.writes_total += int(n_app_writes)
+        self.leveling_writes += int(leveling_writes)
+
+    def adopt_scan_remap(self, new_remap) -> None:
+        """Adopt the logical->physical remap as rotated by in-dispatch
+        Start-Gap advances: the fused dispatch swaps remap entries as it
+        swaps pool rows (the post-scan advance loop); the boundary hands
+        the final permutation back here so the host mirrors (and every
+        host-side read/write path) stay in sync."""
+        r = np.asarray(new_remap, np.int64)
+        self._remap = r
+        inv = np.empty_like(r)
+        inv[r] = np.arange(r.size, dtype=np.int64)
+        self._inv = inv
+        self.state = self.state._replace(remap=jnp.asarray(r, jnp.int32))
 
     # -- leveler hook -----------------------------------------------------------
     def swap_phys(self, a: int, b: int) -> None:

@@ -104,6 +104,14 @@ class PagedServingEngine:
         if pt is not None and store.pools[pt].quantized:
             pt = None     # int8 pools can't absorb token-granular appends
         self.pinned_tier = pt
+        # in-dispatch Start-Gap: the fused dual-pool scan advances the
+        # pinned tier's gap itself whenever this many pinned writes have
+        # accumulated (0 = no leveler / untracked tier -> compiled out)
+        lv = (store.leveler_by_tier.get(pt) if pt is not None else None)
+        self._gap_interval = (lv.interval if lv is not None
+                              and store.wear_by_tier.get(pt) is not None
+                              and store.pools[pt].data.shape[0] >= 2
+                              else 0)
         self.sysmon = sysmon_mod.init(
             self.kv.n_pages, n_banks=store.cfg.n_banks,
             n_slabs=store.cfg.n_slabs)
@@ -244,19 +252,25 @@ class PagedServingEngine:
 
     # -- dual-pool (pinned-host deepest tier) decode -----------------------------
     def _decode_core_pinned(self, params, tokens, positions, block_tables,
-                            pool_sel, lengths, fast_pool, pinned_pool):
+                            pool_sel, lengths, fast_pool, pinned_pool,
+                            remap):
         """One decode step with the KV split across the tier-0 pool and
         the pinned-host pool: pages are attended wherever they live
         (per-page select after a dual gather) and the new token's K/V
         lands in whichever pool holds the tail page — the slow-tier KV
         append joins the dispatch instead of forcing a promotion.
 
-        block_tables [B,P] hold each page's slot *in its own pool*
-        (pinned rows pre-translated through the wear remap); pool_sel
-        [B,P] is 1 for pinned pages.  Rows whose tail lives in the other
-        pool write through an out-of-range index dropped by the scatter
-        (``mode="drop"``), so a numeric slot collision between the two
-        pools can never clobber a real write."""
+        block_tables [B,P] hold each page's slot *in its own pool* —
+        tier-0 pool slot, or the pinned pool's **logical** slot, which is
+        translated through ``remap`` (the wear-leveling logical->physical
+        permutation, [n_pin] i32) here inside the dispatch: the fused
+        path carries the remap in its scan and rotates it as Start-Gap
+        advances swap rows mid-dispatch, so translation can't happen on
+        the host anymore.  pool_sel [B,P] is 1 for pinned pages.  Rows
+        whose tail lives in the other pool write through an out-of-range
+        index dropped by the scatter (``mode="drop"``), so a numeric slot
+        collision between the two pools can never clobber a real
+        write."""
         cfg = self.cfg
         page = self.scfg.page_size
         B = tokens.shape[0]
@@ -264,12 +278,17 @@ class PagedServingEngine:
         cos, sin = L.rope_angles(positions[:, None], cfg.head_dim,
                                  cfg.rope_theta)
         b_idx = jnp.arange(B)
+        n_fast = fast_pool.shape[0]
+        n_pin = pinned_pool.shape[0]
+        # pinned entries -> physical rows under the *current* remap (fast
+        # entries pass through; the clip keeps the dead gather in range)
+        block_tables = jnp.where(
+            pool_sel > 0,
+            remap[jnp.clip(block_tables, 0, n_pin - 1)], block_tables)
         tailcol = positions // page
         slot = block_tables[b_idx, tailcol]
         sel_tail = pool_sel[b_idx, tailcol] > 0
         off = positions % page
-        n_fast = fast_pool.shape[0]
-        n_pin = pinned_pool.shape[0]
         f_idx = jnp.where(sel_tail, n_fast, slot)   # OOB for pinned tails
         p_idx = jnp.where(sel_tail, slot, n_pin)    # OOB for fast tails
         sel_pages = (pool_sel > 0)[:, :, None, None, None]
@@ -311,11 +330,12 @@ class PagedServingEngine:
         return logits, counts_acc, fast_pool, pinned_pool
 
     def _decode_batch_pinned(self, params, tokens, positions, block_tables,
-                             pool_sel, lengths, fast_pool, pinned_pool):
+                             pool_sel, lengths, fast_pool, pinned_pool,
+                             remap):
         """Retained K=1 reference entry point for the dual-pool path."""
         return self._decode_core_pinned(params, tokens[:, 0], positions,
                                         block_tables, pool_sel, lengths,
-                                        fast_pool, pinned_pool)
+                                        fast_pool, pinned_pool, remap)
 
     def _fused_decode(self, params, tokens, positions, prompt_buf,
                       prompt_len, page_tables, block_tables, sm_state,
@@ -391,31 +411,62 @@ class PagedServingEngine:
 
     def _fused_decode_pinned(self, params, tokens, positions, prompt_buf,
                              prompt_len, page_tables, block_tables, pool_sel,
-                             sm_state, fast_pool, pinned_pool, wear, *,
-                             k_steps: int):
+                             sm_state, fast_pool, pinned_pool, wear, remap,
+                             gap, pending, *, k_steps: int,
+                             gap_interval: int):
         """The dual-pool fused dispatch: K inner steps with KV appends
-        landing in either pool and the pinned tier's **wear counters
-        riding the scan carry** — each inner step's slow-tier tail write
-        scatter-adds its physical row through the ``wear_update`` kernel,
-        so NVM telemetry stays zero-round-trip (the PR 2 follow-up);
-        SysMon, sampling, and the page-write counters are unchanged from
-        the single-pool path."""
+        landing in either pool and the pinned tier's wear counters riding
+        the scan carry — each inner step's slow-tier tail write
+        scatter-adds its physical row through the ``wear_update`` kernel.
+        Start-Gap leveling runs *inside the dispatch* but **after the
+        scan**: the scan accumulates the pinned write count, then a
+        single ``while_loop`` performs every advance the dispatch earned
+        — swap physical rows (gap, gap+1) of the pinned pool, swap the
+        two entries of the remap, charge both rows' wear — the same
+        adjacent-row-swap the host leveler performs.  Keeping the loop
+        out of the scan body keeps the hot inner step fully fused (an
+        in-step ``while_loop`` cost ~35% on CPU even when it never
+        fired), while leveling still never serializes the boundary with
+        un-jitted whole-pool row swaps; advance *totals* are unchanged
+        by the deferred cadence (each advance drains exactly one
+        interval), so gap/rotation/remap/pool state stays bit-identical
+        to per-token leveling — only the attribution of in-flight app
+        writes to pre- vs post-swap physical rows can differ within one
+        dispatch.  The boundary adopts (wear, remap, gap, pending,
+        #advances) back into the host trackers.  ``gap_interval`` 0
+        disables in-dispatch leveling (untracked or unleveled pinned
+        tiers); SysMon, sampling, and the page-write counters are
+        unchanged from the single-pool path."""
         cfg = self.cfg
         page = self.scfg.page_size
         B, P = block_tables.shape
         b_idx = jnp.arange(B)
         col = jnp.arange(P, dtype=jnp.int32)[None, :]
+        n_pin = pinned_pool.shape[0]
         vp = (params["embed"].shape[0] if cfg.tie_embeddings
               else params["lm_head"].shape[1])
         counts0 = (jnp.zeros((cfg.n_experts,), jnp.int32)
                    if cfg.is_moe else jnp.int32(0))
 
+        def advance_gap(state):
+            """One Start-Gap move, mirroring StartGapLeveler.advance."""
+            ppool, wear, remap, gap, pending, n_adv = state
+            nxt = gap + 1
+            pair = jnp.stack([gap, nxt])
+            ppool = ppool.at[pair].set(ppool[jnp.stack([nxt, gap])])
+            remap = jnp.where(remap == gap, nxt,
+                              jnp.where(remap == nxt, gap, remap))
+            # the swap physically rewrites both rows (leveling overhead)
+            wear = wear.at[gap].add(1).at[nxt].add(1)
+            gap = jnp.where(nxt >= n_pin - 1, 0, nxt)
+            return ppool, wear, remap, gap, pending - gap_interval, n_adv + 1
+
         def body(carry, _):
-            (tokens, positions, sm, fpool, ppool, wear, page_writes,
-             counts_acc, _) = carry
+            (tokens, positions, sm, fpool, ppool, wear, pin_w,
+             page_writes, counts_acc, _) = carry
             logits, counts, fpool, ppool = self._decode_core_pinned(
                 params, tokens, positions, block_tables, pool_sel,
-                positions + 1, fpool, ppool)
+                positions + 1, fpool, ppool, remap)
             sampled = jnp.argmax(logits[:, :cfg.vocab],
                                  axis=-1).astype(jnp.int32)
             nxt_pos = positions + 1
@@ -430,26 +481,38 @@ class PagedServingEngine:
             sm = sysmon_mod.record(sm, tails, is_write=True)
             page_writes = page_writes.at[tails].add(1)
             # pinned-tier wear: tails living in the pinned pool charge
-            # their physical row on device (amount 0 for fast tails)
+            # their physical row — under the carried remap — on device
+            # (amount 0 for fast tails)
             tail_slot = block_tables[b_idx, tailcol]
             tail_pin = pool_sel[b_idx, tailcol]
-            wear = wear_update(wear, tail_slot, amount=tail_pin)
+            tail_phys = remap[jnp.clip(tail_slot, 0, n_pin - 1)]
+            wear = wear_update(wear, tail_phys, amount=tail_pin)
+            pin_w = pin_w + tail_pin.sum()
             if cfg.is_moe:
                 counts_acc = counts_acc + counts
-            return (nxt_tok, nxt_pos, sm, fpool, ppool, wear, page_writes,
-                    counts_acc, logits), sampled
+            return (nxt_tok, nxt_pos, sm, fpool, ppool, wear, pin_w,
+                    page_writes, counts_acc, logits), sampled
 
         carry0 = (tokens, positions, sm_state, fast_pool, pinned_pool, wear,
-                  jnp.zeros((sm_state.n_pages,), jnp.int32), counts0,
-                  jnp.zeros((B, vp), jnp.float32))
-        (_, _, sm, fpool, ppool, wear, page_writes, counts, logits), \
-            sampled = jax.lax.scan(body, carry0, None, length=k_steps)
-        return sampled, logits, sm, fpool, ppool, wear, page_writes, counts
+                  jnp.int32(0), jnp.zeros((sm_state.n_pages,), jnp.int32),
+                  counts0, jnp.zeros((B, vp), jnp.float32))
+        (_, _, sm, fpool, ppool, wear, pin_w, page_writes, counts,
+         logits), sampled = \
+            jax.lax.scan(body, carry0, None, length=k_steps)
+        n_adv = jnp.int32(0)
+        if gap_interval:    # static: compiled out when leveling is off
+            pending = pending + pin_w
+            ppool, wear, remap, gap, pending, n_adv = jax.lax.while_loop(
+                lambda s: s[4] >= gap_interval, advance_gap,
+                (ppool, wear, remap, gap, pending, n_adv))
+        return (sampled, logits, sm, fpool, ppool, wear, remap, gap,
+                pending, n_adv, page_writes, counts)
 
     def _get_fused_pinned(self, k: int):
         fn = self._fused_pinned_fns.get(k)
         if fn is None:
-            fn = jax.jit(partial(self._fused_decode_pinned, k_steps=k),
+            fn = jax.jit(partial(self._fused_decode_pinned, k_steps=k,
+                                 gap_interval=self._gap_interval),
                          donate_argnums=(9, 10))   # fast_pool, pinned_pool
             self._fused_pinned_fns[k] = fn
         return fn
@@ -502,11 +565,13 @@ class PagedServingEngine:
                 # when the pinned tier is untracked
                 wtr = store.wear_by_tier.get(self.pinned_tier)
                 wear = zi(ppool.data.shape[0] if wtr is not None else 1)
+                remap = jnp.arange(ppool.data.shape[0], dtype=jnp.int32)
                 jax.block_until_ready(
                     self._get_fused_pinned(k)(
                         *args, zi(B, P), sm,
                         jnp.zeros_like(store.fast_pool),
-                        jnp.zeros_like(ppool.data), wear)[0])
+                        jnp.zeros_like(ppool.data), wear, remap,
+                        jnp.int32(0), jnp.int32(0))[0])
 
     # -- main loop (dispatch-boundary slow path) -----------------------------------
     def step(self) -> dict:
@@ -622,12 +687,15 @@ class PagedServingEngine:
         elif self.scfg.reference:
             # -- K=1 reference path over the dual pools (parity oracle) ----
             ppool = store.pools[pt]
+            n_pin = ppool.data.shape[0]
+            remap_arr = (wear_tr.state.remap if wear_tr is not None
+                         else jnp.arange(n_pin, dtype=jnp.int32))
             logits, ecounts, store.fast_pool, ppool.data = \
                 self._decode_pinned_fn(
                     self.params, jnp.asarray(tokens[:, None]),
                     jnp.asarray(positions), jnp.asarray(block_tables),
                     jnp.asarray(pool_sel), jnp.asarray(positions + 1),
-                    store.fast_pool, ppool.data)
+                    store.fast_pool, ppool.data, remap_arr)
             sampled = np.asarray(
                 jnp.argmax(logits[:, :self.cfg.vocab], axis=-1),
                 np.int32)[None, :]
@@ -641,12 +709,16 @@ class PagedServingEngine:
             page_writes = np.zeros(store.cfg.n_pages, np.int64)
             np.add.at(page_writes, tails, 1)
             # host-side wear charge for pinned tail writes (the fused path
-            # folds this into the scan; totals are bit-identical)
+            # folds this into the scan; totals are bit-identical).  The
+            # block tables carry *logical* pinned slots now, so translate
+            # through the remap before charging the physical rows — this
+            # also drives the host leveler, whose advances the next
+            # dispatch picks up through ``wear_tr.state.remap``.
             tcol = positions // page
             tslot = block_tables[np.arange(B), tcol]
             tpin = pool_sel[np.arange(B), tcol] > 0
             if wear_tr is not None and tpin.any():
-                store._account_host_writes(pt, tslot[tpin])
+                store._account_host_writes(pt, wear_tr.phys(tslot[tpin]))
             self.last_logits = logits
         elif pt is None:
             # -- fused K-step dispatch -------------------------------------
@@ -667,25 +739,43 @@ class PagedServingEngine:
             # -- fused K-step dual-pool dispatch: slow-tier KV appends and
             # the wear_update scatter-add ride the same scan --------------
             ppool = store.pools[pt]
+            n_pin_rows = ppool.data.shape[0]
             prompt_buf = np.zeros((B, P * page), np.int32)
             for i, r in enumerate(active):
                 prompt_buf[i, :len(r.prompt)] = r.prompt
             wear_arr = (wear_tr.state.wear if wear_tr is not None
                         else jnp.zeros((1,), jnp.int32))
+            remap_arr = (wear_tr.state.remap if wear_tr is not None
+                         else jnp.arange(n_pin_rows, dtype=jnp.int32))
+            lv = store.leveler_by_tier.get(pt) if self._gap_interval else None
+            gap0 = jnp.int32(lv.stats.gap if lv is not None else 0)
+            pending0 = jnp.int32(lv._pending if lv is not None else 0)
             fn = self._get_fused_pinned(k)
             (sampled_d, logits, self.sysmon, store.fast_pool, ppool.data,
-             wear_out, page_writes_d, ecounts) = fn(
+             wear_out, remap_out, gap_out, pending_out, n_adv_out,
+             page_writes_d, ecounts) = fn(
                 self.params, jnp.asarray(tokens), jnp.asarray(positions),
                 jnp.asarray(prompt_buf), jnp.asarray(prompt_lens),
                 jnp.asarray(page_tables), jnp.asarray(block_tables),
                 jnp.asarray(pool_sel), self.sysmon, store.fast_pool,
-                ppool.data, wear_arr)
+                ppool.data, wear_arr, remap_arr, gap0, pending0)
             sampled = np.asarray(sampled_d)
             page_writes = np.asarray(page_writes_d)
             if wear_tr is not None:
-                n_pin = int(page_writes[store.tier == pt].sum())
-                wear_tr.adopt_scan_writes(wear_out, n_pin)
-                store.note_leveling_writes(pt, n_pin)
+                n_pin_w = int(page_writes[store.tier == pt].sum())
+                n_adv = int(n_adv_out)
+                # adopt the dispatch's wear counters (app writes + the two
+                # row rewrites each in-dispatch gap advance charged), its
+                # rotated
+                # remap, and the leveler's (gap, pending) bookkeeping —
+                # the boundary replays counter arithmetic only, never pool
+                # row swaps
+                wear_tr.adopt_scan_writes(wear_out, n_pin_w,
+                                          leveling_writes=2 * n_adv)
+                if n_adv:
+                    wear_tr.adopt_scan_remap(remap_out)
+                if lv is not None:
+                    lv.adopt_scan_advances(n_adv, int(pending_out))
             self.last_logits = logits
 
         if self.expert_counts is not None:
@@ -741,6 +831,8 @@ class PagedServingEngine:
                     "wear_pressure": report.wear_pressure,
                     "committed_async": report.committed_async,
                     "plan_conflict": report.plan_conflict,
+                    "pages_committed": report.pages_committed,
+                    "pages_degraded": report.pages_degraded,
                 }
                 if report.nvm is not None:
                     stats["nvm"] = {

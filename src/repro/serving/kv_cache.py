@@ -146,14 +146,15 @@ class PagedKVCache:
         """(page_tables, block_tables, pool_sel) for the dual-pool fused
         dispatch: every page must be *servable* (tier 0 or the pinned
         deepest tier).  ``block_tables`` holds the slot in the page's own
-        pool — tier-0 pool slot, or the pinned pool's **physical** row
-        (wear-leveling remap applied here, on the host, so the jitted
-        scan addresses stable rows); ``pool_sel`` is 1 where the page is
-        pinned-resident."""
+        pool — tier-0 pool slot, or the pinned pool's **logical** slot:
+        the dispatch translates pinned slots through the wear-leveling
+        remap it carries in its scan, so in-dispatch Start-Gap advances
+        keep addressing the right rows mid-scan (host pre-translation
+        would go stale after the first in-scan swap); ``pool_sel`` is 1
+        where the page is pinned-resident."""
         pt = self.pinned_tier
         assert pt is not None, "fill_tables_mixed needs a pinned deepest tier"
         store = self.store
-        wear = store.wear_by_tier.get(pt)
         B = len(pages_rows)
         page_tables = np.zeros((B, n_cols), np.int32)
         block_tables = np.zeros((B, n_cols), np.int32)
@@ -163,12 +164,8 @@ class PagedKVCache:
             assert self.servable_mask(pg).all(), \
                 f"non-servable pages in {pg.tolist()}"
             sel = (store.tier[pg] == pt).astype(np.int32)
-            slots = store.slot[pg].copy()
-            pin = np.nonzero(sel)[0]
-            if pin.size and wear is not None:
-                slots[pin] = wear.phys(slots[pin])
             page_tables[i, :len(pg)] = pg
-            block_tables[i, :len(pg)] = slots.astype(np.int32)
+            block_tables[i, :len(pg)] = store.slot[pg].astype(np.int32)
             pool_sel[i, :len(pg)] = sel
         return page_tables, block_tables, pool_sel
 
@@ -201,7 +198,7 @@ class PagedKVCache:
             page[:, :, offset] = np.asarray(layer_kv, np.float32)
             self.store._host_write(t, slot, page)
         self.store.writes_to[t] += 1
-        self.store.version[pid] += 1
+        self.store.bump_version(pid)
 
     def layer_pools(self, layer: int) -> tuple[jnp.ndarray, jnp.ndarray]:
         """(k_pool, v_pool) views [n_fast_slots, page, Hkv, Dh] for the
