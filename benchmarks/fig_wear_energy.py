@@ -86,10 +86,13 @@ def run_mode(args, memos_on: bool) -> dict:
         "hot_pages_on_fast": int((store.tier[hot] == FAST).sum()),
     }
     if mgr is not None and mgr.reports:
-        nvm = [r.nvm.to_dict() for r in mgr.reports if r.nvm is not None]
+        from repro.core.memos import aggregate_reports
+        nvm = [r.to_dict()["nvm"] for r in mgr.reports if r.nvm is not None]
+        agg = aggregate_reports(mgr.reports)
         out["passes"] = nvm
         out["wear_pressure_passes"] = sum(r.wear_pressure for r in mgr.reports)
-        last = nvm[-1]
+        out["migrated"] = agg["migrated"]
+        last = agg.get("nvm_last") or nvm[-1]
         out["lifetime_years_actual"] = last["lifetime_years_actual"]
         out["lifetime_years_ideal"] = last["lifetime_years_ideal"]
         out["dynamic_power_mw_last_pass"] = last["dynamic_power_mw"]

@@ -64,6 +64,7 @@ def serve_round(engine, cfg, args, rng):
 
 
 def measure(name: str, cfg, params, args) -> dict:
+    from repro.core.memos import aggregate_reports
     from repro.serving import PagedServingEngine, ServeConfig
 
     hier = build_hierarchy(name, args)
@@ -72,7 +73,7 @@ def measure(name: str, cfg, params, args) -> dict:
         hierarchy=hier, memos_interval=args.memos_interval,
         max_pages_per_seq=args.max_pages, decode_block=args.decode_block))
     best, occ_hist = float("inf"), []
-    migrated = passes = 0
+    agg = aggregate_reports([])
     for rep in range(args.repeats + 1):       # rep 0 warms compile caches
         rng = np.random.RandomState(0)
         n_rep0 = len(engine.memos.reports)
@@ -82,9 +83,7 @@ def measure(name: str, cfg, params, args) -> dict:
             occ_hist = [h for h in hist if "fast_used" in h]
             # counters for the timed round only (the engine persists
             # across rounds, so totals would mix in warmup migrations)
-            round_reports = engine.memos.reports[n_rep0:]
-            passes = len(round_reports)
-            migrated = sum(r.migrations.migrated for r in round_reports)
+            agg = aggregate_reports(engine.memos.reports[n_rep0:])
     store = engine.kv.store
     toks = args.requests * args.max_new
     occupancy = {}
@@ -97,21 +96,18 @@ def measure(name: str, cfg, params, args) -> dict:
             "peak_used": int(np.max(series)) if series else 0,
         }
     traffic = {f"{s}->{d}": v for (s, d), v in store.traffic.items() if v}
-    nvm_last = None
-    if engine.memos.reports and engine.memos.reports[-1].nvm is not None:
-        nvm_last = engine.memos.reports[-1].nvm.to_dict()
     row = {
         "hierarchy": hier.describe(),
         "n_tiers": hier.n_tiers,
         "tokens_out": toks,
         "seconds": best,
         "tokens_per_s": toks / best,
-        "memos_passes": passes,
-        "migrated": migrated,
+        "memos_passes": agg["passes"],
+        "migrated": agg["migrated"],
         "occupancy": occupancy,
         "traffic_bytes": traffic,
         "tier_energy_mj": tier_energy_mj(store),
-        "nvm_last_pass": nvm_last,
+        "nvm_last_pass": agg.get("nvm_last"),
     }
     print(f"  {name:6s}: {best * 1e3:8.1f} ms  {row['tokens_per_s']:9.1f} "
           f"tok/s  migrated {row['migrated']:4d}  "

@@ -139,19 +139,33 @@ def serving_sweep_rows(r: dict) -> list[str]:
         k = int(base[1:]) if base.startswith("k") and base[1:].isdigit() else 0
         return (p != "reference", k, p.count("+"), p)
 
+    def lat(row, key):
+        v = row.get("latency", {}).get(key)
+        return f"{v:.2f}" if v is not None else "—"
+
     sweep = r.get("sweep", {})
     paths = sorted({k.rsplit("_", 1)[0] for k in sweep}, key=path_key)
     base = sweep.get("reference_memos", {}).get("tokens_per_s")
     lines = ["| path | tok/s (memos on) | tok/s (memos off) | "
-             "vs reference (memos on) |", "|---|---|---|---|"]
+             "vs reference (memos on) | tok p50/p99 ms | overlap eff | "
+             "committed/degraded |", "|---|---|---|---|---|---|---|"]
     for p in paths:
-        on = sweep.get(f"{p}_memos", {}).get("tokens_per_s")
+        row_on = sweep.get(f"{p}_memos", {})
+        on = row_on.get("tokens_per_s")
         off = sweep.get(f"{p}_nomemos", {}).get("tokens_per_s")
         rel = f"{on / base:.2f}x" if on and base else "—"
         on_s = f"{on:.1f}" if on else "—"
         off_s = f"{off:.1f}" if off else "—"
-        lines.append(f"| {p} | {on_s} | {off_s} | {rel} |"
-                     if on or off else f"| {p} | — | — | — |")
+        lat_s = (f"{lat(row_on, 'token_p50_ms')}/"
+                 f"{lat(row_on, 'token_p99_ms')}"
+                 if row_on.get("latency") else "—")
+        eff = row_on.get("overlap_efficiency")
+        eff_s = f"{eff:.2f}" if eff is not None else "—"
+        pages_s = (f"{row_on['pages_committed']}/{row_on['pages_degraded']}"
+                   if "pages_committed" in row_on else "—")
+        lines.append(f"| {p} | {on_s} | {off_s} | {rel} | {lat_s} | "
+                     f"{eff_s} | {pages_s} |" if on or off
+                     else f"| {p} | — | — | — | — | — | — |")
     kmax = r.get("k_max")
     deltas = [("overlap vs sync", r.get("speedup_overlap_vs_sync")),
               ("pinned vs sync", r.get("speedup_pinned_vs_sync")),
@@ -168,8 +182,25 @@ def serving_sweep_rows(r: dict) -> list[str]:
         if pages:
             lines.append("Page-granular commits: " + ", ".join(
                 f"{p}: {row.get('pages_committed', 0)} committed / "
-                f"{row.get('pages_degraded', 0)} degraded"
+                f"{row.get('pages_degraded', 0)} degraded / "
+                f"{row.get('pages_dropped', 0)} dropped (freed mid-plan)"
                 for p, row in pages))
+        lat_deltas = []
+        sync_row = sweep.get(f"k{kmax}_memos", {})
+        for p in (f"k{kmax}+overlap", f"k{kmax}+overlap+pinned"):
+            row = sweep.get(f"{p}_memos", {})
+            a = row.get("latency", {}).get("token_p99_ms")
+            b = sync_row.get("latency", {}).get("token_p99_ms")
+            if a and b:
+                lat_deltas.append(f"{p}: {a:.2f} ms vs sync {b:.2f} ms "
+                                  f"({a / b:.2f}x)")
+        if lat_deltas:
+            lines.append("Token p99 latency: " + ", ".join(lat_deltas))
+    ratio = r.get("tracing_overhead_ratio")
+    if ratio is not None:
+        lines.append("")
+        lines.append(f"Tracing overhead: tokens/s with tracing enabled = "
+                     f"{ratio:.3f}x disabled")
     return lines
 
 

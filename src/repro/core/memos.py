@@ -59,17 +59,20 @@ snapshot -> plan -> commit pipeline:
 """
 from __future__ import annotations
 
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro import obs
 
 from . import sysmon as sysmon_mod
 from .migration import (MigrationStats, StoreView, commit_reservations,
                         make_engine, plan_decision, plan_optimistic,
                         subset_plan)
 from .placement import BandwidthBalancer, plan
-from .tiers import TierStore
+from .tiers import NO_SLOT, TierStore
 
 
 @dataclass
@@ -109,6 +112,128 @@ class MemosReport:
     plan_conflict: bool = False    # some planned pages were stale (degraded)
     pages_committed: int = 0      # planned pages committed by this pass
     pages_degraded: int = 0       # planned pages left for the next pass
+    pages_dropped: int = 0        # planned pages freed mid-plan (not conflicts)
+    plan_ms: float = 0.0          # wall time of the (worker-thread) plan phase
+    # fraction of the plan phase hidden under the overlapped dispatch
+    # (1.0 = fully hidden, 0.0 = the commit waited for the whole plan);
+    # None for synchronous passes
+    overlap_efficiency: float | None = None
+
+    def to_dict(self) -> dict:
+        """JSON-ready nested dict: MigrationStats and every per-tier
+        NvmReport flatten through their own ``to_dict``; round-trips
+        losslessly through :meth:`from_dict` (the serialization contract
+        report.py and the benchmark scripts consume instead of plucking
+        fields ad hoc)."""
+        return {
+            "step": self.step,
+            "migrations": self.migrations.to_dict(),
+            "n_marked": self.n_marked,
+            "fast_pages": self.fast_pages,
+            "slow_pages": self.slow_pages,
+            "bank_imbalance": self.bank_imbalance,
+            "spilled": self.spilled,
+            "tier_pages": list(self.tier_pages),
+            "nvm": self.nvm.to_dict() if self.nvm is not None else None,
+            "nvm_by_tier": {str(t): r.to_dict()
+                            for t, r in self.nvm_by_tier.items()},
+            "wear_pressure": self.wear_pressure,
+            "committed_async": self.committed_async,
+            "plan_conflict": self.plan_conflict,
+            "pages_committed": self.pages_committed,
+            "pages_degraded": self.pages_degraded,
+            "pages_dropped": self.pages_dropped,
+            "plan_ms": self.plan_ms,
+            "overlap_efficiency": self.overlap_efficiency,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MemosReport":
+        from repro.nvm.energy import NvmReport
+        nvm_by_tier = {int(t): NvmReport(**r)
+                       for t, r in (d.get("nvm_by_tier") or {}).items()}
+        nvm = NvmReport(**d["nvm"]) if d.get("nvm") is not None else None
+        # the deepest tier's report aliases the by-tier entry, as built
+        if nvm is not None:
+            for t, r in nvm_by_tier.items():
+                if r == nvm:
+                    nvm = r
+                    break
+        return cls(
+            step=d["step"],
+            migrations=MigrationStats.from_dict(d["migrations"]),
+            n_marked=d["n_marked"], fast_pages=d["fast_pages"],
+            slow_pages=d["slow_pages"],
+            bank_imbalance=d["bank_imbalance"], spilled=d["spilled"],
+            tier_pages=list(d["tier_pages"]), nvm=nvm,
+            nvm_by_tier=nvm_by_tier, wear_pressure=d["wear_pressure"],
+            committed_async=d["committed_async"],
+            plan_conflict=d["plan_conflict"],
+            pages_committed=d["pages_committed"],
+            pages_degraded=d["pages_degraded"],
+            pages_dropped=d.get("pages_dropped", 0),
+            plan_ms=d.get("plan_ms", 0.0),
+            overlap_efficiency=d.get("overlap_efficiency"),
+        )
+
+    def flat_metrics(self) -> dict:
+        """Flattened scalar leaves — the shape the metrics registry and
+        ``report.py`` consume (`tier{i}_pages` per tier, migration stats
+        inlined, per-wear-tier energy under ``nvm.t{t}.``)."""
+        m = self.migrations
+        out = {
+            "step": self.step, "migrated": m.migrated,
+            "to_fast": m.to_fast, "to_slow": m.to_slow,
+            "bytes_moved": m.bytes_moved,
+            "dirty_discards": m.dirty_discards, "retries": m.retries,
+            "n_marked": self.n_marked, "spilled": self.spilled,
+            "bank_imbalance": self.bank_imbalance,
+            "wear_pressure": int(self.wear_pressure),
+            "committed_async": int(self.committed_async),
+            "plan_conflict": int(self.plan_conflict),
+            "pages_committed": self.pages_committed,
+            "pages_degraded": self.pages_degraded,
+            "pages_dropped": self.pages_dropped,
+            "plan_ms": self.plan_ms,
+        }
+        if self.overlap_efficiency is not None:
+            out["overlap_efficiency"] = self.overlap_efficiency
+        for t, n in enumerate(self.tier_pages):
+            out[f"tier{t}_pages"] = n
+        for t, r in self.nvm_by_tier.items():
+            d = r.to_dict()
+            for k in ("slow_writes", "wear_max", "read_energy_mj",
+                      "write_energy_mj", "dynamic_power_mw",
+                      "lifetime_years_actual"):
+                out[f"nvm.t{t}.{k}"] = d[k]
+        return out
+
+
+def aggregate_reports(reports: list["MemosReport"]) -> dict:
+    """Sum the countable leaves of a report list (migrated, spilled,
+    pages committed/degraded, bytes moved) and carry the last pass's
+    state leaves — the shared aggregation benchmarks use instead of
+    plucking ``r.migrations.<field>`` by hand."""
+    agg = {"passes": len(reports), "migrated": 0, "to_fast": 0,
+           "to_slow": 0, "bytes_moved": 0, "spilled": 0,
+           "pages_committed": 0, "pages_degraded": 0, "pages_dropped": 0}
+    effs = []
+    for r in reports:
+        f = r.flat_metrics()
+        for k in ("migrated", "to_fast", "to_slow", "bytes_moved",
+                  "spilled", "pages_committed", "pages_degraded",
+                  "pages_dropped"):
+            agg[k] += f[k]
+        if r.overlap_efficiency is not None:
+            effs.append(r.overlap_efficiency)
+    if effs:
+        agg["overlap_efficiency_mean"] = float(np.mean(effs))
+    if reports:
+        last = reports[-1]
+        agg["tier_pages"] = list(last.tier_pages)
+        agg["nvm_last"] = (last.to_dict()["nvm"]
+                           if last.nvm is not None else None)
+    return agg
 
 
 @dataclass
@@ -122,6 +247,11 @@ class _PlanTicket:
     spilling: bool
     spill_dst: int
     future: Future | None = None
+    # worker-thread plan phase wall-clock bounds (monotonic ns), recorded
+    # unconditionally so the overlap-efficiency metric works without
+    # tracing enabled
+    plan_t0_ns: int = 0
+    plan_t1_ns: int = 0
 
 
 class MemosManager:
@@ -154,6 +284,12 @@ class MemosManager:
         # double-counted as a whole-pass commit and a whole-pass conflict
         self.pages_committed = 0      # planned pages committed async
         self.pages_degraded = 0       # planned pages dirtied mid-plan
+        self.pages_dropped = 0        # planned pages freed mid-plan
+        # overlap-efficiency accounting: how much of the worker-thread
+        # plan time was hidden under the dispatch that ran between
+        # snapshot and commit (the number the async pipeline is buying)
+        self.plan_ns_total = 0
+        self.plan_hidden_ns_total = 0
         # test hook: called with (manager, decision, plans) between the
         # worker join and validation — simulates writes landing mid-plan
         self._mid_plan_hook = None
@@ -163,6 +299,14 @@ class MemosManager:
         """Deepest wear-tracked tier's meter (two-tier compat alias)."""
         wt = self.store.hierarchy.wear_tiers()
         return self.meters[wt[-1]] if wt else None
+
+    @property
+    def overlap_efficiency(self) -> float | None:
+        """Lifetime fraction of async plan time hidden under overlapped
+        dispatches (None before any async pass commits)."""
+        if not self.plan_ns_total:
+            return None
+        return self.plan_hidden_ns_total / self.plan_ns_total
 
     def maybe_step(self, sm_state: sysmon_mod.SysmonState,
                    fast_bw_util: float = 0.0, steps: int = 1,
@@ -207,12 +351,13 @@ class MemosManager:
 
     def run_pass(self, sm_state: sysmon_mod.SysmonState,
                  fast_bw_util: float = 0.0):
-        # 1-2) close the pass; classification + prediction happen on device
-        sm_state, summary = sysmon_mod.end_pass(sm_state)
-        wear_pressure = self._wear_pressure()
-        spilling = self.balancer.update(fast_bw_util)
-        report = self._plan_execute_finish(summary, wear_pressure, spilling,
-                                           self._spill_dst())
+        with obs.span("memos.pass_sync", step=self.step_count):
+            # 1-2) close the pass; classification + prediction on device
+            sm_state, summary = sysmon_mod.end_pass(sm_state)
+            wear_pressure = self._wear_pressure()
+            spilling = self.balancer.update(fast_bw_util)
+            report = self._plan_execute_finish(summary, wear_pressure,
+                                               spilling, self._spill_dst())
         return sm_state, report
 
     def _wear_pressure(self) -> bool:
@@ -270,7 +415,10 @@ class MemosManager:
                      summary, wear_pressure: bool, *,
                      committed_async: bool = False,
                      pages_committed: int = 0,
-                     pages_degraded: int = 0) -> MemosReport:
+                     pages_degraded: int = 0,
+                     pages_dropped: int = 0,
+                     plan_ms: float = 0.0,
+                     overlap_efficiency: float | None = None) -> MemosReport:
         """Close the pass: adaptive interval, telemetry windows, report."""
         # adaptive interval (Sec. 7.4): grow when the plan barely changes
         tgt = np.asarray(decision.target_tier)
@@ -317,9 +465,57 @@ class MemosManager:
             plan_conflict=pages_degraded > 0,
             pages_committed=pages_committed,
             pages_degraded=pages_degraded,
+            pages_dropped=pages_dropped,
+            plan_ms=plan_ms,
+            overlap_efficiency=overlap_efficiency,
         )
         self.reports.append(report)
+        self._publish_metrics(report, summary)
         return report
+
+    def _publish_metrics(self, report: MemosReport, summary) -> None:
+        """Publish this pass into the process metrics registry (looked up
+        by name each pass so registry resets between sweep configs take
+        effect)."""
+        reg = obs.get_registry()
+        reg.counter("memos.passes", "memos passes completed").inc()
+        reg.counter("memos.pages_migrated",
+                    "pages moved across tiers").inc(report.migrations.migrated)
+        reg.counter("memos.migration_bytes",
+                    "bytes moved across tiers").inc(
+                        report.migrations.bytes_moved)
+        reg.counter("memos.pages_committed",
+                    "async-plan pages committed").inc(report.pages_committed)
+        reg.counter("memos.pages_degraded",
+                    "async-plan pages degraded to next pass").inc(
+                        report.pages_degraded)
+        reg.counter("memos.pages_dropped",
+                    "async-plan pages voided by mid-plan frees").inc(
+                        report.pages_dropped)
+        reg.counter("memos.spilled", "bandwidth-balancer spills").inc(
+            report.spilled)
+        if report.plan_ms > 0:
+            reg.histogram("memos.plan_latency_s",
+                          "worker-thread plan phase wall time").observe(
+                              report.plan_ms / 1e3)
+        if report.overlap_efficiency is not None:
+            reg.histogram(
+                "memos.overlap_efficiency",
+                "fraction of plan time hidden under dispatch").observe(
+                    report.overlap_efficiency)
+        reg.gauge("memos.interval", "current adaptive pass interval").set(
+            self.interval)
+        reg.gauge("memos.bank_imbalance",
+                  "stddev of per-bank access frequency").set(
+                      report.bank_imbalance)
+        # SysMon classification mix for the pass
+        for k, v in sysmon_mod.summary_metrics(summary).items():
+            reg.gauge(f"sysmon.{k}").set(v)
+        # per-tier occupancy + per-(src,dst) traffic
+        self.store.publish_metrics(reg)
+        # per-wear-tier energy / wear / lifetime
+        for t, nvm in report.nvm_by_tier.items():
+            nvm.publish(reg, prefix=f"nvm.t{t}.")
 
     # =========================================================================
     # asynchronous pipeline: snapshot -> plan (worker) -> commit
@@ -332,23 +528,24 @@ class MemosManager:
         the worker thread.  Returns the reset SysMon state immediately so
         the next dispatch launches while the worker plans."""
         assert self._ticket is None, "previous plan not committed"
-        sm_state, summary = sysmon_mod.end_pass(sm_state)
-        # numpy-ify the summary once (device sync) so the worker is
-        # jax-free — classification itself already ran on device
-        summary_np = type(summary)(*[np.asarray(f) for f in summary])
-        ticket = _PlanTicket(
-            step=self.step_count,
-            summary=summary_np,
-            view=StoreView(self.store),
-            wear_pressure=self._wear_pressure(),
-            spilling=self.balancer.update(fast_bw_util),
-            spill_dst=self._spill_dst(),
-        )
-        if self._executor is None:
-            self._executor = ThreadPoolExecutor(
-                max_workers=1, thread_name_prefix="memos-plan")
-        ticket.future = self._executor.submit(self._plan_job, ticket)
-        self._ticket = ticket
+        with obs.span("memos.snapshot", step=self.step_count):
+            sm_state, summary = sysmon_mod.end_pass(sm_state)
+            # numpy-ify the summary once (device sync) so the worker is
+            # jax-free — classification itself already ran on device
+            summary_np = type(summary)(*[np.asarray(f) for f in summary])
+            ticket = _PlanTicket(
+                step=self.step_count,
+                summary=summary_np,
+                view=StoreView(self.store),
+                wear_pressure=self._wear_pressure(),
+                spilling=self.balancer.update(fast_bw_util),
+                spill_dst=self._spill_dst(),
+            )
+            if self._executor is None:
+                self._executor = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="memos-plan")
+            ticket.future = self._executor.submit(self._plan_job, ticket)
+            self._ticket = ticket
         return sm_state
 
     def _plan_job(self, t: _PlanTicket):
@@ -356,30 +553,38 @@ class MemosManager:
         Algorithm-2 slot targeting, all against the immutable snapshot
         (reservations simulated on the cloned allocators).  Pure numpy —
         no jax, no live-store access."""
-        penalty = self.cfg.wear_penalty if t.wear_pressure else 0.0
-        decision = plan(t.summary, t.view.tier.copy(),
-                        max_migrations=self.cfg.max_migrations,
-                        wear_penalty=penalty,
-                        hierarchy=self.store.hierarchy)
-        bank_freq = np.asarray(t.summary.bank_freq)
-        slab_freq = np.asarray(t.summary.slab_freq)
-        reuse = np.asarray(t.summary.reuse_class)
-        plans = plan_decision(t.view, decision, bank_freq, slab_freq, reuse)
-        spill_plan = None
-        if t.spilling:
-            cands = self.balancer.spill_candidates(
-                np.asarray(t.summary.wd_code), np.asarray(t.summary.hotness),
-                t.view.tier, n=self.cfg.max_migrations or 64,
-                exclude_wd=t.wear_pressure)
-            # candidates come from the snapshot's tier table, so exclude
-            # pages this pass already plans to move — the synchronous path
-            # picks candidates *after* migrating, so a just-demoted page
-            # can never be spilled twice
-            planned = {int(p) for pl in plans for p in pl.pages}
-            cands = np.asarray([p for p in cands if int(p) not in planned],
-                               np.int64)
-            spill_plan = plan_optimistic(t.view, cands, t.spill_dst,
-                                         bank_freq, slab_freq, reuse)
+        # plan-phase wall clock is recorded unconditionally (two
+        # monotonic_ns calls) — the overlap-efficiency metric must work
+        # with tracing off
+        t.plan_t0_ns = time.monotonic_ns()
+        with obs.span("memos.plan", step=t.step):
+            penalty = self.cfg.wear_penalty if t.wear_pressure else 0.0
+            decision = plan(t.summary, t.view.tier.copy(),
+                            max_migrations=self.cfg.max_migrations,
+                            wear_penalty=penalty,
+                            hierarchy=self.store.hierarchy)
+            bank_freq = np.asarray(t.summary.bank_freq)
+            slab_freq = np.asarray(t.summary.slab_freq)
+            reuse = np.asarray(t.summary.reuse_class)
+            plans = plan_decision(t.view, decision, bank_freq, slab_freq,
+                                  reuse)
+            spill_plan = None
+            if t.spilling:
+                cands = self.balancer.spill_candidates(
+                    np.asarray(t.summary.wd_code),
+                    np.asarray(t.summary.hotness),
+                    t.view.tier, n=self.cfg.max_migrations or 64,
+                    exclude_wd=t.wear_pressure)
+                # candidates come from the snapshot's tier table, so exclude
+                # pages this pass already plans to move — the synchronous path
+                # picks candidates *after* migrating, so a just-demoted page
+                # can never be spilled twice
+                planned = {int(p) for pl in plans for p in pl.pages}
+                cands = np.asarray(
+                    [p for p in cands if int(p) not in planned], np.int64)
+                spill_plan = plan_optimistic(t.view, cands, t.spill_dst,
+                                             bank_freq, slab_freq, reuse)
+        t.plan_t1_ns = time.monotonic_ns()
         return decision, plans, spill_plan
 
     def commit_pending(self) -> MemosReport | None:
@@ -394,44 +599,73 @@ class MemosManager:
         if self._ticket is None:
             return None
         t, self._ticket = self._ticket, None
-        decision, plans, spill_plan = t.future.result()
-        if self._mid_plan_hook is not None:
-            self._mid_plan_hook(self, decision, plans)
-        all_plans = plans + ([spill_plan] if spill_plan is not None else [])
+        # overlap accounting: plan time elapsed before we *asked* for the
+        # result was hidden under the dispatch; time we block in result()
+        # is exposed
+        t_commit0 = time.monotonic_ns()
+        with obs.span("memos.commit", step=t.step) as sp:
+            decision, plans, spill_plan = t.future.result()
+            if self._mid_plan_hook is not None:
+                self._mid_plan_hook(self, decision, plans)
+            all_plans = plans + ([spill_plan] if spill_plan is not None
+                                 else [])
 
-        # pages whose version/tier/slot changed since the snapshot — the
-        # incremental epoch diff, recorded by the store as the dispatch
-        # ran, replaces any per-plan array re-validation
-        dirty = self.store.end_dirty_epoch()
-        landed = commit_reservations(self.store, t.view, all_plans)
+            # pages whose version/tier/slot changed since the snapshot — the
+            # incremental epoch diff, recorded by the store as the dispatch
+            # ran, replaces any per-plan array re-validation
+            dirty = self.store.end_dirty_epoch()
+            landed = commit_reservations(self.store, t.view, all_plans)
 
-        stats = MigrationStats()
-        spilled = 0
-        committed = degraded = 0
-        for pl, ok in zip(all_plans, landed):
-            keep = ok.copy()
-            if len(pl):
-                if dirty:
-                    keep &= np.asarray(
-                        [int(p) not in dirty for p in pl.pages])
-                # release reservations held for pages that degrade (a
-                # page the replay had no capacity for holds nothing)
-                for i in np.nonzero(ok & ~keep)[0]:
-                    self.store.alloc[pl.dst_tier].free(
-                        int(pl.dst_slots[i]), 0)
-            committed += int(keep.sum())
-            degraded += len(pl) - int(keep.sum())
-            st = self.engine.execute_plan(subset_plan(pl, keep))
-            if pl is spill_plan:
-                spilled = st.migrated
-            else:
-                stats.merge(st)
-        self.pages_committed += committed
-        self.pages_degraded += degraded
+            stats = MigrationStats()
+            spilled = 0
+            committed = degraded = dropped = 0
+            for pl, ok in zip(all_plans, landed):
+                keep = ok.copy()
+                if len(pl):
+                    if dirty:
+                        stale = np.asarray(
+                            [int(p) in dirty for p in pl.pages])
+                        keep &= ~stale
+                        # stale pages that are no longer allocated were
+                        # freed mid-plan (a retired sequence): the plan
+                        # entry is void, not deferred work — drop it
+                        # without charging a conflict
+                        freed = np.asarray(
+                            [int(self.store.slot[int(p)]) == NO_SLOT
+                             for p in pl.pages])
+                        dropped += int((stale & freed).sum())
+                    # release reservations held for pages that degrade or
+                    # drop (a page the replay had no capacity for holds
+                    # nothing)
+                    for i in np.nonzero(ok & ~keep)[0]:
+                        self.store.alloc[pl.dst_tier].free(
+                            int(pl.dst_slots[i]), 0)
+                committed += int(keep.sum())
+                degraded += len(pl) - int(keep.sum())
+                st = self.engine.execute_plan(subset_plan(pl, keep))
+                if pl is spill_plan:
+                    spilled = st.migrated
+                else:
+                    stats.merge(st)
+            degraded -= dropped
+            self.pages_committed += committed
+            self.pages_degraded += degraded
+            self.pages_dropped += dropped
+            sp.set(pages_committed=committed, pages_degraded=degraded,
+                   pages_dropped=dropped)
+
+        plan_dur = max(t.plan_t1_ns - t.plan_t0_ns, 0)
+        hidden = min(max(t_commit0 - t.plan_t0_ns, 0), plan_dur)
+        eff = hidden / plan_dur if plan_dur > 0 else 1.0
+        self.plan_ns_total += plan_dur
+        self.plan_hidden_ns_total += hidden
         return self._finish_pass(decision, stats, spilled, t.summary,
                                  t.wear_pressure, committed_async=True,
                                  pages_committed=committed,
-                                 pages_degraded=degraded)
+                                 pages_degraded=degraded,
+                                 pages_dropped=dropped,
+                                 plan_ms=plan_dur / 1e6,
+                                 overlap_efficiency=eff)
 
     def flush(self) -> MemosReport | None:
         """Commit any in-flight plan (end of serving / shutdown)."""

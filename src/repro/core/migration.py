@@ -59,6 +59,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from . import placement
 from .tiers import NO_SLOT, TierStore, _pad_idx_np, _pad_pages, _pow2
 
@@ -108,6 +110,36 @@ class MigrationStats:
         self.to_slow += other.to_slow
         for k, v in other.by_pair.items():
             self.by_pair[k] = self.by_pair.get(k, 0) + v
+
+    def to_dict(self) -> dict:
+        """JSON-safe form: the (src, dst) tuple keys of ``by_pair``
+        serialize as ``"src->dst"`` strings."""
+        return {
+            "migrated": self.migrated,
+            "dirty_discards": self.dirty_discards,
+            "retries": self.retries,
+            "bytes_moved": self.bytes_moved,
+            "to_fast": self.to_fast,
+            "to_slow": self.to_slow,
+            "by_pair": {f"{s}->{d}": n
+                        for (s, d), n in sorted(self.by_pair.items())},
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MigrationStats":
+        by_pair = {}
+        for k, n in d.get("by_pair", {}).items():
+            s, _, dst = k.partition("->")
+            by_pair[(int(s), int(dst))] = int(n)
+        return cls(
+            migrated=int(d.get("migrated", 0)),
+            dirty_discards=int(d.get("dirty_discards", 0)),
+            retries=int(d.get("retries", 0)),
+            bytes_moved=int(d.get("bytes_moved", 0)),
+            to_fast=int(d.get("to_fast", 0)),
+            to_slow=int(d.get("to_slow", 0)),
+            by_pair=by_pair,
+        )
 
 
 # =============================================================================
@@ -711,18 +743,20 @@ class BatchedMigrationEngine:
         store = self.store
         src_dev = store.is_addressable_tier(src_tier)
         dst_dev = store.is_addressable_tier(dst_tier)
-        if src_dev and dst_dev:
-            staged = store.gather_device(src_tier, src_slots)
-            store.scatter_device(dst_tier, dst_slots, staged)
-        elif src_dev:
-            staged = self._stage_device_to_host(src_tier, src_slots)
-            store.host_write_batch(dst_tier, dst_slots, staged)
-        elif dst_dev:
-            staged = store.host_read_batch(src_tier, src_slots)
-            self._stage_host_to_device(dst_tier, dst_slots, staged)
-        else:
-            staged = store.host_read_batch(src_tier, src_slots)
-            store.host_write_batch(dst_tier, dst_slots, staged)
+        with obs.span("migrate.move_group", src=src_tier, dst=dst_tier,
+                      pages=int(len(src_slots))):
+            if src_dev and dst_dev:
+                staged = store.gather_device(src_tier, src_slots)
+                store.scatter_device(dst_tier, dst_slots, staged)
+            elif src_dev:
+                staged = self._stage_device_to_host(src_tier, src_slots)
+                store.host_write_batch(dst_tier, dst_slots, staged)
+            elif dst_dev:
+                staged = store.host_read_batch(src_tier, src_slots)
+                self._stage_host_to_device(dst_tier, dst_slots, staged)
+            else:
+                staged = store.host_read_batch(src_tier, src_slots)
+                store.host_write_batch(dst_tier, dst_slots, staged)
 
     # -- plan execution --------------------------------------------------------
     def execute_plan(self, plan: MigrationPlan) -> MigrationStats:

@@ -174,6 +174,19 @@ def end_pass(state: SysmonState) -> tuple[SysmonState, PassSummary]:
     return new_state, summary
 
 
+def summary_metrics(summary: PassSummary) -> dict[str, int]:
+    """Pass classification mix as plain-int gauges (for the obs metrics
+    registry): page counts per WD class plus the hot set size."""
+    import numpy as np
+    wd = np.asarray(summary.wd_code)
+    return {
+        "hot_pages": int(np.asarray(summary.hot).sum()),
+        "wd_pages": int((wd == patterns.WD).sum()),
+        "rd_pages": int((wd == patterns.RD).sum()),
+        "cold_pages": int((wd == patterns.COLD).sum()),
+    }
+
+
 def remap(state: SysmonState, page_ids: jnp.ndarray,
           new_bank: jnp.ndarray, new_slab: jnp.ndarray) -> SysmonState:
     """Update page->bank/slab maps after the migration engine moves pages."""

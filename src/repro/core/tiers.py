@@ -841,3 +841,24 @@ class TierStore:
             out[f"t{i}_{spec.name.lower()}_used"] = used[i]
             out[f"t{i}_{spec.name.lower()}_total"] = spec.slots
         return out
+
+    def publish_metrics(self, reg) -> None:
+        """Publish per-tier occupancy / IO counters and per-(src, dst)
+        migration traffic into an ``obs.MetricsRegistry``."""
+        used = self.tier_used()
+        for i, spec in enumerate(self.hierarchy):
+            name = spec.name.lower()
+            reg.gauge(f"store.t{i}_used",
+                      f"live pages in tier {i} ({name})").set(used[i])
+            reg.gauge(f"store.t{i}_slots",
+                      f"capacity of tier {i} ({name})").set(spec.slots)
+            reg.gauge(f"store.t{i}_reads",
+                      f"page reads served from tier {i}").set(
+                          self.reads_from[i])
+            reg.gauge(f"store.t{i}_writes",
+                      f"page writes landed in tier {i}").set(
+                          self.writes_to[i])
+        for (s, d), b in self.traffic.items():
+            if b:      # sparse: most (src, dst) pairs never carry traffic
+                reg.gauge(f"store.migration_bytes_t{s}_t{d}",
+                          f"bytes migrated tier {s} -> tier {d}").set(b)

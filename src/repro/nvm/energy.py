@@ -45,6 +45,30 @@ class NvmReport:
         return {k: (float(v) if isinstance(v, float) else v)
                 for k, v in self.__dict__.items()}
 
+    def publish(self, reg, prefix: str = "nvm.") -> None:
+        """Publish this pass into an ``obs.MetricsRegistry``: energy as
+        counters (per-pass mJ accumulates across passes), wear / power /
+        lifetime as gauges."""
+        reg.counter(f"{prefix}read_energy_mj",
+                    "dynamic read energy (mJ)").inc(self.read_energy_mj)
+        reg.counter(f"{prefix}write_energy_mj",
+                    "dynamic write energy (mJ)").inc(self.write_energy_mj)
+        reg.counter(f"{prefix}slow_writes",
+                    "page writes absorbed this tier").inc(self.slow_writes)
+        reg.counter(f"{prefix}leveling_writes",
+                    "Start-Gap rotation writes").inc(self.leveling_writes)
+        reg.gauge(f"{prefix}wear_max",
+                  "writes on the worst physical slot").set(self.wear_max)
+        reg.gauge(f"{prefix}wear_imbalance",
+                  "max/mean wear ratio").set(self.wear_imbalance)
+        reg.gauge(f"{prefix}dynamic_power_mw",
+                  "dynamic power over the pass window").set(
+                      self.dynamic_power_mw)
+        lt = self.lifetime_years_actual
+        if lt != float("inf"):
+            reg.gauge(f"{prefix}lifetime_years",
+                      "projected endurance lifetime").set(lt)
+
 
 class EnergyMeter:
     """Accumulates one tier's access counts pass by pass.

@@ -37,6 +37,7 @@ hotness is accumulated inside the scan and drained per dispatch.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from functools import partial
 
@@ -44,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchConfig
 from repro.core import sysmon as sysmon_mod
 from repro.core.hierarchy import MemoryHierarchy
@@ -574,27 +576,47 @@ class PagedServingEngine:
                         jnp.int32(0), jnp.int32(0))[0])
 
     # -- main loop (dispatch-boundary slow path) -----------------------------------
+    def _publish_dispatch_metrics(self, dt: float, k: int, batch: int) -> None:
+        """Per-dispatch latency + throughput metrics (looked up by name
+        each dispatch so registry resets between sweep configs take
+        effect)."""
+        reg = obs.get_registry()
+        reg.histogram("serving.dispatch_latency_s",
+                      "wall time of one fused decode dispatch").observe(dt)
+        # one dispatch advances every live row by k tokens: per-token
+        # latency is dt/k, weighted k so quantiles are over tokens
+        reg.histogram("serving.token_latency_s",
+                      "per-token decode latency (dispatch wall / K)"
+                      ).observe(dt / k, n=k)
+        reg.counter("serving.dispatches", "decode dispatches issued").inc()
+        reg.counter("serving.tokens_sampled",
+                    "tokens sampled across all rows").inc(k * batch)
+        for qn, qv in self.batcher.depths().items():
+            reg.gauge(f"serving.queue_{qn}",
+                      f"scheduler {qn} queue depth").set(qv)
+
     def step(self) -> dict:
         # 1) admit / resume; make room by preempting if promotion fails.
         # A request that fails provisioning twice in one step is making no
         # progress (its blocker holds the pool) — stop admitting and let
         # the dispatch/memos machinery below free capacity first.
         failed: set[int] = set()
-        while True:
-            admitted = self.batcher.admit()
-            if not admitted:
-                break
-            ok = True
-            stuck = False
-            for req in admitted:
-                if req.start_step is None:
-                    req.start_step = self.step_count
-                if not self._ensure_pages(req):
-                    ok = False
-                    stuck = stuck or req.rid in failed
-                    failed.add(req.rid)
-            if stuck or (not ok and not self._make_room()):
-                break
+        with obs.span("serve.admit", step=self.step_count):
+            while True:
+                admitted = self.batcher.admit()
+                if not admitted:
+                    break
+                ok = True
+                stuck = False
+                for req in admitted:
+                    if req.start_step is None:
+                        req.start_step = self.step_count
+                    if not self._ensure_pages(req):
+                        ok = False
+                        stuck = stuck or req.rid in failed
+                        failed.add(req.rid)
+                if stuck or (not ok and not self._make_room()):
+                    break
 
         active = list(self.batcher.active)
         stats = {"step": self.step_count, "active": len(active)}
@@ -617,18 +639,20 @@ class PagedServingEngine:
         # HBM pressure first shrink the dispatch, then preempt (the K=1
         # reference semantics) — preempting to feed a large dispatch
         # would thrash
-        while True:
-            ok = True
-            for req in active:
-                if not req.preempted and not self._ensure_pages(req, k):
-                    ok = False
+        with obs.span("serve.provision", step=self.step_count) as prov_sp:
+            while True:
+                ok = True
+                for req in active:
+                    if not req.preempted and not self._ensure_pages(req, k):
+                        ok = False
+                        break
+                if ok:
                     break
-            if ok:
-                break
-            if k > 1:
-                k //= 2
-            elif not self._make_room():
-                raise RuntimeError("HBM+host pools exhausted")
+                if k > 1:
+                    k //= 2
+                elif not self._make_room():
+                    raise RuntimeError("HBM+host pools exhausted")
+            prov_sp.set(k=k)
         active = [r for r in active if not r.preempted]
         if not active:
             self.step_count += 1
@@ -662,121 +686,133 @@ class PagedServingEngine:
                 pool_sel = None
                 wear_tr = None
 
-        if self.scfg.reference and pt is None:
-            # -- retained K=1 reference path (parity oracle / baseline) ----
-            logits, ecounts, store.fast_pool = self._decode_fn(
-                self.params, jnp.asarray(tokens[:, None]),
-                jnp.asarray(positions), jnp.asarray(block_tables),
-                jnp.asarray(positions + 1), store.fast_pool)
-            # host-side argmax sampling: one transfer per token
-            sampled = np.asarray(
-                jnp.argmax(logits[:, :self.cfg.vocab], axis=-1),
-                np.int32)[None, :]
-            # standalone per-step SysMon records — the host round-trips the
-            # fused path folds into its scan
-            read_valid = np.arange(P)[None, :] <= (positions // page)[:, None]
-            self.sysmon = sysmon_mod.record(
-                self.sysmon, jnp.asarray(page_tables.reshape(-1)),
-                is_write=False, valid=jnp.asarray(read_valid.reshape(-1)))
-            tails = page_tables[np.arange(B), positions // page]
-            self.sysmon = sysmon_mod.record(
-                self.sysmon, jnp.asarray(tails), is_write=True)
-            page_writes = np.zeros(store.cfg.n_pages, np.int64)
-            np.add.at(page_writes, tails, 1)
-            self.last_logits = logits
-        elif self.scfg.reference:
-            # -- K=1 reference path over the dual pools (parity oracle) ----
-            ppool = store.pools[pt]
-            n_pin = ppool.data.shape[0]
-            remap_arr = (wear_tr.state.remap if wear_tr is not None
-                         else jnp.arange(n_pin, dtype=jnp.int32))
-            logits, ecounts, store.fast_pool, ppool.data = \
-                self._decode_pinned_fn(
+        dispatch_path = (("reference" if self.scfg.reference else "fused")
+                         + ("+pinned" if pt is not None else ""))
+        # wall clock measured independently of tracing — the latency
+        # histograms must populate with the tracer disabled
+        t_disp0 = time.perf_counter()
+        with obs.span("serve.dispatch", step=self.step_count, k=k, batch=B,
+                      path=dispatch_path):
+            if self.scfg.reference and pt is None:
+                # -- retained K=1 reference path (parity oracle / baseline)
+                logits, ecounts, store.fast_pool = self._decode_fn(
                     self.params, jnp.asarray(tokens[:, None]),
                     jnp.asarray(positions), jnp.asarray(block_tables),
-                    jnp.asarray(pool_sel), jnp.asarray(positions + 1),
-                    store.fast_pool, ppool.data, remap_arr)
-            sampled = np.asarray(
-                jnp.argmax(logits[:, :self.cfg.vocab], axis=-1),
-                np.int32)[None, :]
-            read_valid = np.arange(P)[None, :] <= (positions // page)[:, None]
-            self.sysmon = sysmon_mod.record(
-                self.sysmon, jnp.asarray(page_tables.reshape(-1)),
-                is_write=False, valid=jnp.asarray(read_valid.reshape(-1)))
-            tails = page_tables[np.arange(B), positions // page]
-            self.sysmon = sysmon_mod.record(
-                self.sysmon, jnp.asarray(tails), is_write=True)
-            page_writes = np.zeros(store.cfg.n_pages, np.int64)
-            np.add.at(page_writes, tails, 1)
-            # host-side wear charge for pinned tail writes (the fused path
-            # folds this into the scan; totals are bit-identical).  The
-            # block tables carry *logical* pinned slots now, so translate
-            # through the remap before charging the physical rows — this
-            # also drives the host leveler, whose advances the next
-            # dispatch picks up through ``wear_tr.state.remap``.
-            tcol = positions // page
-            tslot = block_tables[np.arange(B), tcol]
-            tpin = pool_sel[np.arange(B), tcol] > 0
-            if wear_tr is not None and tpin.any():
-                store._account_host_writes(pt, wear_tr.phys(tslot[tpin]))
-            self.last_logits = logits
-        elif pt is None:
-            # -- fused K-step dispatch -------------------------------------
-            prompt_buf = np.zeros((B, P * page), np.int32)
-            for i, r in enumerate(active):
-                prompt_buf[i, :len(r.prompt)] = r.prompt
-            fn = self._get_fused(k)
-            (sampled_d, logits, self.sysmon, store.fast_pool,
-             page_writes_d, ecounts) = fn(
-                self.params, jnp.asarray(tokens), jnp.asarray(positions),
-                jnp.asarray(prompt_buf), jnp.asarray(prompt_lens),
-                jnp.asarray(page_tables), jnp.asarray(block_tables),
-                self.sysmon, store.fast_pool)
-            sampled = np.asarray(sampled_d)   # one transfer per K tokens
-            page_writes = np.asarray(page_writes_d)
-            self.last_logits = logits
-        else:
-            # -- fused K-step dual-pool dispatch: slow-tier KV appends and
-            # the wear_update scatter-add ride the same scan --------------
-            ppool = store.pools[pt]
-            n_pin_rows = ppool.data.shape[0]
-            prompt_buf = np.zeros((B, P * page), np.int32)
-            for i, r in enumerate(active):
-                prompt_buf[i, :len(r.prompt)] = r.prompt
-            wear_arr = (wear_tr.state.wear if wear_tr is not None
-                        else jnp.zeros((1,), jnp.int32))
-            remap_arr = (wear_tr.state.remap if wear_tr is not None
-                         else jnp.arange(n_pin_rows, dtype=jnp.int32))
-            lv = store.leveler_by_tier.get(pt) if self._gap_interval else None
-            gap0 = jnp.int32(lv.stats.gap if lv is not None else 0)
-            pending0 = jnp.int32(lv._pending if lv is not None else 0)
-            fn = self._get_fused_pinned(k)
-            (sampled_d, logits, self.sysmon, store.fast_pool, ppool.data,
-             wear_out, remap_out, gap_out, pending_out, n_adv_out,
-             page_writes_d, ecounts) = fn(
-                self.params, jnp.asarray(tokens), jnp.asarray(positions),
-                jnp.asarray(prompt_buf), jnp.asarray(prompt_lens),
-                jnp.asarray(page_tables), jnp.asarray(block_tables),
-                jnp.asarray(pool_sel), self.sysmon, store.fast_pool,
-                ppool.data, wear_arr, remap_arr, gap0, pending0)
-            sampled = np.asarray(sampled_d)
-            page_writes = np.asarray(page_writes_d)
-            if wear_tr is not None:
-                n_pin_w = int(page_writes[store.tier == pt].sum())
-                n_adv = int(n_adv_out)
-                # adopt the dispatch's wear counters (app writes + the two
-                # row rewrites each in-dispatch gap advance charged), its
-                # rotated
-                # remap, and the leveler's (gap, pending) bookkeeping —
-                # the boundary replays counter arithmetic only, never pool
-                # row swaps
-                wear_tr.adopt_scan_writes(wear_out, n_pin_w,
-                                          leveling_writes=2 * n_adv)
-                if n_adv:
-                    wear_tr.adopt_scan_remap(remap_out)
-                if lv is not None:
-                    lv.adopt_scan_advances(n_adv, int(pending_out))
-            self.last_logits = logits
+                    jnp.asarray(positions + 1), store.fast_pool)
+                # host-side argmax sampling: one transfer per token
+                sampled = np.asarray(
+                    jnp.argmax(logits[:, :self.cfg.vocab], axis=-1),
+                    np.int32)[None, :]
+                # standalone per-step SysMon records — the host round-trips
+                # the fused path folds into its scan
+                read_valid = (np.arange(P)[None, :]
+                              <= (positions // page)[:, None])
+                self.sysmon = sysmon_mod.record(
+                    self.sysmon, jnp.asarray(page_tables.reshape(-1)),
+                    is_write=False, valid=jnp.asarray(read_valid.reshape(-1)))
+                tails = page_tables[np.arange(B), positions // page]
+                self.sysmon = sysmon_mod.record(
+                    self.sysmon, jnp.asarray(tails), is_write=True)
+                page_writes = np.zeros(store.cfg.n_pages, np.int64)
+                np.add.at(page_writes, tails, 1)
+                self.last_logits = logits
+            elif self.scfg.reference:
+                # -- K=1 reference path over the dual pools (parity oracle)
+                ppool = store.pools[pt]
+                n_pin = ppool.data.shape[0]
+                remap_arr = (wear_tr.state.remap if wear_tr is not None
+                             else jnp.arange(n_pin, dtype=jnp.int32))
+                logits, ecounts, store.fast_pool, ppool.data = \
+                    self._decode_pinned_fn(
+                        self.params, jnp.asarray(tokens[:, None]),
+                        jnp.asarray(positions), jnp.asarray(block_tables),
+                        jnp.asarray(pool_sel), jnp.asarray(positions + 1),
+                        store.fast_pool, ppool.data, remap_arr)
+                sampled = np.asarray(
+                    jnp.argmax(logits[:, :self.cfg.vocab], axis=-1),
+                    np.int32)[None, :]
+                read_valid = (np.arange(P)[None, :]
+                              <= (positions // page)[:, None])
+                self.sysmon = sysmon_mod.record(
+                    self.sysmon, jnp.asarray(page_tables.reshape(-1)),
+                    is_write=False, valid=jnp.asarray(read_valid.reshape(-1)))
+                tails = page_tables[np.arange(B), positions // page]
+                self.sysmon = sysmon_mod.record(
+                    self.sysmon, jnp.asarray(tails), is_write=True)
+                page_writes = np.zeros(store.cfg.n_pages, np.int64)
+                np.add.at(page_writes, tails, 1)
+                # host-side wear charge for pinned tail writes (the fused
+                # path folds this into the scan; totals are bit-identical).
+                # The block tables carry *logical* pinned slots now, so
+                # translate through the remap before charging the physical
+                # rows — this also drives the host leveler, whose advances
+                # the next dispatch picks up through ``wear_tr.state.remap``.
+                tcol = positions // page
+                tslot = block_tables[np.arange(B), tcol]
+                tpin = pool_sel[np.arange(B), tcol] > 0
+                if wear_tr is not None and tpin.any():
+                    store._account_host_writes(pt, wear_tr.phys(tslot[tpin]))
+                self.last_logits = logits
+            elif pt is None:
+                # -- fused K-step dispatch ---------------------------------
+                prompt_buf = np.zeros((B, P * page), np.int32)
+                for i, r in enumerate(active):
+                    prompt_buf[i, :len(r.prompt)] = r.prompt
+                fn = self._get_fused(k)
+                (sampled_d, logits, self.sysmon, store.fast_pool,
+                 page_writes_d, ecounts) = fn(
+                    self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                    jnp.asarray(prompt_buf), jnp.asarray(prompt_lens),
+                    jnp.asarray(page_tables), jnp.asarray(block_tables),
+                    self.sysmon, store.fast_pool)
+                sampled = np.asarray(sampled_d)  # one transfer per K tokens
+                page_writes = np.asarray(page_writes_d)
+                self.last_logits = logits
+            else:
+                # -- fused K-step dual-pool dispatch: slow-tier KV appends
+                # and the wear_update scatter-add ride the same scan -------
+                ppool = store.pools[pt]
+                n_pin_rows = ppool.data.shape[0]
+                prompt_buf = np.zeros((B, P * page), np.int32)
+                for i, r in enumerate(active):
+                    prompt_buf[i, :len(r.prompt)] = r.prompt
+                wear_arr = (wear_tr.state.wear if wear_tr is not None
+                            else jnp.zeros((1,), jnp.int32))
+                remap_arr = (wear_tr.state.remap if wear_tr is not None
+                             else jnp.arange(n_pin_rows, dtype=jnp.int32))
+                lv = (store.leveler_by_tier.get(pt)
+                      if self._gap_interval else None)
+                gap0 = jnp.int32(lv.stats.gap if lv is not None else 0)
+                pending0 = jnp.int32(lv._pending if lv is not None else 0)
+                fn = self._get_fused_pinned(k)
+                (sampled_d, logits, self.sysmon, store.fast_pool, ppool.data,
+                 wear_out, remap_out, gap_out, pending_out, n_adv_out,
+                 page_writes_d, ecounts) = fn(
+                    self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                    jnp.asarray(prompt_buf), jnp.asarray(prompt_lens),
+                    jnp.asarray(page_tables), jnp.asarray(block_tables),
+                    jnp.asarray(pool_sel), self.sysmon, store.fast_pool,
+                    ppool.data, wear_arr, remap_arr, gap0, pending0)
+                sampled = np.asarray(sampled_d)
+                page_writes = np.asarray(page_writes_d)
+                if wear_tr is not None:
+                    n_pin_w = int(page_writes[store.tier == pt].sum())
+                    n_adv = int(n_adv_out)
+                    # adopt the dispatch's wear counters (app writes + the
+                    # two row rewrites each in-dispatch gap advance
+                    # charged), its rotated remap, and the leveler's
+                    # (gap, pending) bookkeeping — the boundary replays
+                    # counter arithmetic only, never pool row swaps
+                    with obs.span("serve.startgap_adopt", advances=n_adv):
+                        wear_tr.adopt_scan_writes(wear_out, n_pin_w,
+                                                  leveling_writes=2 * n_adv)
+                        if n_adv:
+                            wear_tr.adopt_scan_remap(remap_out)
+                        if lv is not None:
+                            lv.adopt_scan_advances(n_adv, int(pending_out))
+                self.last_logits = logits
+        dispatch_dt = time.perf_counter() - t_disp0
+        self._publish_dispatch_metrics(dispatch_dt, k, B)
 
         if self.expert_counts is not None:
             self.expert_counts += np.asarray(ecounts, np.int64)
@@ -795,19 +831,20 @@ class PagedServingEngine:
 
         # 5) advance sequences from the returned token block: tokens
         # sampled at inner step s >= emit_from[i] are new generations
-        emit_from = np.maximum(prompt_lens - 1 - positions, 0)
-        for i, req in enumerate(active):
-            new_gen = [int(t) for t in sampled[emit_from[i]:k, i]]
-            req.generated.extend(new_gen)
-            self.tokens_out += len(new_gen)
-            seq = req.prompt + req.generated
-            p0 = int(positions[i])
-            req.tokens.extend(seq[p0:p0 + k])
-            if len(req.generated) >= req.max_new:
-                self.batcher.finish(req, self.step_count + k - 1)
-                for pid in req.pages:
-                    self.kv.free_page(pid)
-                req.pages = []
+        with obs.span("serve.retire", step=self.step_count):
+            emit_from = np.maximum(prompt_lens - 1 - positions, 0)
+            for i, req in enumerate(active):
+                new_gen = [int(t) for t in sampled[emit_from[i]:k, i]]
+                req.generated.extend(new_gen)
+                self.tokens_out += len(new_gen)
+                seq = req.prompt + req.generated
+                p0 = int(positions[i])
+                req.tokens.extend(seq[p0:p0 + k])
+                if len(req.generated) >= req.max_new:
+                    self.batcher.finish(req, self.step_count + k - 1)
+                    for pid in req.pages:
+                        self.kv.free_page(pid)
+                    req.pages = []
 
         # 6) memos loop between dispatches (hot pages stay; cold/preempted
         # pages drain to host) — pass granularity, off the decode hot
@@ -833,6 +870,7 @@ class PagedServingEngine:
                     "plan_conflict": report.plan_conflict,
                     "pages_committed": report.pages_committed,
                     "pages_degraded": report.pages_degraded,
+                    "pages_dropped": report.pages_dropped,
                 }
                 if report.nvm is not None:
                     stats["nvm"] = {

@@ -98,3 +98,9 @@ class ContinuousBatcher:
 
     def all_done(self) -> bool:
         return not (self.waiting or self.running or self.preempted)
+
+    def depths(self) -> dict[str, int]:
+        """Queue depths for the obs metrics registry."""
+        return {"waiting": len(self.waiting), "running": len(self.running),
+                "preempted": len(self.preempted),
+                "finished": len(self.finished)}

@@ -192,6 +192,36 @@ def test_single_page_dirtying_commits_remainder():
     assert_no_double_booking(a_store)
 
 
+def test_freed_mid_plan_page_drops_without_conflict():
+    """A planned page *released* mid-plan (a sequence retiring at the
+    overlapped dispatch boundary) is dropped — its plan entry is void,
+    not deferred work — while every other planned page still commits.
+    No conflict is charged: ``pages_degraded`` stays 0 and the report
+    does not flag ``plan_conflict``."""
+    seen = {}
+
+    def free_one(m, decision, plans):
+        pl = next(p for p in plans if len(p))
+        seen["page"] = int(pl.pages[0])
+        seen["planned"] = [int(p) for q in plans for p in q.pages]
+        m.store.release(seen["page"])   # retirement landing mid-plan
+
+    store, mgr, rep = one_pass(True, hook=free_one)
+
+    p = seen["page"]
+    assert rep.committed_async
+    assert rep.pages_dropped == 1
+    assert rep.pages_degraded == 0 and not rep.plan_conflict
+    assert rep.pages_committed == len(seen["planned"]) - 1
+    assert mgr.pages_dropped == 1
+    # the freed page stayed free — the stale plan didn't resurrect it
+    assert int(store.slot[p]) == NO_SLOT
+    # its reservation was returned: allocators stay consistent
+    for t in range(store.n_tiers):
+        store.alloc[t].check_consistency()
+    assert_no_double_booking(store)
+
+
 def test_forced_mid_plan_dirtying_every_pass():
     """Every pass gets one planned page dirtied mid-plan (version bump
     through the store, as a real write would): each commit degrades
