@@ -1,0 +1,312 @@
+"""Fault-storm sweep: serve through injected NVM failures, prove recovery.
+
+The robustness PR's committed evidence.  One fault-free **oracle** run
+records the token stream every request should produce (greedy decode is
+per-sequence deterministic, and the lossless pinned slow tier makes the
+output independent of migration schedule).  Then each storm profile
+serves the *same* prompts with the seeded fault injector armed —
+media bit-flips and stuck-at faults scaled by wear, plan-worker
+exceptions/hangs, transient migration failures, allocation pressure —
+followed by calm rounds (rates zeroed, detection still armed) until the
+degradation ladder climbs back to full overlap.
+
+Invariant checked per profile, token by token:
+
+  * a request that completes emits **exactly** the oracle's tokens;
+  * a request that fails (CapacityError / PageCorruptionError) emitted
+    an exact oracle *prefix* before retiring — faults surface as clean
+    errors, never as silently corrupted output.
+
+``--check`` (the CI smoke with ``--tiny``) additionally gates:
+> 0 faults injected, > 0 recovery actions (retry / fallback /
+quarantine / backpressure / re-promotion), 0 corrupted tokens, at
+least one ladder demotion observed, and every profile's ladder back at
+its top rung by the end of the calm phase.  Results land in
+benchmarks/results/fault_storm.json.
+
+Usage:  PYTHONPATH=src python benchmarks/fault_storm.py
+        PYTHONPATH=src python benchmarks/fault_storm.py --tiny
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# storm profiles: one per injection site, plus the combined storm.
+# Rates are per-draw (per live slot / plan job / bulk move / allocate
+# call) — high enough that even the --tiny workload draws faults
+PROFILES = {
+    "media": dict(media_flip_rate=0.05),
+    "media+stuck": dict(media_flip_rate=0.05, media_stuck_rate=0.01),
+    "plan": dict(plan_exception_rate=0.9),
+    "migrate": dict(migrate_fail_rate=0.5),
+    "alloc": dict(alloc_fail_rate=0.05),
+    "combined": dict(media_flip_rate=0.03, plan_exception_rate=0.4,
+                     migrate_fail_rate=0.3, alloc_fail_rate=0.03),
+}
+TINY_PROFILES = ("media", "plan", "combined")
+
+
+def build_engine(cfg, params, args):
+    """One config for every run: fused K, memos on, overlapped plan,
+    lossless pinned slow tier.  fast_slots is sized BELOW the working
+    set so sequences genuinely live in the NVM-analogue tier — media
+    faults need slow-resident pages to land on."""
+    from repro.core.hierarchy import MemoryHierarchy
+    from repro.serving import PagedServingEngine, ServeConfig
+    hier = MemoryHierarchy.two_tier(args.fast_slots, args.slow_slots,
+                                    pinned_slow=True)
+    return PagedServingEngine(cfg, params, ServeConfig(
+        page_size=args.page_size, max_batch=args.batch,
+        fast_slots=args.fast_slots, slow_slots=args.slow_slots,
+        hierarchy=hier, memos_interval=args.memos_interval,
+        memos_enabled=True, max_pages_per_seq=args.max_pages,
+        decode_block=args.k, overlap_plan=True))
+
+
+def serve_round(engine, cfg, args):
+    """One round: the SAME prompt set every time (fresh seeded rng), so
+    any completed request in any round is comparable to the oracle.
+    Unlike serving_throughput's round, this one tolerates failed
+    requests — that is the point."""
+    rng = np.random.RandomState(args.seed)
+    reqs = [engine.submit(
+        rng.randint(0, cfg.vocab, size=args.prompt_len).tolist(),
+        max_new=args.max_new) for _ in range(args.requests)]
+    t0 = time.perf_counter()
+    engine.run(max_steps=100_000)
+    dt = time.perf_counter() - t0
+    assert engine.batcher.all_done(), \
+        "round did not drain: scheduler wedged (deadlock, not a clean fail)"
+    return reqs, dt
+
+
+def token_audit(reqs, oracle):
+    """Count corrupted tokens against the oracle: completed requests
+    must match exactly, failed ones must have emitted an exact prefix."""
+    corrupted = completed = failed = 0
+    failed_kinds: dict[str, int] = {}
+    for i, r in enumerate(reqs):
+        want = oracle[i]
+        if r.error is None:
+            completed += 1
+            if r.generated != want:
+                corrupted += sum(a != b for a, b in zip(r.generated, want)) \
+                    + abs(len(r.generated) - len(want))
+        else:
+            failed += 1
+            kind = type(r.error).__name__
+            failed_kinds[kind] = failed_kinds.get(kind, 0) + 1
+            got = r.generated
+            if got != want[:len(got)]:
+                corrupted += sum(a != b for a, b in zip(got, want))
+    return corrupted, completed, failed, failed_kinds
+
+
+def run_oracle(cfg, params, args):
+    """Fault-free reference: injector disarmed, integrity off — the
+    bit-identical baseline every storm survivor must reproduce."""
+    from repro import faults, obs
+    faults.reset()
+    obs.reset()
+    engine = build_engine(cfg, params, args)
+    engine.warmup()
+    reqs, dt = serve_round(engine, cfg, args)
+    assert all(r.error is None for r in reqs), \
+        "oracle round failed requests with injection disabled"
+    oracle = [list(r.generated) for r in reqs]
+    toks = sum(len(g) for g in oracle)
+    print(f"  oracle          : {dt * 1e3:8.1f} ms  "
+          f"{toks / dt:9.1f} tok/s  {len(reqs)} requests clean")
+    engine.close()
+    obs.reset()
+    return oracle
+
+
+def run_profile(name, rates, cfg, params, args, oracle):
+    from repro import faults, obs
+    from repro.faults import FaultConfig
+    obs.reset()
+    # arm BEFORE construction: TierStore latches integrity coverage off
+    # the injector's enabled flag at build time
+    faults.configure(FaultConfig(seed=args.seed, **rates))
+    inj = faults.get_injector()
+    engine = build_engine(cfg, params, args)
+    engine.warmup()
+
+    reqs, dt = serve_round(engine, cfg, args)        # the storm round
+    corrupted, completed, failed, failed_kinds = token_audit(reqs, oracle)
+    ladder = engine.memos.ladder
+    rungs = [ladder.rung]
+
+    # calm phase: zero every rate but KEEP the injector armed — the
+    # pre-dispatch verify sweep is gated on it, and corruption from the
+    # storm's final tick must still be caught, never served
+    faults.configure(FaultConfig(seed=args.seed))
+    calm = 0
+    for calm in range(1, args.calm_rounds + 1):
+        calm_reqs, _ = serve_round(engine, cfg, args)
+        c, _, _, _ = token_audit(calm_reqs, oracle)
+        corrupted += c
+        rungs.append(ladder.rung)
+        if ladder.rung == ladder.top:
+            break
+
+    flat = obs.get_registry().flat()
+    fault_metrics = {k: v for k, v in sorted(flat.items())
+                     if k.startswith("faults.")}
+    row = {
+        "rates": rates,
+        "storm": {
+            "seconds": dt,
+            "tokens_per_s": args.requests * args.max_new / dt,
+            "completed": completed, "failed": failed,
+            "failed_kinds": failed_kinds,
+        },
+        "injected": dict(inj.counts),
+        "injected_total": inj.total_injected,
+        "recovered_total": int(flat.get("faults.recovered", 0)),
+        "quarantined_slots": int(flat.get("faults.quarantined_slots", 0)),
+        "corrupted_tokens": corrupted,
+        "ladder": {
+            "top": ladder.top, "final_rung": ladder.rung,
+            "rung_after_each_round": rungs,
+            "demotions": ladder.demotions, "promotions": ladder.promotions,
+            "failures": list(ladder.failures),
+            "calm_rounds_to_recover": calm,
+        },
+        "metrics": fault_metrics,
+    }
+    recovered = row["ladder"]["final_rung"] == ladder.top
+    print(f"  {name:15s} : inj {inj.total_injected:4d}  "
+          f"rec {row['recovered_total']:4d}  "
+          f"quarantined {row['quarantined_slots']:2d}  "
+          f"ok/fail {completed}/{failed}  corrupted {corrupted}  "
+          f"ladder {'->'.join(map(str, rungs))} "
+          f"({'recovered' if recovered else 'STUCK'})")
+    engine.close()
+    faults.reset()
+    obs.reset()
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--fast-slots", type=int, default=16)
+    ap.add_argument("--slow-slots", type=int, default=64)
+    ap.add_argument("--max-pages", type=int, default=16)
+    ap.add_argument("--memos-interval", type=int, default=8)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--calm-rounds", type=int, default=8,
+                    help="max fault-free rounds for the breaker to climb "
+                         "back to full overlap")
+    ap.add_argument("--profiles", nargs="+", default=None,
+                    help=f"subset of {sorted(PROFILES)}")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 2 short requests, 3 profiles, the "
+                         "same corruption/recovery gates")
+    ap.add_argument("--no-check", action="store_true",
+                    help="always exit 0 regardless of any gate")
+    ap.add_argument("--out", type=Path,
+                    default=ROOT / "benchmarks" / "results" /
+                    "fault_storm.json")
+    args = ap.parse_args()
+    if args.tiny:
+        args.requests = min(args.requests, 2)
+        args.batch = min(args.batch, 2)
+        args.max_new = min(args.max_new, 16)
+        args.prompt_len = min(args.prompt_len, 8)
+        # 2 seqs x 3 pages = 6 pages > 4 fast slots: the slow tier stays
+        # populated, so media faults have live rows to land on
+        args.fast_slots = 4
+        args.slow_slots = 32
+        if args.profiles is None:
+            args.profiles = list(TINY_PROFILES)
+    names = args.profiles or sorted(PROFILES)
+    unknown = [n for n in names if n not in PROFILES]
+    assert not unknown, f"unknown profiles {unknown}; pick from {sorted(PROFILES)}"
+
+    import jax
+    from repro.configs import registry, smoke
+    from repro.core.migration import bench_env
+    from repro.models import transformer as T
+
+    cfg = smoke(registry()[args.arch])
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    total = args.requests * (args.prompt_len + args.max_new)
+    print(f"fault_storm: {args.arch} (smoke), {args.requests} reqs x "
+          f"({args.prompt_len} prompt + {args.max_new} new) = {total} tokens, "
+          f"fast {args.fast_slots} / slow {args.slow_slots} slots, "
+          f"seed {args.seed}")
+
+    oracle = run_oracle(cfg, params, args)
+    results = {"profiles": {}}
+    for name in names:
+        results["profiles"][name] = run_profile(
+            name, PROFILES[name], cfg, params, args, oracle)
+
+    rows = results["profiles"].values()
+    summary = {
+        "injected_total": sum(r["injected_total"] for r in rows),
+        "recovered_total": sum(r["recovered_total"] for r in rows),
+        "quarantined_slots": sum(r["quarantined_slots"] for r in rows),
+        "corrupted_tokens": sum(r["corrupted_tokens"] for r in rows),
+        "ladder_demotions": sum(r["ladder"]["demotions"] for r in rows),
+        "profiles_recovered_to_top": sum(
+            r["ladder"]["final_rung"] == r["ladder"]["top"] for r in rows),
+        "profiles_run": len(results["profiles"]),
+    }
+    results["summary"] = summary
+    results["config"] = {
+        "arch": args.arch, "batch": args.batch, "requests": args.requests,
+        "prompt_len": args.prompt_len, "max_new": args.max_new,
+        "page_size": args.page_size, "fast_slots": args.fast_slots,
+        "slow_slots": args.slow_slots, "memos_interval": args.memos_interval,
+        "k": args.k, "seed": args.seed, "tiny": args.tiny,
+        "profiles": names,
+    }
+    results["env"] = bench_env()
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(results, indent=2))
+    print(f"wrote {args.out}")
+
+    # the gates: a storm must actually storm, every survivor must be
+    # token-exact, and the pipeline must climb back to full overlap
+    problems = []
+    if summary["injected_total"] == 0:
+        problems.append("no faults injected")
+    if summary["recovered_total"] == 0:
+        problems.append("no recovery actions recorded")
+    if summary["ladder_demotions"] == 0:
+        problems.append("no ladder demotion observed")
+    if summary["corrupted_tokens"] > 0:
+        problems.append(f"{summary['corrupted_tokens']} corrupted tokens "
+                        f"served (the invariant this PR exists for)")
+    stuck = [n for n, r in results["profiles"].items()
+             if r["ladder"]["final_rung"] != r["ladder"]["top"]]
+    if stuck:
+        problems.append(f"ladder stuck below top after calm phase: {stuck}")
+    print(f"  summary  : {summary['injected_total']} injected, "
+          f"{summary['recovered_total']} recovered, "
+          f"{summary['quarantined_slots']} slots quarantined, "
+          f"{summary['corrupted_tokens']} corrupted tokens, "
+          f"{summary['profiles_recovered_to_top']}/"
+          f"{summary['profiles_run']} profiles back at full overlap")
+    if problems:
+        print("  GATES FAILED: " + "; ".join(problems))
+    return 0 if not problems or args.no_check else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -229,6 +229,26 @@ def hierarchy_sweep_rows(r: dict) -> list[str]:
     return lines
 
 
+def fault_storm_rows(r: dict) -> list[str]:
+    """Per-profile fault-storm table: injected / recovered / corrupted /
+    ladder trajectory (the robustness PR's headline evidence)."""
+    lines = ["| profile | injected | recovered | quarantined | ok/fail "
+             "| corrupted | ladder | recovered to top |",
+             "|---|---|---|---|---|---|---|---|"]
+    for name, row in r.get("profiles", {}).items():
+        lad = row.get("ladder", {})
+        storm = row.get("storm", {})
+        rungs = "->".join(map(str, lad.get("rung_after_each_round", [])))
+        lines.append(
+            f"| {name} | {row.get('injected_total', 0)} "
+            f"| {row.get('recovered_total', 0)} "
+            f"| {row.get('quarantined_slots', 0)} "
+            f"| {storm.get('completed', 0)}/{storm.get('failed', 0)} "
+            f"| {row.get('corrupted_tokens', 0)} | {rungs} "
+            f"| {'yes' if lad.get('final_rung') == lad.get('top') else 'NO'} |")
+    return lines
+
+
 def results_table(results_dir: Path = RESULTS) -> str:
     """One markdown table over every result JSON in ``results_dir``."""
     lines = ["# Benchmark results", ""]
@@ -249,6 +269,10 @@ def results_table(results_dir: Path = RESULTS) -> str:
         if isinstance(r, dict) and "sweep" in r and f.name.startswith(
                 "hierarchy_sweep"):
             lines += hierarchy_sweep_rows(r)
+            lines.append("")
+        if isinstance(r, dict) and "profiles" in r and f.name.startswith(
+                "fault_storm"):
+            lines += fault_storm_rows(r)
             lines.append("")
         lines += ["| metric | value |", "|---|---|"]
         rows = (_scalar_rows(r) if isinstance(r, dict)

@@ -60,6 +60,7 @@ class SubBuddyAllocator:
         ]
         self._free_blocks: set[tuple[int, int]] = set()  # (start, order)
         self._allocated: set[tuple[int, int]] = set()    # live allocations
+        self._retired: set[int] = set()   # quarantined order-0 starts
         self.n_free = 0
         # generation counter: bumped by every successful alloc/free, so a
         # snapshot (clone) taken at generation g is interchangeable with
@@ -182,8 +183,28 @@ class SubBuddyAllocator:
                     return start
         return None
 
+    def retire(self, start: int) -> bool:
+        """Permanently withhold an allocated order-0 block (bad-slot
+        quarantine): the block stays in the allocated set — so
+        ``check_consistency``'s exact-partition invariant holds and the
+        slot is never handed out again — but any later ``free`` of it is
+        rejected.  Pool capacity shrinks by one page for the lifetime of
+        the allocator.  Returns False if the block isn't currently
+        allocated (already freed — nothing to retire)."""
+        if (start, 0) not in self._allocated:
+            return False
+        self._retired.add(start)
+        self.gen += 1        # snapshots taken before the retire are stale
+        return True
+
+    @property
+    def n_retired(self) -> int:
+        return len(self._retired)
+
     def free(self, start: int, order: int = 0) -> None:
         """Return a block; merge buddies greedily (classic buddy coalesce)."""
+        if order == 0 and start in self._retired:
+            raise ValueError(f"free of quarantined block ({start}, 0)")
         if (start, order) not in self._allocated:
             raise ValueError(f"double/invalid free of block ({start}, {order})")
         self._allocated.discard((start, order))
@@ -216,6 +237,7 @@ class SubBuddyAllocator:
                             for bucket in self.free_lists]
         other._free_blocks = set(self._free_blocks)
         other._allocated = set(self._allocated)
+        other._retired = set(self._retired)
         other.n_free = self.n_free
         other.gen = self.gen
         return other

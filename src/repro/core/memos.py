@@ -61,11 +61,15 @@ from __future__ import annotations
 
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeout
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro import obs
+from repro.faults.degradation import (RUNG_OFF, RUNG_OVERLAP, RUNG_SYNC,
+                                      DegradationLadder)
+from repro.faults.injector import get_injector, note_recovered
 
 from . import sysmon as sysmon_mod
 from .migration import (MigrationStats, StoreView, commit_reservations,
@@ -93,6 +97,18 @@ class MemosConfig:
     # overlap the plan phase with the next dispatch on a worker thread
     # (snapshot -> plan -> commit; see module docstring)
     async_plan: bool = False
+    # -- fault tolerance (repro.faults) -----------------------------------
+    # watchdog bound on joining the worker-thread plan at commit time;
+    # a timeout (or any worker exception) falls back to a synchronous
+    # pass against live state and demotes the degradation ladder.
+    # None = wait forever (no watchdog).
+    plan_timeout_s: float | None = 30.0
+    # consecutive healthy passes before the circuit breaker re-promotes
+    # one ladder rung (overlap -> sync -> memos-off and back)
+    breaker_recovery_passes: int = 3
+    # per-pass budget of recorded page checksums re-verified by the
+    # background scrub (0 disables scrubbing)
+    scrub_pages: int = 16
 
 
 @dataclass
@@ -118,6 +134,10 @@ class MemosReport:
     # (1.0 = fully hidden, 0.0 = the commit waited for the whole plan);
     # None for synchronous passes
     overlap_efficiency: float | None = None
+    # non-None when this pass recovered from a plan-phase fault: the
+    # failure class ("timeout", "InjectedPlanFault", ...) whose watchdog
+    # fallback produced this (synchronous) result
+    fault_fallback: str | None = None
 
     def to_dict(self) -> dict:
         """JSON-ready nested dict: MigrationStats and every per-tier
@@ -145,6 +165,7 @@ class MemosReport:
             "pages_dropped": self.pages_dropped,
             "plan_ms": self.plan_ms,
             "overlap_efficiency": self.overlap_efficiency,
+            "fault_fallback": self.fault_fallback,
         }
 
     @classmethod
@@ -174,6 +195,7 @@ class MemosReport:
             pages_dropped=d.get("pages_dropped", 0),
             plan_ms=d.get("plan_ms", 0.0),
             overlap_efficiency=d.get("overlap_efficiency"),
+            fault_fallback=d.get("fault_fallback"),
         )
 
     def flat_metrics(self) -> dict:
@@ -195,6 +217,7 @@ class MemosReport:
             "pages_degraded": self.pages_degraded,
             "pages_dropped": self.pages_dropped,
             "plan_ms": self.plan_ms,
+            "fault_fallback": int(self.fault_fallback is not None),
         }
         if self.overlap_efficiency is not None:
             out["overlap_efficiency"] = self.overlap_efficiency
@@ -279,6 +302,11 @@ class MemosManager:
                              "(MemosConfig.engine='batched')")
         self._executor: ThreadPoolExecutor | None = None
         self._ticket: _PlanTicket | None = None
+        # graceful degradation: overlap -> sync -> memos-off, circuit
+        # breaker re-promotes after breaker_recovery_passes healthy passes
+        self.ladder = DegradationLadder(
+            top=RUNG_OVERLAP if self.cfg.async_plan else RUNG_SYNC,
+            recovery_passes=self.cfg.breaker_recovery_passes)
         # page-granular commit accounting: a partially-committed pass
         # contributes to *both* counters, once per page — never
         # double-counted as a whole-pass commit and a whole-pass conflict
@@ -340,10 +368,30 @@ class MemosManager:
         # beyond that is unspendable and would only grow without bound.
         self._steps_since = min(self._steps_since - self.interval,
                                 self.interval)
-        if self.cfg.async_plan:
+        # background scrub at the pass boundary: re-verify a budgeted
+        # slice of recorded page checksums, quarantining any slot whose
+        # stored bits drifted (detection between write and next read)
+        self._scrub()
+        # degradation ladder: overlap -> sync -> memos-off.  At OFF the
+        # pass still closes the SysMon window (state stays bounded) and
+        # counts as healthy so the breaker can climb back.
+        rung = self.ladder.rung
+        if rung == RUNG_OFF:
+            sm_state, _ = sysmon_mod.end_pass(sm_state)
+            self.store.roll_traffic_window()
+            self.ladder.record_healthy()
+            return sm_state, report
+        if self.cfg.async_plan and rung >= RUNG_OVERLAP:
             sm_state = self.begin_pass(sm_state, fast_bw_util)
             return sm_state, report
         return self.run_pass(sm_state, fast_bw_util)
+
+    def _scrub(self) -> None:
+        integ = self.store.integrity
+        if not integ.enabled or self.cfg.scrub_pages <= 0:
+            return
+        for t, s in integ.scrub(self.store, self.cfg.scrub_pages):
+            self.store.quarantine_slot(t, s, reason="scrub")
 
     # =========================================================================
     # synchronous pass
@@ -380,7 +428,9 @@ class MemosManager:
         return order[0] if order else self.store.hierarchy.deepest
 
     def _plan_execute_finish(self, summary, wear_pressure: bool,
-                             spilling: bool, spill_dst: int) -> MemosReport:
+                             spilling: bool, spill_dst: int, *,
+                             fault_fallback: str | None = None
+                             ) -> MemosReport:
         """Steps 3-6 of the pass against *live* state: plan placement,
         execute migrations, spill, close telemetry — the synchronous
         path."""
@@ -409,7 +459,7 @@ class MemosManager:
             spilled = st.migrated
 
         return self._finish_pass(decision, stats, spilled, summary,
-                                 wear_pressure)
+                                 wear_pressure, fault_fallback=fault_fallback)
 
     def _finish_pass(self, decision, stats: MigrationStats, spilled: int,
                      summary, wear_pressure: bool, *,
@@ -418,7 +468,8 @@ class MemosManager:
                      pages_degraded: int = 0,
                      pages_dropped: int = 0,
                      plan_ms: float = 0.0,
-                     overlap_efficiency: float | None = None) -> MemosReport:
+                     overlap_efficiency: float | None = None,
+                     fault_fallback: str | None = None) -> MemosReport:
         """Close the pass: adaptive interval, telemetry windows, report."""
         # adaptive interval (Sec. 7.4): grow when the plan barely changes
         tgt = np.asarray(decision.target_tier)
@@ -468,8 +519,21 @@ class MemosManager:
             pages_dropped=pages_dropped,
             plan_ms=plan_ms,
             overlap_efficiency=overlap_efficiency,
+            fault_fallback=fault_fallback,
         )
         self.reports.append(report)
+        # ladder health: a watchdog fallback or any failed migration
+        # group demotes one rung; otherwise the pass feeds the breaker's
+        # healthy streak
+        # (dirty-page retry exhaustion is normal churn, not a fault —
+        # stats.failed only moves under injection or integrity failures,
+        # so a fault-free run records healthy passes exclusively)
+        if fault_fallback is not None:
+            self.ladder.record_failure(f"plan:{fault_fallback}")
+        elif stats.failed > 0:
+            self.ladder.record_failure("migration")
+        else:
+            self.ladder.record_healthy()
         self._publish_metrics(report, summary)
         return report
 
@@ -505,6 +569,9 @@ class MemosManager:
                     report.overlap_efficiency)
         reg.gauge("memos.interval", "current adaptive pass interval").set(
             self.interval)
+        reg.gauge("faults.ladder_rung",
+                  "degradation rung: 2=overlap 1=sync 0=memos-off").set(
+                      self.ladder.rung)
         reg.gauge("memos.bank_imbalance",
                   "stddev of per-bank access frequency").set(
                       report.bank_imbalance)
@@ -541,12 +608,26 @@ class MemosManager:
                 spilling=self.balancer.update(fast_bw_util),
                 spill_dst=self._spill_dst(),
             )
+            ticket.future = self._submit_plan(ticket)
+            self._ticket = ticket
+        return sm_state
+
+    def _submit_plan(self, ticket: _PlanTicket) -> Future:
+        """Hand the plan to the worker pool, respawning the executor once
+        if it died (watchdog shutdown, external kill); if the respawn
+        also cannot accept work, return a pre-failed future so the next
+        commit takes the synchronous fallback instead of deadlocking."""
+        for _ in range(2):
             if self._executor is None:
                 self._executor = ThreadPoolExecutor(
                     max_workers=1, thread_name_prefix="memos-plan")
-            ticket.future = self._executor.submit(self._plan_job, ticket)
-            self._ticket = ticket
-        return sm_state
+            try:
+                return self._executor.submit(self._plan_job, ticket)
+            except RuntimeError:          # executor already shut down
+                self._executor = None
+        f: Future = Future()
+        f.set_exception(RuntimeError("memos plan executor unavailable"))
+        return f
 
     def _plan_job(self, t: _PlanTicket):
         """Worker-thread plan phase: classification + placement +
@@ -558,6 +639,7 @@ class MemosManager:
         # with tracing off
         t.plan_t0_ns = time.monotonic_ns()
         with obs.span("memos.plan", step=t.step):
+            get_injector().maybe_plan_fault()
             penalty = self.cfg.wear_penalty if t.wear_pressure else 0.0
             decision = plan(t.summary, t.view.tier.copy(),
                             max_migrations=self.cfg.max_migrations,
@@ -603,8 +685,14 @@ class MemosManager:
         # result was hidden under the dispatch; time we block in result()
         # is exposed
         t_commit0 = time.monotonic_ns()
+        try:
+            decision, plans, spill_plan = t.future.result(
+                timeout=self.cfg.plan_timeout_s)
+        except FutureTimeout:
+            return self._plan_fault_fallback(t, "timeout")
+        except Exception as e:        # worker raised (injected or real)
+            return self._plan_fault_fallback(t, type(e).__name__)
         with obs.span("memos.commit", step=t.step) as sp:
-            decision, plans, spill_plan = t.future.result()
             if self._mid_plan_hook is not None:
                 self._mid_plan_hook(self, decision, plans)
             all_plans = plans + ([spill_plan] if spill_plan is not None
@@ -666,6 +754,27 @@ class MemosManager:
                                  pages_dropped=dropped,
                                  plan_ms=plan_dur / 1e6,
                                  overlap_efficiency=eff)
+
+    def _plan_fault_fallback(self, t: _PlanTicket,
+                             reason: str) -> MemosReport:
+        """Watchdog path: the worker-thread plan hung past
+        ``plan_timeout_s`` or died with an exception.  Abandon the future
+        (a hung worker keeps its thread; the executor is shut down
+        without waiting and lazily respawned by the next ``begin_pass``),
+        close the dirty-page epoch the snapshot opened, and run the whole
+        pass synchronously against live state — the serving loop never
+        stalls on a dead planner.  The pass is recorded as recovered and
+        demotes the degradation ladder via ``fault_fallback``."""
+        with obs.span("memos.plan_fallback", step=t.step, reason=reason):
+            t.future.cancel()
+            if self._executor is not None:
+                self._executor.shutdown(wait=False, cancel_futures=True)
+                self._executor = None
+            self.store.end_dirty_epoch()
+            note_recovered("plan_fallback")
+            return self._plan_execute_finish(t.summary, t.wear_pressure,
+                                             t.spilling, t.spill_dst,
+                                             fault_fallback=reason)
 
     def flush(self) -> MemosReport | None:
         """Commit any in-flight plan (end of serving / shutdown)."""

@@ -52,6 +52,7 @@ onto wear-leveled pools may differ from the reference's interleaving.)
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterable
 
@@ -60,6 +61,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.faults.errors import TransientMigrationFault
+from repro.faults.injector import get_injector, note_recovered
 
 from . import placement
 from .tiers import NO_SLOT, TierStore, _pad_idx_np, _pad_pages, _pow2
@@ -91,6 +94,8 @@ class MigrationStats:
     migrated: int = 0
     dirty_discards: int = 0
     retries: int = 0
+    retries_exhausted: int = 0    # pages still dirty at the retry cap
+    failed: int = 0               # pages dropped by exhausted move faults
     bytes_moved: int = 0
     to_fast: int = 0              # moves into tier 0
     to_slow: int = 0              # moves into any slower tier
@@ -105,6 +110,8 @@ class MigrationStats:
         self.migrated += other.migrated
         self.dirty_discards += other.dirty_discards
         self.retries += other.retries
+        self.retries_exhausted += other.retries_exhausted
+        self.failed += other.failed
         self.bytes_moved += other.bytes_moved
         self.to_fast += other.to_fast
         self.to_slow += other.to_slow
@@ -118,6 +125,8 @@ class MigrationStats:
             "migrated": self.migrated,
             "dirty_discards": self.dirty_discards,
             "retries": self.retries,
+            "retries_exhausted": self.retries_exhausted,
+            "failed": self.failed,
             "bytes_moved": self.bytes_moved,
             "to_fast": self.to_fast,
             "to_slow": self.to_slow,
@@ -135,6 +144,8 @@ class MigrationStats:
             migrated=int(d.get("migrated", 0)),
             dirty_discards=int(d.get("dirty_discards", 0)),
             retries=int(d.get("retries", 0)),
+            retries_exhausted=int(d.get("retries_exhausted", 0)),
+            failed=int(d.get("failed", 0)),
             bytes_moved=int(d.get("bytes_moved", 0)),
             to_fast=int(d.get("to_fast", 0)),
             to_slow=int(d.get("to_slow", 0)),
@@ -551,14 +562,26 @@ def _classify(st: MigrationStats, dst_tier: int, n: int) -> None:
         st.to_slow += n
 
 
+def _note_retries_exhausted(st: MigrationStats, n: int) -> None:
+    """Pages still dirty when the optimistic retry cap hit: dropped this
+    pass (a later pass re-plans them) rather than livelocking the loop."""
+    if n:
+        st.retries_exhausted += n
+        obs.get_registry().counter(
+            "migrate.retries_exhausted",
+            "pages dropped at the optimistic dirty-retry cap").inc(n)
+
+
 # =============================================================================
 # reference engine (numpy per-page loop) — the parity oracle
 # =============================================================================
 
 class MigrationEngine:
-    def __init__(self, store: TierStore, *, max_retries: int = 3):
+    def __init__(self, store: TierStore, *, max_retries: int = 3,
+                 retry_backoff_s: float = 1e-3):
         self.store = store
         self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
         self.stats = MigrationStats()
 
     def _target_color(self, dst_tier: int, bank_freq: np.ndarray | None,
@@ -617,6 +640,9 @@ class MigrationEngine:
                 break
             if attempt > 0:
                 st.retries += 1
+                # bounded exponential backoff: give the writer that keeps
+                # dirtying these pages a chance to move off them
+                time.sleep(self.retry_backoff_s * (1 << (attempt - 1)))
             # 1) snapshot versions, 2) unlocked bulk copy to staging
             vsnap = {p: int(self.store.version[p]) for p in pending}
             staged = {p: self.store.read_page(p) for p in pending}
@@ -650,6 +676,7 @@ class MigrationEngine:
                 _classify(st, dst_tier, 1)
                 st.note_move(old_tier, dst_tier)
             pending = dirty
+        _note_retries_exhausted(st, len(pending))
         self.stats.merge(st)
         return st
 
@@ -679,10 +706,11 @@ class BatchedMigrationEngine:
     """
 
     def __init__(self, store: TierStore, *, max_retries: int = 3,
-                 chunk_pages: int = 64):
+                 chunk_pages: int = 64, retry_backoff_s: float = 1e-3):
         self.store = store
         self.max_retries = max_retries
         self.chunk_pages = max(1, int(chunk_pages))
+        self.retry_backoff_s = retry_backoff_s
         self.stats = MigrationStats()
 
     # -- bulk staging ----------------------------------------------------------
@@ -739,12 +767,32 @@ class BatchedMigrationEngine:
         inside the jax runtime — gather + donated scatter, with int8
         quantization fused into the pinned pool's scatter — the
         device<->numpy-host pairs go through chunked staging, and
-        host->host is one vectorized numpy copy."""
+        host->host is one vectorized numpy copy.
+
+        Injected transient faults retry with exponential backoff up to
+        ``max_retries``; past the cap :class:`TransientMigrationFault`
+        escapes and the caller drops the group for this pass.  Injection
+        fires *before* any data moves, so a failed attempt never leaves
+        a half-written group."""
         store = self.store
         src_dev = store.is_addressable_tier(src_tier)
         dst_dev = store.is_addressable_tier(dst_tier)
+        inj = get_injector()
+        attempts = (self.max_retries + 1) if inj.enabled else 1
         with obs.span("migrate.move_group", src=src_tier, dst=dst_tier,
                       pages=int(len(src_slots))):
+            for a in range(attempts):
+                try:
+                    inj.maybe_migration_fault(src_tier, dst_tier,
+                                              int(len(src_slots)))
+                except TransientMigrationFault:
+                    if a + 1 >= attempts:
+                        raise
+                    time.sleep(self.retry_backoff_s * (1 << a))
+                    continue
+                if a:
+                    note_recovered("migrate_retry")
+                break
             if src_dev and dst_dev:
                 staged = store.gather_device(src_tier, src_slots)
                 store.scatter_device(dst_tier, dst_slots, staged)
@@ -758,27 +806,70 @@ class BatchedMigrationEngine:
                 staged = store.host_read_batch(src_tier, src_slots)
                 store.host_write_batch(dst_tier, dst_slots, staged)
 
+    # -- integrity pre-flight --------------------------------------------------
+    def _preflight_verify(self, plan: MigrationPlan,
+                          st: MigrationStats) -> MigrationPlan:
+        """Verify checksums of the plan's covered-tier source pages before
+        any data moves: a corrupt page's slot is quarantined (owner fails
+        cleanly), its reserved destination slot freed, and the plan
+        shrunk — corrupted bits are never copied forward into a faster
+        tier.  No-op while integrity is disarmed."""
+        store = self.store
+        if not store.integrity.enabled or len(plan) == 0:
+            return plan
+        keep = np.ones(len(plan), bool)
+        for src_t in np.unique(plan.src_tiers):
+            t = int(src_t)
+            if store.is_device_tier(t):
+                continue
+            idx = np.nonzero(plan.src_tiers == src_t)[0]
+            bad = set(store.integrity.verify(store, t, plan.src_slots[idx]))
+            for i in idx:
+                if int(plan.src_slots[i]) in bad:
+                    keep[i] = False
+                    st.failed += 1
+                    store.quarantine_slot(t, int(plan.src_slots[i]),
+                                          "promotion-preflight")
+                    store.alloc[plan.dst_tier].free(int(plan.dst_slots[i]), 0)
+        return plan if keep.all() else subset_plan(plan, keep)
+
     # -- plan execution --------------------------------------------------------
     def execute_plan(self, plan: MigrationPlan) -> MigrationStats:
         """Apply a reserved plan as one bulk move per source tier (locked
-        semantics: commit unconditionally)."""
+        semantics: commit unconditionally).  Groups whose move faults past
+        the retry cap are dropped from the commit — their pages stay in
+        the source tier, their reservations are returned."""
         st = MigrationStats()
-        k = len(plan)
         store = self.store
         if plan.reads_by_tier:
             # optimistic plans stage every *pending* page before the dirty
             # check — charge the reads the synchronous unlocked copy would
             for t, n in plan.reads_by_tier.items():
                 store.reads_from[int(t)] += int(n)
+        plan = self._preflight_verify(plan, st)
+        k = len(plan)
         if k:
+            keep = np.ones(k, bool)
             for src_t in np.unique(plan.src_tiers):
                 idx = np.nonzero(plan.src_tiers == src_t)[0]
-                self._move_group(int(src_t), plan.dst_tier,
-                                 plan.src_slots[idx], plan.dst_slots[idx])
+                try:
+                    self._move_group(int(src_t), plan.dst_tier,
+                                     plan.src_slots[idx], plan.dst_slots[idx])
+                except TransientMigrationFault:
+                    keep[idx] = False
+                    st.failed += idx.size
+                    for i in idx:
+                        store.alloc[plan.dst_tier].free(
+                            int(plan.dst_slots[i]), 0)
+                    continue
                 if not plan.reads_by_tier:
                     store.reads_from[int(src_t)] += idx.size
                 st.note_move(int(src_t), plan.dst_tier, idx.size)
-            store.commit_moves(plan.pages, plan.dst_tier, plan.dst_slots)
+            if not keep.all():
+                plan = subset_plan(plan, keep)
+                k = len(plan)
+            if k:
+                store.commit_moves(plan.pages, plan.dst_tier, plan.dst_slots)
         st.migrated = k + plan.trivial
         st.bytes_moved = (k + plan.trivial) * store.page_nbytes
         _classify(st, plan.dst_tier, st.migrated)
@@ -812,12 +903,27 @@ class BatchedMigrationEngine:
             [int(p) for p in dict.fromkeys(int(p) for p in pages)
              if int(store.tier[p]) != dst_tier
              and int(store.slot[p]) != NO_SLOT], np.int64)
+        if store.integrity.enabled and pending.size:
+            # promotion pre-flight: quarantine corrupt source pages (their
+            # slot drops to NO_SLOT) before anything is staged
+            for t in np.unique(store.tier[pending]):
+                t = int(t)
+                if store.is_device_tier(t):
+                    continue
+                sel = pending[store.tier[pending] == t]
+                for s in store.integrity.verify(store, t, store.slot[sel]):
+                    st.failed += 1
+                    store.quarantine_slot(t, int(s), "promotion-preflight")
+            pending = pending[store.slot[pending] != NO_SLOT]
         bank_freq = None if bank_freq is None else np.array(bank_freq)
         for attempt in range(self.max_retries + 1):
             if pending.size == 0:
                 break
             if attempt > 0:
                 st.retries += 1
+                # bounded exponential backoff: let the writer that keeps
+                # dirtying these pages move off them before the re-stage
+                time.sleep(self.retry_backoff_s * (1 << (attempt - 1)))
             # 1) snapshot versions, 2) unlocked bulk copy to staging —
             # one gather/read per source tier, all before the dirty check.
             # device->device staging never leaves the accelerator (the
@@ -870,6 +976,7 @@ class BatchedMigrationEngine:
             if commit_idx:
                 idx = np.asarray(commit_idx, np.int64)
                 slots = np.asarray(dst_slots, np.int64)
+                ok = np.ones(idx.size, bool)
                 for src_t, gidx in groups.items():
                     m = src_tiers[idx] == src_t
                     sel = idx[m]                         # pending positions
@@ -885,20 +992,59 @@ class BatchedMigrationEngine:
                         # scatter pads its slot vector the same way)
                         vals = buf[jnp.asarray(_pad_idx_np(li), jnp.int32)]
                     sslots = slots[m]
-                    if not dst_dev:
-                        store.host_write_batch(dst_tier, sslots, vals)
-                    elif store.is_addressable_tier(src_t):
-                        store.scatter_device(dst_tier, sslots, vals)
-                    else:
-                        self._stage_host_to_device(dst_tier, sslots, vals)
+                    try:
+                        self._commit_group_write(src_t, dst_tier, sslots,
+                                                 vals, dst_dev)
+                    except TransientMigrationFault:
+                        # move faulted past the retry cap: return the
+                        # reservations, leave the pages where they are
+                        # (a later pass re-plans them)
+                        ok[m] = False
+                        st.failed += int(sel.size)
+                        for s_ in sslots:
+                            store.alloc[dst_tier].free(int(s_), 0)
+                        continue
                     st.note_move(src_t, dst_tier, int(sel.size))
-                store.commit_moves(pending[idx], dst_tier, slots)
-                st.migrated += idx.size
-                st.bytes_moved += idx.size * store.page_nbytes
-                _classify(st, dst_tier, idx.size)
+                if not ok.all():
+                    idx, slots = idx[ok], slots[ok]
+                if idx.size:
+                    store.commit_moves(pending[idx], dst_tier, slots)
+                    st.migrated += idx.size
+                    st.bytes_moved += idx.size * store.page_nbytes
+                    _classify(st, dst_tier, idx.size)
             pending = pending[dirty_mask]
+        _note_retries_exhausted(st, int(pending.size))
         self.stats.merge(st)
         return st
+
+    def _commit_group_write(self, src_tier: int, dst_tier: int,
+                            dst_slots: np.ndarray, vals,
+                            dst_dev: bool) -> None:
+        """One optimistic-commit group write, behind the same injected
+        fault + retry-with-backoff discipline as :meth:`_move_group`
+        (injection fires before the write, so a retried attempt never
+        double-writes)."""
+        inj = get_injector()
+        attempts = (self.max_retries + 1) if inj.enabled else 1
+        for a in range(attempts):
+            try:
+                inj.maybe_migration_fault(src_tier, dst_tier,
+                                          int(len(dst_slots)))
+            except TransientMigrationFault:
+                if a + 1 >= attempts:
+                    raise
+                time.sleep(self.retry_backoff_s * (1 << a))
+                continue
+            if a:
+                note_recovered("migrate_retry")
+            break
+        store = self.store
+        if not dst_dev:
+            store.host_write_batch(dst_tier, dst_slots, vals)
+        elif store.is_addressable_tier(src_tier):
+            store.scatter_device(dst_tier, dst_slots, vals)
+        else:
+            self._stage_host_to_device(dst_tier, dst_slots, vals)
 
     # -- policy-selected execution ---------------------------------------------
     def execute(self, decision: placement.PlacementDecision,

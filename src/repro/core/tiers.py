@@ -49,6 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.faults.injector import get_injector
+from repro.faults.integrity import PageIntegrity
 from repro.kernels.page_gather import (page_gather, page_gather_dequant,
                                        page_gather_quant, page_scatter,
                                        page_scatter_quant)
@@ -488,6 +490,14 @@ class TierStore:
             if spec.wear_leveling:
                 self.leveler_by_tier[i] = StartGapLeveler(
                     self.wear_by_tier[i], spec.gap_write_interval)
+        # page integrity + bad-slot quarantine (armed only while the
+        # global fault injector is — zero-cost dead branches otherwise)
+        self.integrity = PageIntegrity(enabled=get_injector().enabled)
+        self.quarantined: dict[int, set[int]] = {
+            t: set() for t in range(self.n_tiers)}
+        # pages unbound by a quarantine since the last drain; the serving
+        # engine reads this back to fail the owning sequences cleanly
+        self.quarantine_log: list[int] = []
 
     # -- two-tier compat surface ----------------------------------------------
     @property
@@ -581,6 +591,9 @@ class TierStore:
                  color_mask: int | None = None) -> bool:
         """Bind a logical page to a fresh slot in ``tier``."""
         assert self.slot[page] == NO_SLOT, f"page {page} already allocated"
+        inj = get_injector()
+        if inj.enabled and inj.maybe_alloc_fail(tier):
+            return False               # injected pool-exhaustion pressure
         s = self.alloc[tier].alloc(0, color, color_mask)
         if s is None:
             return False
@@ -592,9 +605,38 @@ class TierStore:
     def release(self, page: int) -> None:
         s = int(self.slot[page])
         if s != NO_SLOT:
-            self.alloc[int(self.tier[page])].free(s, 0)
+            t = int(self.tier[page])
+            self.alloc[t].free(s, 0)
+            self.integrity.drop(t, [s])
             self.slot[page] = NO_SLOT
             self._mark_dirty_one(page)
+
+    def quarantine_slot(self, tier: int, slot: int,
+                        reason: str = "") -> bool:
+        """Retire a failing slot: permanently withhold it from the tier's
+        allocator, unbind any page living in it (recorded in
+        ``quarantine_log`` so the serving engine can fail the owner
+        cleanly), and drop its checksum.  Returns False if the slot was
+        already quarantined or no longer allocated."""
+        slot = int(slot)
+        if slot in self.quarantined[tier]:
+            return False
+        if not self.alloc[tier].retire(slot):
+            return False               # freed since detection: nothing to do
+        self.quarantined[tier].add(slot)
+        self.integrity.drop(tier, [slot])
+        pages = np.nonzero((self.tier == tier) & (self.slot == slot))[0]
+        for p in pages:
+            self.slot[p] = NO_SLOT     # page is gone, not just cold
+            self._mark_dirty_one(int(p))
+            self.quarantine_log.append(int(p))
+        from repro import obs
+        from repro.faults.injector import note_recovered
+        reg = obs.get_registry()
+        reg.counter("faults.quarantined_slots",
+                    "slots retired by quarantine").inc()
+        note_recovered("quarantine")
+        return True
 
     # -- data access ----------------------------------------------------------
     def write_page(self, page: int, value) -> None:
@@ -647,6 +689,7 @@ class TierStore:
         p = slot if w is None else w.phys_one(slot)
         self.pools[tier].write_one(p, value)
         self._account_host_writes(tier, np.asarray([p]))
+        self.integrity.record(self, tier, [slot])
 
     def _host_read(self, tier: int, slot: int) -> np.ndarray:
         w = self.wear_by_tier.get(tier)
@@ -672,6 +715,7 @@ class TierStore:
             phys = self._phys(tier, np.asarray(slots, np.int64))
             self.pools[tier].scatter(phys, pages)
             self._account_host_writes(tier, phys)
+            self.integrity.record(self, tier, slots)
             return
         self.pools[tier].scatter(slots, pages)
 
@@ -695,6 +739,7 @@ class TierStore:
         phys = self._phys(tier, np.asarray(slots, np.int64))
         self.pools[tier].write_batch(phys, np.asarray(values, np.float32))
         self._account_host_writes(tier, phys)
+        self.integrity.record(self, tier, slots)
 
     # deepest-tier compat names
     def slow_read_batch(self, slots: np.ndarray) -> np.ndarray:
@@ -787,6 +832,7 @@ class TierStore:
             "commit_moves: page already in the destination tier"
         for p, s in zip(pages, self.slot[pages]):
             self.alloc[int(self.tier[p])].free(int(s), 0)
+            self.integrity.drop(int(self.tier[p]), [int(s)])
         self.tier[pages] = dst_tier
         self.slot[pages] = new_slots
         self._mark_dirty(pages)
@@ -818,6 +864,7 @@ class TierStore:
         else:
             self._host_write(dst_tier, new_slot, data)
         self.alloc[src_tier].free(old_slot, 0)
+        self.integrity.drop(src_tier, [old_slot])
         self.tier[page] = dst_tier
         self.slot[page] = new_slot
         self._mark_dirty_one(page)

@@ -1,0 +1,25 @@
+"""Fault injection + graceful degradation (the self-healing layer).
+
+``faults.configure(FaultConfig(...))`` arms the global seeded injector;
+with it disarmed (the default, and after ``faults.reset()``) every
+injection site is a dead branch and all serving/memos/migration paths
+are bit-identical to an injection-free build.  See ``injector.py`` for
+the four injection sites, ``integrity.py`` for the checksum/scrub/
+quarantine detection layer, ``degradation.py`` for the overlap → sync
+→ memos-off ladder, and ``errors.py`` for who recovers from what.
+"""
+from .degradation import (RUNG_OFF, RUNG_OVERLAP, RUNG_SYNC,
+                          DegradationLadder)
+from .errors import (CapacityError, FaultError, InjectedPlanFault,
+                     PageCorruptionError, TransientMigrationFault)
+from .injector import (FaultConfig, FaultInjector, configure, get_injector,
+                       note_recovered, reset)
+from .integrity import PageIntegrity
+
+__all__ = [
+    "FaultConfig", "FaultInjector", "configure", "get_injector", "reset",
+    "note_recovered", "PageIntegrity", "DegradationLadder",
+    "RUNG_OFF", "RUNG_SYNC", "RUNG_OVERLAP",
+    "FaultError", "CapacityError", "PageCorruptionError",
+    "InjectedPlanFault", "TransientMigrationFault",
+]

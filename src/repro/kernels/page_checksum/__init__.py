@@ -1,0 +1,4 @@
+from .ops import page_checksum
+from .ref import checksum_np, page_checksum_ref
+
+__all__ = ["page_checksum", "page_checksum_ref", "checksum_np"]

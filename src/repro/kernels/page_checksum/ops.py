@@ -1,0 +1,37 @@
+"""Dispatching wrapper for the page-checksum kernel.
+
+Same three-path dispatch as ``page_gather``: Pallas compiled on TPU,
+``interpret=True`` for kernel-parity tests, and a jitted XLA
+gather+reference fallback everywhere else (interpreter-mode Pallas
+loops the grid in Python — far too slow to sit on the scrub path of a
+CPU host).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .page_checksum import page_checksum_pallas
+from .ref import page_checksum_ref
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _checksum_pallas(pool, idx, *, interpret: bool):
+    return page_checksum_pallas(pool, idx, interpret=interpret)
+
+
+@jax.jit
+def _checksum_xla(pool, idx):
+    return page_checksum_ref(jnp.take(pool, idx, axis=0))
+
+
+def page_checksum(pool, idx, *, interpret: bool | None = None):
+    """checksums[i] = checksum(pool[idx[i]]).  idx: int [k] -> uint32 [k]."""
+    idx = idx.astype(jnp.int32)
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return _checksum_xla(pool, idx)
+        interpret = False
+    return _checksum_pallas(pool, idx, interpret=interpret)

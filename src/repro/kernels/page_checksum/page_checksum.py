@@ -1,0 +1,57 @@
+"""Per-page integrity checksum Pallas TPU kernel.
+
+Companion to the ``page_gather`` data mover: where gather packs pages
+for a tier move, this kernel folds each page's stored bits into one
+uint32 position-weighted checksum (definition + detection proof in
+ref.py).  Same scalar-prefetch DMA pipeline — the checksum of page i
+computes while page i+1's block streams in — so a scrub or a
+promotion pre-flight verify costs one dispatch over the slot list
+instead of a host round-trip per page.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import _UINT_JNP
+
+
+def _checksum_kernel(idx_ref, src_ref, out_ref, *, uint_dtype):
+    u = jax.lax.bitcast_convert_type(src_ref[...], uint_dtype)
+    u = u.astype(jnp.uint32)
+    # linear element index via per-dim broadcasted iotas (TPU forbids 1D
+    # iota); the leading block dim is 1 so its iota contributes nothing
+    lin = jnp.zeros(u.shape, jnp.uint32)
+    stride = 1
+    for d in range(u.ndim - 1, -1, -1):
+        lin = lin + jax.lax.broadcasted_iota(jnp.uint32, u.shape, d) \
+            * jnp.uint32(stride)
+        stride *= u.shape[d]
+    s = jnp.sum(u * (2 * lin + 1))
+    out_ref[...] = jnp.full(out_ref.shape, s, jnp.uint32)
+
+
+def page_checksum_pallas(pool: jnp.ndarray, idx: jnp.ndarray,
+                         *, interpret: bool = False) -> jnp.ndarray:
+    """pool: [n_slots, *page_shape]; idx: int32 [k] -> uint32 [k]."""
+    from functools import partial
+
+    k = idx.shape[0]
+    page_shape = pool.shape[1:]
+    blk = (1, *page_shape)
+    zeros = (0,) * len(page_shape)
+    itemsize = jnp.dtype(pool.dtype).itemsize
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec(blk, lambda i, idx: (idx[i], *zeros))],
+        out_specs=pl.BlockSpec((1,), lambda i, idx: (i,)),
+    )
+    return pl.pallas_call(
+        partial(_checksum_kernel, uint_dtype=_UINT_JNP[itemsize]),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.uint32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), pool)

@@ -1,0 +1,50 @@
+"""Reference page-checksum implementations (pure jnp + numpy).
+
+The checksum is a position-weighted sum over the page's *stored bit
+pattern*: view the page as unsigned integers u[0..N) of the element
+width, then
+
+    checksum(page) = sum_i u[i] * (2*i + 1)   (mod 2**32)
+
+Every weight 2*i+1 is odd, so flipping bit b of element i changes the
+sum by +-2**b * (2*i+1) — a value whose 2-adic valuation is exactly b.
+For element widths <= 32 bits that is never 0 mod 2**32, so **any
+single-bit flip is guaranteed detected** (the property test in
+tests/test_faults.py exercises this exhaustively).  Arithmetic is done
+in uint32 with natural wraparound, which IS the mod-2**32 reduction —
+numpy, XLA, and the Pallas kernel all agree bit for bit.
+
+Checksums are computed over the raw stored representation (uint16 for
+bf16 host pages, int8 for quantized pools, uint32 for f32), never over
+decoded floats: integrity tracks media bits, not values.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_UINT_NP = {1: np.uint8, 2: np.uint16, 4: np.uint32}
+_UINT_JNP = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+
+
+def checksum_np(pages: np.ndarray) -> np.ndarray:
+    """pages: [k, *page_shape] (any <=4-byte dtype) -> uint32 [k]."""
+    itemsize = pages.dtype.itemsize
+    if itemsize not in _UINT_NP:
+        raise TypeError(f"unsupported element width {itemsize} bytes")
+    u = np.ascontiguousarray(pages).view(_UINT_NP[itemsize])
+    u = u.reshape(pages.shape[0], -1).astype(np.uint32)
+    w = (2 * np.arange(u.shape[1], dtype=np.uint32) + 1)
+    return (u * w[None, :]).sum(axis=1, dtype=np.uint32)
+
+
+def page_checksum_ref(pages: jnp.ndarray) -> jnp.ndarray:
+    """pages: [k, *page_shape] -> uint32 [k] (pure jnp, jit-safe)."""
+    itemsize = jnp.dtype(pages.dtype).itemsize
+    if itemsize not in _UINT_JNP:
+        raise TypeError(f"unsupported element width {itemsize} bytes")
+    u = jax.lax.bitcast_convert_type(pages, _UINT_JNP[itemsize])
+    u = u.reshape(pages.shape[0], -1).astype(jnp.uint32)
+    w = (2 * jnp.arange(u.shape[1], dtype=jnp.uint32) + 1)
+    return jnp.sum(u * w[None, :], axis=1)

@@ -50,6 +50,9 @@ from repro.configs.base import ArchConfig
 from repro.core import sysmon as sysmon_mod
 from repro.core.hierarchy import MemoryHierarchy
 from repro.core.memos import MemosConfig, MemosManager
+from repro.core.tiers import NO_SLOT
+from repro.faults.errors import CapacityError, PageCorruptionError
+from repro.faults.injector import get_injector, note_recovered
 from repro.kernels.paged_attention import paged_attention, paged_attention_pages
 from repro.kernels.wear_update import wear_update
 from repro.models import attention as attn_mod
@@ -201,6 +204,56 @@ class PagedServingEngine:
                 break
             self.memos.engine.migrate_optimistic(still, dst)
         return True
+
+    # -- fault handling (repro.faults) -----------------------------------------
+    def _fail_request(self, req: Request, err: Exception) -> None:
+        """Terminally fail one request with a structured error: release
+        its pages (quarantined pages have no slot left — ``release`` is a
+        no-op for them and only the logical id returns) and retire it
+        through the scheduler so the batch keeps serving."""
+        for pid in req.pages:
+            self.kv.free_page(pid)
+        req.pages = []
+        self.batcher.fail(req, self.step_count, err)
+        obs.get_registry().counter(
+            "serving.failed_requests",
+            "requests retired with a structured error").inc()
+
+    def _drain_faults(self) -> None:
+        """Fail every sequence owning a page the store quarantined since
+        the last drain (scrub, promotion pre-flight, pre-dispatch verify)
+        — the page's bits are unrecoverable, so the owner errors cleanly
+        instead of ever serving from a corrupt page."""
+        store = self.kv.store
+        if not store.quarantine_log:
+            return
+        bad = set(store.quarantine_log)
+        store.quarantine_log.clear()
+        everyone = (self.batcher.active + list(self.batcher.preempted)
+                    + list(self.batcher.waiting))
+        for req in everyone:
+            hit = sorted(bad.intersection(req.pages))
+            if hit:
+                self._fail_request(req, PageCorruptionError(
+                    f"request {req.rid}: page(s) {hit} lost to media "
+                    f"corruption", rid=req.rid, pages=hit))
+
+    def _predispatch_verify(self, active: list[Request]) -> None:
+        """Last line of the zero-corrupted-tokens invariant: before the
+        block tables are built, re-verify the checksum of every page this
+        dispatch would serve out of the pinned-host pool (tier 0 is
+        trusted media; host-tier pages verify on promotion pre-flight
+        instead).  A mismatch quarantines the slot, and the following
+        drain fails the owner before it can attend to the bits."""
+        pt = self.pinned_tier
+        store = self.kv.store
+        if pt is None or not store.integrity.enabled:
+            return
+        slots = {int(store.slot[p]) for r in active for p in r.pages
+                 if int(store.tier[p]) == pt
+                 and int(store.slot[p]) != NO_SLOT}
+        for s in store.integrity.verify(store, pt, sorted(slots)):
+            store.quarantine_slot(pt, s, reason="pre-dispatch")
 
     # -- jitted model compute ------------------------------------------------------
     def _decode_core(self, params, tokens, positions, block_tables,
@@ -596,6 +649,10 @@ class PagedServingEngine:
                       f"scheduler {qn} queue depth").set(qv)
 
     def step(self) -> dict:
+        # 0) fail owners of pages quarantined since the last boundary
+        # (memos-pass scrub, late promotion pre-flights) before admitting
+        # against the shrunken pool
+        self._drain_faults()
         # 1) admit / resume; make room by preempting if promotion fails.
         # A request that fails provisioning twice in one step is making no
         # progress (its blocker holds the pool) — stop admitting and let
@@ -641,19 +698,40 @@ class PagedServingEngine:
         # would thrash
         with obs.span("serve.provision", step=self.step_count) as prov_sp:
             while True:
-                ok = True
+                # promotion pre-flights inside _ensure_pages can
+                # quarantine a corrupt source page: fail its owner now so
+                # the retry below provisions against the survivors
+                self._drain_faults()
+                active = [r for r in active if not r.done]
+                blocked = None
                 for req in active:
                     if not req.preempted and not self._ensure_pages(req, k):
-                        ok = False
+                        blocked = req
                         break
-                if ok:
+                if blocked is None:
                     break
                 if k > 1:
                     k //= 2
                 elif not self._make_room():
-                    raise RuntimeError("HBM+host pools exhausted")
+                    # backpressure floor: even at K=1 with nothing left
+                    # to preempt the pools cannot host this sequence's
+                    # next page — retire it with a structured capacity
+                    # error instead of crashing the whole server
+                    self._fail_request(blocked, CapacityError(
+                        f"request {blocked.rid}: HBM+host pools exhausted "
+                        f"and no preemption victim remains",
+                        rid=blocked.rid, occupancy=self.kv.occupancy()))
+                    note_recovered("backpressure")
             prov_sp.set(k=k)
-        active = [r for r in active if not r.preempted]
+        active = [r for r in active if not r.preempted and not r.done]
+        # pre-dispatch integrity sweep: quarantine any pinned-pool page
+        # whose stored bits drifted since its last checksum, and fail its
+        # owner, *before* the block tables are built — the dispatch never
+        # attends to corrupt bits
+        if get_injector().enabled:
+            self._predispatch_verify(active)
+            self._drain_faults()
+            active = [r for r in active if not r.done]
         if not active:
             self.step_count += 1
             return stats
@@ -828,6 +906,16 @@ class PagedServingEngine:
         else:
             page_reads = self._page_read_counts(positions, page_tables, k)
             store.charge_accesses(page_writes, page_reads)
+        # refresh checksums for pinned-pool rows the dispatch appended to
+        # (the in-scan tail writes bypass the host write paths that
+        # normally record them)
+        if pt is not None and store.integrity.enabled:
+            written = np.nonzero(page_writes > 0)[0]
+            wmask = (store.tier[written] == pt) & \
+                (store.slot[written] != NO_SLOT)
+            if wmask.any():
+                store.integrity.record(
+                    store, pt, np.unique(store.slot[written[wmask]]))
 
         # 5) advance sequences from the returned token block: tokens
         # sampled at inner step s >= emit_from[i] are new generations
@@ -890,6 +978,14 @@ class PagedServingEngine:
             # roll it at dispatch boundaries — otherwise cascade targeting
             # would rank tiers by lifetime-cumulative inflow
             store.roll_traffic_window()
+
+        # 7) fault-injection tick, strictly *after* every write path of
+        # this boundary has recorded its checksums and *before* the next
+        # boundary's pre-dispatch verify — injected corruption always has
+        # a detection point ahead of the next serve
+        inj = get_injector()
+        if inj.enabled:
+            inj.tick(store)
 
         self.step_count += k
         stats["decode_block"] = k

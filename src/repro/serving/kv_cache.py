@@ -193,6 +193,7 @@ class PagedKVCache:
             pool.data = pool.data.at[phys, :, :, offset].set(
                 layer_kv.astype(pool.data.dtype))
             self.store._account_host_writes(t, np.asarray([phys]))
+            self.store.integrity.record(self.store, t, [slot])
         else:
             page = self.store._host_read(t, slot)
             page[:, :, offset] = np.asarray(layer_kv, np.float32)

@@ -30,6 +30,10 @@ class Request:
     preempted: bool = False
     start_step: int | None = None
     finish_step: int | None = None
+    # terminal failure (CapacityError, PageCorruptionError, ...): the
+    # request retired without completing; ``generated`` holds whatever
+    # was produced before the fault
+    error: Exception | None = None
 
     @property
     def pos(self) -> int:
@@ -88,6 +92,23 @@ class ContinuousBatcher:
         if req.slot is not None:
             self.running.pop(req.slot, None)
         req.slot = None
+        req.done = True
+        req.finish_step = step
+        self.finished.append(req)
+
+    def fail(self, req: Request, step: int, error: Exception) -> None:
+        """Terminally fail a request wherever it sits (running slot,
+        waiting queue, preempted queue): it retires with ``error`` set
+        instead of silently completing or wedging the batch."""
+        if req.slot is not None:
+            self.running.pop(req.slot, None)
+            req.slot = None
+        for q in (self.waiting, self.preempted):
+            try:
+                q.remove(req)
+            except ValueError:
+                pass
+        req.error = error
         req.done = True
         req.finish_step = step
         self.finished.append(req)

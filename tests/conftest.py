@@ -1,0 +1,39 @@
+"""Shared test configuration: a global per-test wall-clock timeout.
+
+pytest-timeout is not available in the pinned environment, so the hang
+guard is a plain SIGALRM: any single test exceeding ``TEST_TIMEOUT_S``
+(default 300 s, override via the env var) fails with a TimeoutError
+instead of wedging the whole suite — the failure mode a fault-injection
+test that deadlocks the async memos worker would otherwise produce.
+Non-main-thread and non-POSIX runs skip the guard silently.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import threading
+
+import pytest
+
+TEST_TIMEOUT_S = int(os.environ.get("TEST_TIMEOUT_S", "300"))
+
+
+@pytest.fixture(autouse=True)
+def _global_test_timeout(request):
+    if (TEST_TIMEOUT_S <= 0 or not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        yield
+        return
+
+    def _trip(signum, frame):
+        raise TimeoutError(
+            f"test exceeded the global {TEST_TIMEOUT_S}s timeout: "
+            f"{request.node.nodeid}")
+
+    prev = signal.signal(signal.SIGALRM, _trip)
+    signal.alarm(TEST_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, prev)

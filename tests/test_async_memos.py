@@ -12,6 +12,8 @@ against a TierStore so nothing else mutates state between boundaries —
 every observable array (page table, pool contents, wear counters,
 traffic, per-pass stats) is compared bit for bit.  Also pins the exact
 token-granular interval accounting of ``maybe_step``."""
+from concurrent.futures import Future
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -21,6 +23,7 @@ from repro.core.memos import MemosConfig, MemosManager
 from repro.core.migration import (StoreView, commit_reservations,
                                   plan_locked)
 from repro.core.tiers import NO_SLOT, TierConfig, TierStore
+from repro.faults import RUNG_OVERLAP, RUNG_SYNC
 
 
 def make_store(seed=0):
@@ -401,6 +404,73 @@ def test_dirty_epoch_never_misses_a_change(seed):
     false_pos = only_charged & dirty
     assert not false_pos, \
         f"in-place dispatch charges dirtied pages {sorted(false_pos)}"
+
+
+# =============================================================================
+# worker death -> watchdog fallback -> breaker re-promotion
+# =============================================================================
+
+def test_worker_death_degrades_to_sync_then_reenables_overlap():
+    """Kill the plan worker mid-flight (executor shut down, future
+    resolving to an error — the process-level analogue of a worker
+    thread dying): the commit must not deadlock — the watchdog falls
+    back to a synchronous pass against live state, the degradation
+    ladder demotes to sync, and after the breaker's healthy streak the
+    pipeline re-promotes, lazily respawning a fresh executor and
+    committing overlapped passes again.  Store stays consistent
+    throughout."""
+    store = make_store()
+    mgr = MemosManager(store, MemosConfig(
+        interval=4, adaptive_interval=False, async_plan=True,
+        breaker_recovery_passes=2))
+    sm = sysmon.init(32, store.cfg.n_banks, store.cfg.n_slabs)
+    rng = np.random.RandomState(7)
+
+    def record4(sm):
+        for _ in range(4):
+            sm = sysmon.record(sm, jnp.asarray(np.arange(6), jnp.int32),
+                               is_write=True)
+            sm = sysmon.record(sm, jnp.asarray(rng.randint(20, 32, 3),
+                                               jnp.int32), is_write=False)
+        return sm
+
+    # pass 1: begin the overlapped pass, then the worker dies
+    sm = record4(sm)
+    sm = mgr.begin_pass(sm)
+    assert mgr._executor is not None
+    mgr._executor.shutdown(wait=True)           # executor gone
+    dead: Future = Future()
+    dead.set_exception(RuntimeError("plan worker died"))
+    mgr._ticket.future = dead
+    rep = mgr.commit_pending()                  # must return, not hang
+    assert rep is not None and rep.fault_fallback == "RuntimeError"
+    assert not rep.committed_async
+    assert mgr.ladder.rung == RUNG_SYNC
+    assert mgr._executor is None and mgr._ticket is None
+    store.end_dirty_epoch()                     # no epoch left open
+    for t in range(store.n_tiers):
+        store.alloc[t].check_consistency()
+    assert_no_double_booking(store)
+
+    # passes 2-3: the rung dispatches synchronously and heals the streak
+    for _ in range(2):
+        sm = record4(sm)
+        sm, rep = mgr.maybe_step(sm, steps=4)
+        assert mgr._ticket is None              # no overlap while demoted
+    assert mgr.ladder.rung == RUNG_OVERLAP
+
+    # pass 4: overlap re-enabled — a fresh executor spawns, the pass
+    # commits through the async path with no fault residue
+    sm = record4(sm)
+    sm, _ = mgr.maybe_step(sm, steps=4)
+    assert mgr._ticket is not None and mgr._executor is not None
+    rep = mgr.flush()
+    assert rep is not None and rep.committed_async
+    assert rep.fault_fallback is None
+    for t in range(store.n_tiers):
+        store.alloc[t].check_consistency()
+    assert_no_double_booking(store)
+    mgr.close()
 
 
 # =============================================================================

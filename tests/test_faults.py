@@ -1,0 +1,446 @@
+"""Fault-injection subsystem: checksums, quarantine, retries, watchdog.
+
+Covers the detection/recovery contract end to end at store and memos
+granularity (the serving-level storm lives in benchmarks/fault_storm.py
+and its CI smoke):
+
+* the page checksum detects every injected single-bit flip across the
+  host storage formats (bf16-as-uint16 numpy pages, float32 numpy pages,
+  int8 pinned jax pages) and never fires on a clean round trip;
+* the injector is deterministic per seed and inert when disabled;
+* bad-slot quarantine retires the slot from the allocator permanently
+  (no re-allocation, no free) while the allocator's partition invariant
+  holds;
+* migration bulk moves retry injected transient faults with backoff and
+  fail closed (reservations returned, pages left in place) when the
+  retry budget is exhausted;
+* the async-plan watchdog converts injected worker exceptions, hangs,
+  and artificial delays into synchronous fallbacks, and the degradation
+  ladder demotes/re-promotes on the configured streaks.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults, obs
+from repro.core import sysmon
+from repro.core.memos import MemosConfig, MemosManager
+from repro.core.migration import make_engine
+from repro.core.tiers import NO_SLOT, StoreConfig, TierConfig, TierStore
+from repro.core.hierarchy import MemoryHierarchy
+from repro.faults import (RUNG_OFF, RUNG_OVERLAP, RUNG_SYNC,
+                          DegradationLadder, FaultConfig, FaultInjector)
+from repro.kernels.page_checksum import checksum_np, page_checksum_ref
+
+
+@pytest.fixture(autouse=True)
+def _clean_global_state():
+    faults.reset()
+    obs.reset()
+    yield
+    faults.reset()
+    obs.reset()
+
+
+def make_store(seed=0, dtype=jnp.float32, enabled=True):
+    """A populated two-tier store (numpy slow pool); the injector must be
+    configured *before* construction — TierStore latches
+    ``get_injector().enabled`` into its PageIntegrity."""
+    if enabled:
+        faults.configure(FaultConfig(seed=seed))
+    store = TierStore(TierConfig(
+        n_pages=32, fast_slots=8, slow_slots=32, page_shape=(8,),
+        dtype=dtype, n_banks=2, n_slabs=4, gap_write_interval=5))
+    rng = np.random.RandomState(seed)
+    for p in range(32):
+        assert store.allocate(p, int(store.tier[p]))
+        store.write_page(p, rng.standard_normal(8).astype(np.float32))
+    return store
+
+
+def make_pinned_store(seed=0, quantize=False):
+    """Two-tier store whose slow pool is a pinned-host jax buffer."""
+    faults.configure(FaultConfig(seed=seed))
+    hier = MemoryHierarchy.two_tier(8, 32, pinned_slow=True,
+                                    quantize_slow=quantize,
+                                    gap_write_interval=5)
+    store = TierStore(StoreConfig(n_pages=32, page_shape=(8,),
+                                  hierarchy=hier, n_banks=2, n_slabs=4))
+    rng = np.random.RandomState(seed)
+    for p in range(32):
+        assert store.allocate(p, int(store.tier[p]))
+        store.write_page(p, rng.standard_normal(8).astype(np.float32))
+    return store
+
+
+def slow_slots_of(store):
+    t = store.hierarchy.deepest
+    live = np.nonzero((store.tier == t) & (store.slot != NO_SLOT))[0]
+    return t, [int(store.slot[p]) for p in live], live
+
+
+# =============================================================================
+# checksum kernel + integrity properties
+# =============================================================================
+
+def test_checksum_ref_matches_numpy_across_dtypes():
+    rng = np.random.RandomState(0)
+    for dt in (np.float32, np.uint16, np.int8):
+        pages = (rng.standard_normal((4, 16)) * 64).astype(dt)
+        np.testing.assert_array_equal(
+            checksum_np(pages), np.asarray(page_checksum_ref(jnp.asarray(pages))))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_checksum_catches_every_flip_host_pool(seed, dtype):
+    """Seeded sweep (hypothesis is unavailable): on bf16-as-uint16 and
+    float32 numpy host pages, every injected single-bit flip is caught by
+    ``verify`` and the un-flipped page never false-positives."""
+    store = make_store(seed=seed, dtype=dtype)
+    t, slots, _ = slow_slots_of(store)
+    assert slots and store.integrity.enabled
+    assert store.integrity.verify(store, t, slots) == []
+    pool = store.pools[t]
+    row_bytes = FaultInjector._row_bytes(pool)
+    rng = np.random.RandomState(100 + seed)
+    for _ in range(20):
+        s = int(rng.choice(slots))
+        phys = int(store._phys(t, np.asarray([s]))[0])
+        byte, bit = int(rng.randint(row_bytes)), int(rng.randint(8))
+        FaultInjector._xor_bit(pool, phys, byte, bit)
+        assert store.integrity.verify(store, t, slots) == [s], \
+            f"missed flip at slot {s} byte {byte} bit {bit}"
+        FaultInjector._xor_bit(pool, phys, byte, bit)    # undo
+        assert store.integrity.verify(store, t, slots) == []
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_checksum_catches_every_flip_pinned_pool(quantize):
+    """Same property on a pinned-host jax pool (native bf16/float32 or
+    fused-int8 rows): the checksum dispatch over stored bits agrees with
+    the record taken at write time, and any single-bit flip breaks it."""
+    store = make_pinned_store(seed=3, quantize=quantize)
+    t, slots, _ = slow_slots_of(store)
+    assert slots and store.integrity.covers(store, t)
+    assert store.integrity.verify(store, t, slots) == []
+    pool = store.pools[t]
+    row_bytes = FaultInjector._row_bytes(pool)
+    rng = np.random.RandomState(9)
+    for _ in range(8):
+        s = int(rng.choice(slots))
+        phys = int(store._phys(t, np.asarray([s]))[0])
+        byte, bit = int(rng.randint(row_bytes)), int(rng.randint(8))
+        FaultInjector._xor_bit(pool, phys, byte, bit)
+        assert store.integrity.verify(store, t, slots) == [s]
+        FaultInjector._xor_bit(pool, phys, byte, bit)
+        assert store.integrity.verify(store, t, slots) == []
+
+
+def test_checksum_stable_under_wear_remap():
+    """Start-Gap physically relocates rows but carries the data: the
+    (tier, logical slot) checksum must survive leveler advances."""
+    store = make_store(seed=4)
+    t, slots, _ = slow_slots_of(store)
+    lv = store.leveler_by_tier.get(t)
+    assert lv is not None
+    # hammer host writes until several gap advances have happened
+    rng = np.random.RandomState(2)
+    _, _, live = slow_slots_of(store)
+    for _ in range(64):
+        p = int(rng.choice(live))
+        store.write_page(p, rng.standard_normal(8).astype(np.float32))
+    assert lv.stats.advances > 0
+    t, slots, _ = slow_slots_of(store)
+    assert store.integrity.verify(store, t, slots) == []
+
+
+def test_scrub_finds_and_injection_disabled_is_inert():
+    store = make_store(seed=5)
+    t, slots, _ = slow_slots_of(store)
+    pool = store.pools[t]
+    phys = int(store._phys(t, np.asarray([slots[0]]))[0])
+    FaultInjector._xor_bit(pool, phys, 0, 3)
+    # round-robin scrub over all recorded slots must surface it
+    bad = []
+    for _ in range(8):
+        bad += store.integrity.scrub(store, budget=8)
+    assert (t, slots[0]) in bad
+    # disabled build: integrity never records, verify/scrub are no-ops
+    faults.reset()
+    store2 = make_store(enabled=False)
+    assert not store2.integrity.enabled and store2.integrity.sums == {}
+    t2, slots2, _ = slow_slots_of(store2)
+    assert store2.integrity.verify(store2, t2, slots2) == []
+    assert store2.integrity.scrub(store2, budget=8) == []
+
+
+# =============================================================================
+# injector determinism + media model
+# =============================================================================
+
+def test_injector_deterministic_per_seed_and_inert_when_disabled():
+    cfg = FaultConfig(seed=11, media_flip_rate=0.2, media_stuck_rate=0.05)
+    outs = []
+    for _ in range(2):
+        store = make_store(seed=1)
+        inj = FaultInjector(cfg)
+        n = sum(inj.tick(store) for _ in range(5))
+        t = store.hierarchy.deepest
+        outs.append((n, dict(inj.counts), store.pools[t].data.copy()))
+    assert outs[0][0] == outs[1][0] > 0
+    assert outs[0][1] == outs[1][1]
+    np.testing.assert_array_equal(outs[0][2], outs[1][2])
+
+    store = make_store(seed=1)
+    t = store.hierarchy.deepest
+    before = store.pools[t].data.copy()
+    off = FaultInjector(None)
+    assert off.tick(store) == 0 and off.total_injected == 0
+    np.testing.assert_array_equal(before, store.pools[t].data)
+
+
+def test_stuck_at_faults_reassert_after_rewrite():
+    store = make_store(seed=6)
+    inj = FaultInjector(FaultConfig(seed=6, media_stuck_rate=0.3))
+    for _ in range(4):
+        inj.tick(store)
+    assert inj.counts["media_stuck"] > 0
+    t = store.hierarchy.deepest
+    tier_faults = inj._stuck.get(t)
+    assert tier_faults, "no stuck-at fault registered on the slow tier"
+    phys, byte, bit, val = tier_faults[0]
+    # rewrite the whole row clean, then tick: the bit re-asserts
+    flat = store.pools[t].data[phys].view(np.uint8).reshape(-1)
+    flat[byte] = np.uint8(0 if val else 0xFF)
+    inj.tick(store)
+    assert (int(flat[byte]) >> bit) & 1 == val
+
+
+def test_wear_bias_targets_worn_slots():
+    """Fault probability scales with per-slot wear: a heavily-worn row
+    collects more flips than pristine rows over many ticks."""
+    store = make_store(seed=7)
+    t = store.hierarchy.deepest
+    w = store.wear_by_tier[t]
+    _, _, live = slow_slots_of(store)
+    hot = int(live[0])
+    hot_phys = int(store._phys(t, store.slot[[hot]].astype(np.int64))[0])
+    w.record_phys(np.repeat(hot_phys, 500))      # pre-worn slot
+    inj = FaultInjector(FaultConfig(seed=7, media_flip_rate=0.02,
+                                    wear_bias=50.0))
+    per_row = np.zeros(store.pools[t].data.shape[0], np.int64)
+    for _ in range(40):
+        before = store.pools[t].data.copy()
+        inj.tick(store)
+        diff = np.nonzero((before != store.pools[t].data).any(axis=1))[0]
+        per_row[diff] += 1
+    assert inj.counts["media_flip"] > 0
+    others = np.delete(per_row, hot_phys)
+    assert per_row[hot_phys] > others.mean() * 2, \
+        f"wear bias ignored: hot row {per_row[hot_phys]} hits vs " \
+        f"per-row mean {others.mean():.1f}"
+
+
+# =============================================================================
+# quarantine + allocator retire
+# =============================================================================
+
+def test_quarantine_retires_slot_and_unbinds_page():
+    store = make_store(seed=8)
+    t, slots, live = slow_slots_of(store)
+    s, owner = slots[0], int(live[0])
+    n_free = store.alloc[t].n_free
+    assert store.quarantine_slot(t, s, reason="test")
+    assert s in store.quarantined[t]
+    assert int(store.slot[owner]) == NO_SLOT
+    assert owner in store.quarantine_log
+    assert (t, s) not in store.integrity.sums
+    assert store.quarantine_slot(t, s) is False          # idempotent
+    with pytest.raises(ValueError, match="quarantined"):
+        store.alloc[t].free(s, 0)
+    store.alloc[t].check_consistency()
+    # the slot is never handed out again, even draining the whole pool
+    got = []
+    while True:
+        g = store.alloc[t].alloc(0)
+        if g is None:
+            break
+        got.append(g)
+    assert s not in got
+    assert store.alloc[t].n_free == 0 and n_free == len(got)
+    assert store.alloc[t].n_retired == 1
+
+
+def test_alloc_injection_drives_allocate_failures():
+    store = make_store(seed=9)
+    faults.configure(FaultConfig(alloc_fail_rate=1.0))
+    p = int(np.nonzero(store.slot == NO_SLOT)[0][0]) if \
+        (store.slot == NO_SLOT).any() else None
+    if p is None:
+        store.release(0)
+        p = 0
+    assert store.allocate(p, store.hierarchy.deepest) is False
+    faults.configure(FaultConfig(alloc_fail_rate=0.0))
+    assert store.allocate(p, store.hierarchy.deepest) is True
+
+
+# =============================================================================
+# migration retry / fail-closed
+# =============================================================================
+
+def test_migration_retries_transient_faults_then_fails_closed():
+    # rate 1.0: every attempt of every group fails -> fail closed
+    store = make_store(seed=10)
+    faults.configure(FaultConfig(seed=10, migrate_fail_rate=1.0))
+    eng = make_engine(store, "batched")
+    eng.retry_backoff_s = 1e-6
+    t, _, live = slow_slots_of(store)
+    pages = [int(p) for p in live[:4]]
+    before = [(int(store.tier[p]), int(store.slot[p])) for p in pages]
+    st = eng.migrate_locked(pages, 0)
+    assert st.migrated == 0 and st.failed >= len(pages)
+    after = [(int(store.tier[p]), int(store.slot[p])) for p in pages]
+    assert before == after, "failed move must leave pages in place"
+    for tt in range(store.n_tiers):
+        store.alloc[tt].check_consistency()
+
+    # mid rate with a deep retry budget: the storm is ridden out
+    store2 = make_store(seed=10)
+    faults.configure(FaultConfig(seed=10, migrate_fail_rate=0.5))
+    eng2 = make_engine(store2, "batched")
+    eng2.retry_backoff_s = 1e-6
+    eng2.max_retries = 12
+    _, _, live2 = slow_slots_of(store2)
+    st2 = eng2.migrate_locked([int(p) for p in live2[:4]], 0)
+    assert st2.migrated == 4 and st2.failed == 0
+    inj = faults.get_injector()
+    assert inj.counts["migrate"] > 0
+    assert obs.get_registry().counter(
+        "faults.recovered_migrate_retry").value > 0
+
+
+def test_promotion_preflight_quarantines_corrupt_source():
+    """A corrupt slow-tier page must never be promoted: the pre-flight
+    verify quarantines its slot, the owner lands in quarantine_log, and
+    the remaining planned pages still move."""
+    store = make_store(seed=12)
+    faults.configure(FaultConfig(seed=12))   # enabled, no rates
+    eng = make_engine(store, "batched")
+    t, slots, live = slow_slots_of(store)
+    victim = int(live[0])
+    vslot = int(store.slot[victim])
+    phys = int(store._phys(t, np.asarray([vslot]))[0])
+    FaultInjector._xor_bit(store.pools[t], phys, 1, 5)
+    pages = [int(p) for p in live[:4]]
+    st = eng.migrate_locked(pages, 0)
+    assert st.failed == 1 and st.migrated == len(pages) - 1
+    assert int(store.slot[victim]) == NO_SLOT
+    assert victim in store.quarantine_log
+    assert vslot in store.quarantined[t]
+    for p in pages[1:]:
+        assert int(store.tier[p]) == 0
+    for tt in range(store.n_tiers):
+        store.alloc[tt].check_consistency()
+
+
+# =============================================================================
+# watchdog + degradation ladder
+# =============================================================================
+
+def record4(sm, seed=7):
+    rng = np.random.RandomState(seed)
+    for _ in range(4):
+        sm = sysmon.record(sm, jnp.asarray(np.arange(6), jnp.int32),
+                           is_write=True)
+        sm = sysmon.record(sm, jnp.asarray(rng.randint(20, 32, 3), jnp.int32),
+                           is_write=False)
+    return sm
+
+
+def mk_mgr(store, **kw):
+    return MemosManager(store, MemosConfig(
+        interval=4, adaptive_interval=False, async_plan=True,
+        plan_timeout_s=kw.pop("plan_timeout_s", 5.0),
+        breaker_recovery_passes=kw.pop("recovery", 2), **kw))
+
+
+def test_injected_plan_exception_falls_back_and_breaker_repromotes():
+    store = make_store(seed=13)
+    faults.configure(FaultConfig(seed=13, plan_exception_rate=1.0))
+    mgr = mk_mgr(store)
+    sm = sysmon.init(32, store.cfg.n_banks, store.cfg.n_slabs)
+    sm = record4(sm)
+    sm = mgr.begin_pass(sm)
+    rep = mgr.commit_pending()
+    assert rep.fault_fallback == "InjectedPlanFault"
+    assert not rep.committed_async
+    assert mgr.ladder.rung == RUNG_SYNC
+    # the fallback produced a full synchronous pass; the pipeline is idle
+    assert mgr._ticket is None
+    # storm over: healthy sync passes re-promote after the streak
+    faults.configure(FaultConfig(seed=13))
+    for i in range(2):
+        sm = record4(sm)
+        sm, rep = mgr.maybe_step(sm, steps=4)
+        assert rep is None or not rep.committed_async
+    assert mgr.ladder.rung == RUNG_OVERLAP
+    # and the next boundary overlaps again, committing cleanly
+    sm = record4(sm)
+    sm, _ = mgr.maybe_step(sm, steps=4)
+    assert mgr._ticket is not None
+    rep = mgr.flush()
+    assert rep is not None and rep.committed_async
+    assert rep.fault_fallback is None
+    mgr.close()
+
+
+def test_plan_hang_trips_watchdog_timeout():
+    store = make_store(seed=14)
+    faults.configure(FaultConfig(seed=14, plan_delay_rate=1.0,
+                                 plan_delay_s=0.5))
+    mgr = mk_mgr(store, plan_timeout_s=0.05)
+    sm = sysmon.init(32, store.cfg.n_banks, store.cfg.n_slabs)
+    sm = record4(sm)
+    sm = mgr.begin_pass(sm)
+    rep = mgr.commit_pending()
+    assert rep.fault_fallback == "timeout"
+    assert mgr.ladder.rung == RUNG_SYNC
+    assert mgr._executor is None        # hung worker abandoned
+    mgr.close()
+
+
+def test_repeated_failures_walk_ladder_to_memos_off():
+    store = make_store(seed=15)
+    faults.configure(FaultConfig(seed=15, plan_exception_rate=1.0,
+                                 migrate_fail_rate=1.0))
+    mgr = mk_mgr(store)
+    mgr.engine.retry_backoff_s = 1e-6
+    sm = sysmon.init(32, store.cfg.n_banks, store.cfg.n_slabs)
+    rungs = []
+    for _ in range(4):
+        sm = record4(sm)
+        sm, _ = mgr.maybe_step(sm, steps=4)
+        rep = mgr.flush()
+        rungs.append(mgr.ladder.rung)
+    # overlap -> sync (plan fault) -> off (migration fault); OFF passes
+    # are serve-only and count healthy, so the tail may start climbing
+    assert rungs[0] == RUNG_SYNC and RUNG_OFF in rungs
+    assert mgr.ladder.demotions >= 2
+    mgr.close()
+
+
+def test_ladder_unit_semantics():
+    lad = DegradationLadder(top=RUNG_OVERLAP, recovery_passes=3)
+    assert lad.rung == RUNG_OVERLAP and lad.rung_name == "overlap"
+    assert lad.record_failure("x") and lad.rung == RUNG_SYNC
+    assert lad.record_failure("y") and lad.rung == RUNG_OFF
+    assert not lad.record_failure("z") and lad.rung == RUNG_OFF
+    for _ in range(2):
+        assert not lad.record_healthy()
+    assert lad.record_healthy() and lad.rung == RUNG_SYNC
+    lad.record_healthy()
+    lad.record_failure("w")              # failure resets the streak
+    assert lad.rung == RUNG_OFF
+    assert lad.failures == ["x", "y", "z", "w"]
+    assert lad.demotions == 3 and lad.promotions == 1
