@@ -1,0 +1,463 @@
+"""Multi-tenant QoS benchmark: trace replay, priority vs. blind, power cap.
+
+Replays the canonical seeded arrival traces (``benchmarks/traces/*.jsonl``,
+regenerated on demand by ``repro.qos.traces``) through the
+``PagedServingEngine`` open-loop: each trace event is submitted when the
+engine's deterministic step clock reaches ``floor(t * steps_per_s)``, so
+the offered load is independent of service rate and queues genuinely
+build under overload.  Three scenarios:
+
+  * **overload** — the ``mixed_overload`` trace (~2x the service rate)
+    served twice: priority-aware (tenant classes + page weights active)
+    vs. priority-blind (``qos=None``, same tenant labels).  The headline
+    gate: the aware engine beats the blind one on latency-critical p99
+    TTFT (deterministic step clock) without losing aggregate tokens/s
+    (wall clock, paired interleaved rounds, best-of-N).
+  * **power_cap** — the ``steady_power`` trace served uncapped to find
+    the natural dynamic-power peak, then re-served under a budget at
+    half that peak.  Gates: the governor engages (over-budget passes,
+    throttle > 0) and the post-engagement mean power holds under budget.
+  * **fault_storm** — the ``storm_mix`` trace replayed under the PR-8
+    media-fault profile against a fault-free oracle replay.  Per-tenant
+    p99 TTFT and failed-request rate are reported; the gate is the
+    storm invariant: **0 corrupted tokens** (completed requests match
+    the oracle exactly, failed ones emitted an exact prefix).
+
+Per tenant, every scenario reports p50/p99 TTFT (step + wall clocks),
+mean inter-token latency, SLO attainment, admission / preemption /
+failure counts, and per-tier occupancy via ``repro.obs``.
+
+Results: benchmarks/results/qos_bench.json  (rendered by report.py)
+
+Usage:  PYTHONPATH=src python benchmarks/qos_bench.py
+        PYTHONPATH=src python benchmarks/qos_bench.py --tiny   # CI smoke
+"""
+import argparse
+import json
+import time
+from collections import deque
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+TRACE_DIR = ROOT / "benchmarks" / "traces"
+
+# storm profile for the fault scenario (mirrors fault_storm.py "media")
+STORM_RATES = dict(media_flip_rate=0.05)
+
+
+# -- engine + replay ----------------------------------------------------------
+
+def qos_tenants():
+    from repro.qos import (BATCH, LATENCY_CRITICAL, STANDARD,
+                           tenant_for_class)
+    return (tenant_for_class("lc", LATENCY_CRITICAL),
+            tenant_for_class("std", STANDARD),
+            tenant_for_class("bat", BATCH))
+
+
+def build_engine(cfg, params, args, qos):
+    """Same shape as fault_storm: lossless pinned slow tier, fused K,
+    synchronous memos (deterministic step timeline), fast_slots sized
+    below the working set so placement decisions matter."""
+    from repro.core.hierarchy import MemoryHierarchy
+    from repro.serving import PagedServingEngine, ServeConfig
+    hier = MemoryHierarchy.two_tier(args.fast_slots, args.slow_slots,
+                                    pinned_slow=True)
+    return PagedServingEngine(cfg, params, ServeConfig(
+        page_size=args.page_size, max_batch=args.batch,
+        fast_slots=args.fast_slots, slow_slots=args.slow_slots,
+        hierarchy=hier, memos_interval=args.memos_interval,
+        memos_enabled=True, max_pages_per_seq=args.max_pages,
+        decode_block=args.k, overlap_plan=False, qos=qos))
+
+
+def load_trace(name, args):
+    """Committed canonical trace (regenerated if absent), truncated under
+    --tiny so the CI smoke replays a prefix of the same events."""
+    from repro.qos.traces import read_trace, write_canonical
+    path = TRACE_DIR / f"{name}.jsonl"
+    if not path.exists():
+        write_canonical(TRACE_DIR)
+    meta, events = read_trace(path)
+    if args.tiny:
+        events = events[:args.tiny_events]
+    return meta, events
+
+
+def replay(engine, meta, events, max_steps=100_000):
+    """Open-loop replay on the engine's step clock, relative to the
+    engine's current step (so one engine can serve repeated timed
+    rounds).  Returns ({rid: Request}, wall seconds)."""
+    steps_per_s = meta["steps_per_s"]
+    base = engine.step_count
+    pending = deque(events)
+    reqs = {}
+    t0 = time.perf_counter()
+    while pending or not engine.batcher.all_done():
+        while pending and \
+                base + pending[0].step(steps_per_s) <= engine.step_count:
+            ev = pending.popleft()
+            reqs[ev.rid] = engine.submit(ev.prompt, ev.max_new,
+                                         tenant=ev.tenant)
+        engine.step()
+        assert engine.step_count - base < max_steps, \
+            "replay did not drain: scheduler wedged"
+    dt = time.perf_counter() - t0
+    return reqs, dt
+
+
+# -- per-tenant accounting ----------------------------------------------------
+
+def _pct(vals, q):
+    return float(np.percentile(np.asarray(vals, np.float64), q)) \
+        if vals else None
+
+
+def tenant_stats(meta, events, reqs):
+    """Per-tenant QoS table from the replayed Request objects: TTFT on
+    both clocks, ITL, SLO attainment, failure rate."""
+    from repro.qos.tenants import CLASS_DEFAULTS
+    cls_of = meta["tenants"]
+    out = {}
+    for tenant in sorted(cls_of):
+        evs = [e for e in events if e.tenant == tenant]
+        rs = [reqs[e.rid] for e in evs if e.rid in reqs]
+        done = [r for r in rs if r.error is None and r.finish_step is not None]
+        failed = [r for r in rs if r.error is not None]
+        ttft_steps = [r.first_token_step - r.arrival for r in done
+                      if r.first_token_step is not None]
+        ttft_s = [r.ttft_s for r in done if r.ttft_s is not None]
+        e2e_s = [r.e2e_s for r in done if r.e2e_s is not None]
+        itl_s = [(r.finish_ts - r.first_token_ts) / (len(r.generated) - 1)
+                 for r in done
+                 if r.first_token_ts is not None and len(r.generated) > 1]
+        slo = CLASS_DEFAULTS[cls_of[tenant]][2]
+        attain = None
+        if slo.ttft_steps is not None and ttft_steps:
+            attain = float(np.mean([t <= slo.ttft_steps
+                                    for t in ttft_steps]))
+        out[tenant] = {
+            "class": cls_of[tenant],
+            "requests": len(rs),
+            "completed": len(done),
+            "failed": len(failed),
+            "failed_rate": len(failed) / max(len(rs), 1),
+            "tokens": int(sum(len(r.generated) for r in rs)),
+            "ttft_steps_p50": _pct(ttft_steps, 50),
+            "ttft_steps_p99": _pct(ttft_steps, 99),
+            "ttft_ms_p50": None if not ttft_s else _pct(ttft_s, 50) * 1e3,
+            "ttft_ms_p99": None if not ttft_s else _pct(ttft_s, 99) * 1e3,
+            "e2e_ms_p99": None if not e2e_s else _pct(e2e_s, 99) * 1e3,
+            "itl_ms_mean": None if not itl_s else float(np.mean(itl_s)) * 1e3,
+            "slo_ttft_steps": slo.ttft_steps,
+            "slo_attainment": attain,
+        }
+    return out
+
+
+def engine_counters(engine):
+    from repro import obs
+    flat = obs.get_registry().flat()
+    return {
+        "admissions": engine.batcher.n_admitted,
+        "preemptions": engine.batcher.n_preempted,
+        "failed_requests": int(flat.get("serving.failed_requests", 0)),
+        "occupancy": engine.kv.store.occupancy(),
+    }
+
+
+def run_replay(cfg, params, args, qos, meta, events, *, warm=True):
+    """Fresh engine, one replayed round; returns (engine, reqs, dt)."""
+    engine = build_engine(cfg, params, args, qos)
+    if warm:
+        engine.warmup()
+    reqs, dt = replay(engine, meta, events)
+    return engine, reqs, dt
+
+
+# -- scenario: overload (priority-aware vs. priority-blind) -------------------
+
+def scenario_overload(cfg, params, args):
+    from repro import obs
+    from repro.qos import QoSConfig
+    obs.reset()
+    meta, events = load_trace("mixed_overload", args)
+    qos = QoSConfig(tenants=qos_tenants())
+    print(f"  overload: {len(events)} requests over {meta['duration_s']}s "
+          f"(steps_per_s {meta['steps_per_s']})")
+
+    # build both engines up front; round 1 of each (deterministic step
+    # timeline) supplies the QoS tables and the step-clock gate
+    obs.reset()
+    eng_aware = build_engine(cfg, params, args, qos)
+    eng_aware.warmup()
+    reqs_aware, dt_a = replay(eng_aware, meta, events)
+    steps_aware = eng_aware.step_count
+    stats_aware = tenant_stats(meta, events, reqs_aware)
+    counters_aware = engine_counters(eng_aware)
+    obs.reset()
+    eng_blind = build_engine(cfg, params, args, None)
+    eng_blind.warmup()
+    reqs_blind, dt_b = replay(eng_blind, meta, events)
+    steps_blind = eng_blind.step_count
+    stats_blind = tenant_stats(meta, events, reqs_blind)
+    counters_blind = engine_counters(eng_blind)
+
+    # wall-clock aggregate throughput: interleaved repeated rounds on the
+    # same two live engines, best-of-N per engine (drift-immune pairing,
+    # the serving_throughput idiom)
+    tok = sum(len(r.generated) for r in reqs_aware.values())
+    best = {"aware": tok / dt_a, "blind": tok / dt_b}
+    for _ in range(args.repeats - 1):
+        _, dt = replay(eng_aware, meta, events)
+        best["aware"] = max(best["aware"], tok / dt)
+        _, dt = replay(eng_blind, meta, events)
+        best["blind"] = max(best["blind"], tok / dt)
+    eng_aware.close()
+    eng_blind.close()
+    obs.reset()
+
+    lc_aware = stats_aware["lc"]["ttft_steps_p99"]
+    lc_blind = stats_blind["lc"]["ttft_steps_p99"]
+    ratio = best["aware"] / best["blind"]
+    row = {
+        "trace": meta["name"], "requests": len(events),
+        "aware": {"tenants": stats_aware, **counters_aware},
+        "blind": {"tenants": stats_blind, **counters_blind},
+        "lc_ttft_steps_p99_aware": lc_aware,
+        "lc_ttft_steps_p99_blind": lc_blind,
+        "engine_steps_aware": steps_aware,
+        "engine_steps_blind": steps_blind,
+        "tokens_per_s_aware": best["aware"],
+        "tokens_per_s_blind": best["blind"],
+        "throughput_ratio": ratio,
+        "gates": {
+            "lc_p99_improves": lc_aware is not None and lc_blind is not None
+            and lc_aware <= lc_blind,
+            "throughput_within_5pct": ratio >= 0.95,
+            "no_failures": counters_aware["failed_requests"] == 0
+            and counters_blind["failed_requests"] == 0,
+        },
+    }
+    print(f"    LC p99 TTFT: aware {lc_aware:.0f} vs blind {lc_blind:.0f} "
+          f"steps;  tok/s aware/blind = {ratio:.3f}  "
+          f"(preemptions {counters_aware['preemptions']}/"
+          f"{counters_blind['preemptions']})")
+    return row
+
+
+# -- scenario: power cap ------------------------------------------------------
+
+def scenario_power(cfg, params, args):
+    from repro import obs
+    from repro.qos import QoSConfig
+    obs.reset()
+    meta, events = load_trace("steady_power", args)
+    print(f"  power_cap: {len(events)} requests")
+
+    eng_free, reqs_free, _ = run_replay(cfg, params, args, QoSConfig(),
+                                        meta, events)
+    free_power = [r.power_mw for r in eng_free.memos.reports if r.power_mw]
+    eng_free.close()
+    obs.reset()
+    peak = max(free_power) if free_power else 0.0
+    budget = peak * args.power_budget_frac
+
+    eng_cap, reqs_cap, _ = run_replay(
+        cfg, params, args, QoSConfig(power_budget_mw=budget), meta, events)
+    gov = eng_cap.memos.governor
+    cap_power = [r.power_mw for r in eng_cap.memos.reports]
+    throttles = [r.power_throttle for r in eng_cap.memos.reports]
+    stats = tenant_stats(meta, events, reqs_cap)
+    counters = engine_counters(eng_cap)
+    eng_cap.close()
+    obs.reset()
+
+    # the control-loop gate: from the first throttled pass onward the
+    # mean power reading holds under the budget (single passes may spike
+    # — the governor reacts at pass granularity)
+    first = next((i for i, t in enumerate(throttles) if t > 0),
+                 len(throttles))
+    tail = [p for p in cap_power[first:] if p > 0]
+    tail_mean = float(np.mean(tail)) if tail else 0.0
+    row = {
+        "trace": meta["name"], "requests": len(events),
+        "uncapped_peak_mw": peak,
+        "uncapped_mean_mw": float(np.mean(free_power)) if free_power else 0.0,
+        "budget_mw": budget,
+        "capped_peak_mw": max(cap_power) if cap_power else 0.0,
+        "capped_tail_mean_mw": tail_mean,
+        "over_budget_passes": gov.over_budget_passes if gov else 0,
+        "max_throttle": max(throttles) if throttles else 0,
+        "tenants": stats, **counters,
+        "gates": {
+            "cap_binding": peak > budget > 0,
+            "governor_engaged": gov is not None
+            and gov.over_budget_passes > 0 and max(throttles, default=0) > 0,
+            "tail_under_budget": tail_mean <= budget,
+            "all_served": all(r.error is None for r in reqs_cap.values()),
+        },
+    }
+    print(f"    uncapped peak {peak:.3f} mW -> budget {budget:.3f} mW;  "
+          f"tail mean {tail_mean:.3f} mW, max throttle "
+          f"{row['max_throttle']}, {row['over_budget_passes']} over-budget "
+          f"passes")
+    return row
+
+
+# -- scenario: fault storm ----------------------------------------------------
+
+def scenario_storm(cfg, params, args):
+    from repro import faults, obs
+    from repro.faults import FaultConfig
+    from repro.qos import QoSConfig
+    meta, events = load_trace("storm_mix", args)
+    print(f"  fault_storm: {len(events)} requests, rates {STORM_RATES}")
+    qos = QoSConfig(tenants=qos_tenants())
+
+    # fault-free oracle replay of the same trace
+    faults.reset()
+    obs.reset()
+    eng, reqs, _ = run_replay(cfg, params, args, qos, meta, events)
+    assert all(r.error is None for r in reqs.values()), \
+        "oracle replay failed requests with injection disabled"
+    oracle = {rid: list(r.generated) for rid, r in reqs.items()}
+    eng.close()
+    obs.reset()
+
+    # the storm replay: injector armed BEFORE engine construction (the
+    # store latches integrity coverage at build time)
+    faults.configure(FaultConfig(seed=args.seed, **STORM_RATES))
+    inj = faults.get_injector()
+    eng, reqs, _ = run_replay(cfg, params, args, qos, meta, events)
+    corrupted = completed = failed = 0
+    for rid, r in reqs.items():
+        want = oracle[rid]
+        got = list(r.generated)
+        if r.error is None:
+            completed += 1
+            if got != want:
+                corrupted += sum(a != b for a, b in zip(got, want)) \
+                    + abs(len(got) - len(want))
+        else:
+            failed += 1
+            if got != want[:len(got)]:
+                corrupted += sum(a != b for a, b in zip(got, want))
+    stats = tenant_stats(meta, events, reqs)
+    counters = engine_counters(eng)
+    flat = obs.get_registry().flat()
+    eng.close()
+    faults.reset()
+    obs.reset()
+
+    row = {
+        "trace": meta["name"], "requests": len(events),
+        "rates": STORM_RATES,
+        "injected_total": inj.total_injected,
+        "recovered_total": int(flat.get("faults.recovered", 0)),
+        "completed": completed, "failed": failed,
+        "failed_rate": failed / max(len(reqs), 1),
+        "corrupted_tokens": corrupted,
+        "tenants": stats, **counters,
+        "gates": {
+            "storm_stormed": inj.total_injected > 0,
+            "zero_corrupted_tokens": corrupted == 0,
+        },
+    }
+    print(f"    injected {inj.total_injected}, ok/fail {completed}/{failed}, "
+          f"corrupted {corrupted};  per-tenant p99 TTFT "
+          + ", ".join(f"{t}={s['ttft_steps_p99']:.0f}st"
+                      for t, s in stats.items()
+                      if s["ttft_steps_p99"] is not None))
+    return row
+
+
+# -- main ---------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--fast-slots", type=int, default=12)
+    ap.add_argument("--slow-slots", type=int, default=96)
+    ap.add_argument("--max-pages", type=int, default=8)
+    ap.add_argument("--memos-interval", type=int, default=8)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="interleaved wall-clock rounds for the paired "
+                         "throughput ratio (best-of-N per engine)")
+    ap.add_argument("--power-budget-frac", type=float, default=0.5,
+                    help="power budget as a fraction of the uncapped peak")
+    ap.add_argument("--scenarios", nargs="+", default=None,
+                    help="subset of {overload, power_cap, fault_storm}")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: truncated traces, small pools, same "
+                         "gates")
+    ap.add_argument("--tiny-events", type=int, default=12)
+    ap.add_argument("--no-check", action="store_true",
+                    help="always exit 0 regardless of any gate")
+    ap.add_argument("--out", type=Path,
+                    default=ROOT / "benchmarks" / "results" /
+                    "qos_bench.json")
+    args = ap.parse_args()
+    if args.tiny:
+        args.batch = min(args.batch, 2)
+        args.fast_slots = 6
+        args.slow_slots = 48
+        args.repeats = min(args.repeats, 2)
+    names = args.scenarios or ["overload", "power_cap", "fault_storm"]
+
+    import jax
+    from repro.configs import registry, smoke
+    from repro.core.migration import bench_env
+    from repro.models import transformer as T
+
+    cfg = smoke(registry()[args.arch])
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    print(f"qos_bench: {args.arch} (smoke), batch {args.batch}, "
+          f"fast {args.fast_slots} / slow {args.slow_slots} slots, "
+          f"K={args.k}{', tiny' if args.tiny else ''}")
+
+    runners = {"overload": scenario_overload, "power_cap": scenario_power,
+               "fault_storm": scenario_storm}
+    unknown = [n for n in names if n not in runners]
+    assert not unknown, f"unknown scenarios {unknown}"
+    results = {"scenarios": {}}
+    for n in names:
+        results["scenarios"][n] = runners[n](cfg, params, args)
+
+    gates = {f"{n}.{g}": ok
+             for n, row in results["scenarios"].items()
+             for g, ok in row["gates"].items()}
+    results["summary"] = {
+        "scenarios_run": len(names),
+        "gates": gates,
+        "all_gates_pass": all(gates.values()),
+    }
+    results["config"] = {
+        "arch": args.arch, "batch": args.batch, "page_size": args.page_size,
+        "fast_slots": args.fast_slots, "slow_slots": args.slow_slots,
+        "memos_interval": args.memos_interval, "k": args.k,
+        "seed": args.seed, "repeats": args.repeats,
+        "power_budget_frac": args.power_budget_frac, "tiny": args.tiny,
+        "scenarios": names,
+    }
+    results["env"] = bench_env()
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(results, indent=2))
+    print(f"wrote {args.out}")
+
+    failed = sorted(g for g, ok in gates.items() if not ok)
+    if failed:
+        print("  GATES FAILED: " + "; ".join(failed))
+    else:
+        print(f"  all {len(gates)} gates pass")
+    return 0 if not failed or args.no_check else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -249,6 +249,72 @@ def fault_storm_rows(r: dict) -> list[str]:
     return lines
 
 
+def qos_bench_rows(r: dict) -> list[str]:
+    """Per-tenant QoS tables for every qos_bench scenario, plus the
+    headline aware-vs-blind and power-cap lines."""
+
+    def fmt(v, spec=".0f"):
+        return "—" if v is None else format(v, spec)
+
+    def tenant_table(tenants: dict) -> list[str]:
+        lines = ["| tenant | class | reqs | ok/fail | TTFT p50/p99 (steps) "
+                 "| TTFT p99 (ms) | ITL mean (ms) | SLO attain |",
+                 "|---|---|---|---|---|---|---|---|"]
+        for name, s in sorted(tenants.items()):
+            att = s.get("slo_attainment")
+            lines.append(
+                f"| {name} | {s.get('class', '?')} | {s.get('requests', 0)} "
+                f"| {s.get('completed', 0)}/{s.get('failed', 0)} "
+                f"| {fmt(s.get('ttft_steps_p50'))}/"
+                f"{fmt(s.get('ttft_steps_p99'))} "
+                f"| {fmt(s.get('ttft_ms_p99'), '.1f')} "
+                f"| {fmt(s.get('itl_ms_mean'), '.2f')} "
+                f"| {'—' if att is None else f'{att:.0%}'} |")
+        return lines
+
+    lines = []
+    sc = r.get("scenarios", {})
+    if "overload" in sc:
+        o = sc["overload"]
+        lines.append(
+            f"**overload** ({o.get('trace')}): LC p99 TTFT aware "
+            f"{fmt(o.get('lc_ttft_steps_p99_aware'))} vs blind "
+            f"{fmt(o.get('lc_ttft_steps_p99_blind'))} steps; aggregate "
+            f"tokens/s ratio {fmt(o.get('throughput_ratio'), '.3f')} "
+            f"(aware {fmt(o.get('tokens_per_s_aware'), '.0f')}, blind "
+            f"{fmt(o.get('tokens_per_s_blind'), '.0f')})")
+        for mode in ("aware", "blind"):
+            row = o.get(mode, {})
+            lines += ["", f"priority-{mode} (preemptions "
+                      f"{row.get('preemptions', 0)}, admissions "
+                      f"{row.get('admissions', 0)}):", ""]
+            lines += tenant_table(row.get("tenants", {}))
+    if "power_cap" in sc:
+        p = sc["power_cap"]
+        lines += ["", f"**power_cap** ({p.get('trace')}): uncapped peak "
+                  f"{fmt(p.get('uncapped_peak_mw'), '.3f')} mW, budget "
+                  f"{fmt(p.get('budget_mw'), '.3f')} mW, tail mean "
+                  f"{fmt(p.get('capped_tail_mean_mw'), '.3f')} mW, max "
+                  f"throttle {p.get('max_throttle', 0)} "
+                  f"({p.get('over_budget_passes', 0)} over-budget passes)",
+                  ""]
+        lines += tenant_table(p.get("tenants", {}))
+    if "fault_storm" in sc:
+        s = sc["fault_storm"]
+        lines += ["", f"**fault_storm** ({s.get('trace')}): injected "
+                  f"{s.get('injected_total', 0)}, ok/fail "
+                  f"{s.get('completed', 0)}/{s.get('failed', 0)}, corrupted "
+                  f"tokens {s.get('corrupted_tokens', 0)}, failed rate "
+                  f"{fmt(s.get('failed_rate'), '.1%')}", ""]
+        lines += tenant_table(s.get("tenants", {}))
+    gates = r.get("summary", {}).get("gates", {})
+    if gates:
+        bad = sorted(g for g, ok in gates.items() if not ok)
+        lines += ["", f"Gates: {len(gates) - len(bad)}/{len(gates)} pass"
+                  + (f" — FAILED: {', '.join(bad)}" if bad else "")]
+    return lines
+
+
 def results_table(results_dir: Path = RESULTS) -> str:
     """One markdown table over every result JSON in ``results_dir``."""
     lines = ["# Benchmark results", ""]
@@ -273,6 +339,10 @@ def results_table(results_dir: Path = RESULTS) -> str:
         if isinstance(r, dict) and "profiles" in r and f.name.startswith(
                 "fault_storm"):
             lines += fault_storm_rows(r)
+            lines.append("")
+        if isinstance(r, dict) and "scenarios" in r and f.name.startswith(
+                "qos_bench"):
+            lines += qos_bench_rows(r)
             lines.append("")
         lines += ["| metric | value |", "|---|---|"]
         rows = (_scalar_rows(r) if isinstance(r, dict)

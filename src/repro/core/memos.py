@@ -109,6 +109,15 @@ class MemosConfig:
     # per-pass budget of recorded page checksums re-verified by the
     # background scrub (0 disables scrubbing)
     scrub_pages: int = 16
+    # -- power cap (repro.qos.power) --------------------------------------
+    # budget on the summed per-wear-tier ``NvmReport.dynamic_power_mw``;
+    # while over it the governor raises a throttle level that shrinks
+    # serving-engine batch admission and plans the next pass under power
+    # pressure (WD pages pinned fast, energy-ranked intermediate fill,
+    # WD excluded from spills).  None disables the governor entirely.
+    power_cap_mw: float | None = None
+    # consecutive under-budget passes before one throttle level releases
+    power_recover_passes: int = 2
 
 
 @dataclass
@@ -124,6 +133,9 @@ class MemosReport:
     nvm: object | None = None     # deepest wear-tracked tier's NvmReport
     nvm_by_tier: dict = field(default_factory=dict)  # tier -> NvmReport
     wear_pressure: bool = False   # wear penalty applied to this pass's plan
+    power_pressure: bool = False  # pass planned under the power governor
+    power_throttle: int = 0       # governor throttle level after this pass
+    power_mw: float = 0.0         # summed per-wear-tier dynamic power
     committed_async: bool = False  # pass went through the overlapped commit
     plan_conflict: bool = False    # some planned pages were stale (degraded)
     pages_committed: int = 0      # planned pages committed by this pass
@@ -158,6 +170,9 @@ class MemosReport:
             "nvm_by_tier": {str(t): r.to_dict()
                             for t, r in self.nvm_by_tier.items()},
             "wear_pressure": self.wear_pressure,
+            "power_pressure": self.power_pressure,
+            "power_throttle": self.power_throttle,
+            "power_mw": self.power_mw,
             "committed_async": self.committed_async,
             "plan_conflict": self.plan_conflict,
             "pages_committed": self.pages_committed,
@@ -188,6 +203,9 @@ class MemosReport:
             bank_imbalance=d["bank_imbalance"], spilled=d["spilled"],
             tier_pages=list(d["tier_pages"]), nvm=nvm,
             nvm_by_tier=nvm_by_tier, wear_pressure=d["wear_pressure"],
+            power_pressure=d.get("power_pressure", False),
+            power_throttle=d.get("power_throttle", 0),
+            power_mw=d.get("power_mw", 0.0),
             committed_async=d["committed_async"],
             plan_conflict=d["plan_conflict"],
             pages_committed=d["pages_committed"],
@@ -211,6 +229,9 @@ class MemosReport:
             "n_marked": self.n_marked, "spilled": self.spilled,
             "bank_imbalance": self.bank_imbalance,
             "wear_pressure": int(self.wear_pressure),
+            "power_pressure": int(self.power_pressure),
+            "power_throttle": self.power_throttle,
+            "power_mw": self.power_mw,
             "committed_async": int(self.committed_async),
             "plan_conflict": int(self.plan_conflict),
             "pages_committed": self.pages_committed,
@@ -269,6 +290,8 @@ class _PlanTicket:
     wear_pressure: bool
     spilling: bool
     spill_dst: int
+    power_pressure: bool = False
+    page_weight: np.ndarray | None = None   # snapshot of tenant weights
     future: Future | None = None
     # worker-thread plan phase wall-clock bounds (monotonic ns), recorded
     # unconditionally so the overlap-efficiency metric works without
@@ -290,6 +313,20 @@ class MemosManager:
             from repro.nvm.energy import EnergyMeter
             self.meters[t] = EnergyMeter(store, tier=t,
                                          window_s=self.cfg.pass_window_s)
+        # power-cap governor (repro.qos): fed the summed per-wear-tier
+        # dynamic power at the end of every pass; its throttle level
+        # shrinks serving-engine admission and puts the next plan under
+        # power pressure
+        self.governor = None
+        if self.cfg.power_cap_mw is not None:
+            from repro.qos.power import PowerGovernor
+            self.governor = PowerGovernor(
+                budget_mw=self.cfg.power_cap_mw,
+                recover_passes=self.cfg.power_recover_passes)
+        # per-page tenant utility weights (lazy: stays None — and the
+        # planner bit-identical to pre-QoS — until a weighted tenant's
+        # pages appear)
+        self._page_weight: np.ndarray | None = None
         self.interval = self.cfg.interval
         self._last_target: np.ndarray | None = None
         self._steps_since = 0
@@ -416,6 +453,25 @@ class MemosManager:
         return any(m.project_lifetime() < self.cfg.lifetime_horizon_years
                    for m in self.meters.values())
 
+    def _power_pressure(self) -> bool:
+        """Whether the power governor is currently throttling (the last
+        pass's dynamic power exceeded the budget and the throttle has not
+        fully released)."""
+        return self.governor is not None and self.governor.pressure
+
+    def set_page_weight(self, pages, weight: float) -> None:
+        """Record the tenant utility weight for a set of logical pages
+        (Li et al. page-utility multiplier).  The weight array is created
+        lazily on the first non-neutral weight, so unweighted workloads
+        keep ``page_weight=None`` — and the planner bit-identical to the
+        pre-QoS decision."""
+        if self._page_weight is None:
+            if weight == 1.0:
+                return
+            self._page_weight = np.ones(self.store.tier.shape[0],
+                                        dtype=np.float64)
+        self._page_weight[np.asarray(pages, dtype=np.int64)] = float(weight)
+
     def _spill_dst(self) -> int:
         """Bandwidth-aware spill destination: the backing tier with the
         most channel headroom over the current traffic window (ties break
@@ -434,10 +490,18 @@ class MemosManager:
         """Steps 3-6 of the pass against *live* state: plan placement,
         execute migrations, spill, close telemetry — the synchronous
         path."""
-        penalty = self.cfg.wear_penalty if wear_pressure else 0.0
+        # power pressure planning response: WD pages pin fast (via the
+        # wear-penalty path — writes stop burning NVM energy), WD is
+        # excluded from spills, and intermediate-tier fill ranks media by
+        # access energy
+        power_pressure = self._power_pressure()
+        pressure = wear_pressure or power_pressure
+        penalty = self.cfg.wear_penalty if pressure else 0.0
         current = self.store.tier.copy()
         decision = plan(summary, current, max_migrations=self.cfg.max_migrations,
-                        wear_penalty=penalty, hierarchy=self.store.hierarchy)
+                        wear_penalty=penalty, hierarchy=self.store.hierarchy,
+                        page_weight=self._page_weight,
+                        energy_aware=power_pressure)
 
         bank_freq = np.asarray(summary.bank_freq)
         slab_freq = np.asarray(summary.slab_freq)
@@ -453,16 +517,19 @@ class MemosManager:
             cands = self.balancer.spill_candidates(
                 np.asarray(summary.wd_code), np.asarray(summary.hotness),
                 self.store.tier, n=self.cfg.max_migrations or 64,
-                exclude_wd=wear_pressure)
+                exclude_wd=pressure)
             st = self.engine.migrate_optimistic(cands, spill_dst, bank_freq,
                                                 slab_freq, reuse)
             spilled = st.migrated
 
         return self._finish_pass(decision, stats, spilled, summary,
-                                 wear_pressure, fault_fallback=fault_fallback)
+                                 wear_pressure,
+                                 power_pressure=power_pressure,
+                                 fault_fallback=fault_fallback)
 
     def _finish_pass(self, decision, stats: MigrationStats, spilled: int,
                      summary, wear_pressure: bool, *,
+                     power_pressure: bool = False,
                      committed_async: bool = False,
                      pages_committed: int = 0,
                      pages_degraded: int = 0,
@@ -496,6 +563,14 @@ class MemosManager:
         self._last_pass_step = self.step_count
         self.store.roll_traffic_window()
 
+        # power-cap control loop: feed the governor the summed dynamic
+        # power of every wear-tracked tier; its throttle level shapes the
+        # *next* pass's plan and the engine's admission width
+        power_mw = float(sum(r.dynamic_power_mw
+                             for r in nvm_by_tier.values()))
+        if self.governor is not None and nvm_by_tier:
+            self.governor.observe(power_mw)
+
         bank_freq = np.asarray(summary.bank_freq)
         tier_pages = [int((self.store.tier == t).sum())
                       for t in range(self.store.n_tiers)]
@@ -512,6 +587,10 @@ class MemosManager:
             nvm=nvm_by_tier.get(wt[-1]) if wt else None,
             nvm_by_tier=nvm_by_tier,
             wear_pressure=wear_pressure,
+            power_pressure=power_pressure,
+            power_throttle=(self.governor.throttle
+                            if self.governor is not None else 0),
+            power_mw=power_mw,
             committed_async=committed_async,
             plan_conflict=pages_degraded > 0,
             pages_committed=pages_committed,
@@ -575,6 +654,18 @@ class MemosManager:
         reg.gauge("memos.bank_imbalance",
                   "stddev of per-bank access frequency").set(
                       report.bank_imbalance)
+        if report.nvm_by_tier:
+            reg.gauge("power.dynamic_mw",
+                      "summed wear-tier dynamic power").set(report.power_mw)
+        if self.governor is not None:
+            reg.gauge("power.throttle",
+                      "power-governor admission shrink level").set(
+                          self.governor.throttle)
+            reg.gauge("power.budget_mw", "dynamic-power budget").set(
+                self.governor.budget_mw)
+            reg.gauge("power.over_budget_passes",
+                      "passes whose power reading exceeded the budget").set(
+                          self.governor.over_budget_passes)
         # SysMon classification mix for the pass
         for k, v in sysmon_mod.summary_metrics(summary).items():
             reg.gauge(f"sysmon.{k}").set(v)
@@ -607,6 +698,9 @@ class MemosManager:
                 wear_pressure=self._wear_pressure(),
                 spilling=self.balancer.update(fast_bw_util),
                 spill_dst=self._spill_dst(),
+                power_pressure=self._power_pressure(),
+                page_weight=(None if self._page_weight is None
+                             else self._page_weight.copy()),
             )
             ticket.future = self._submit_plan(ticket)
             self._ticket = ticket
@@ -640,11 +734,14 @@ class MemosManager:
         t.plan_t0_ns = time.monotonic_ns()
         with obs.span("memos.plan", step=t.step):
             get_injector().maybe_plan_fault()
-            penalty = self.cfg.wear_penalty if t.wear_pressure else 0.0
+            pressure = t.wear_pressure or t.power_pressure
+            penalty = self.cfg.wear_penalty if pressure else 0.0
             decision = plan(t.summary, t.view.tier.copy(),
                             max_migrations=self.cfg.max_migrations,
                             wear_penalty=penalty,
-                            hierarchy=self.store.hierarchy)
+                            hierarchy=self.store.hierarchy,
+                            page_weight=t.page_weight,
+                            energy_aware=t.power_pressure)
             bank_freq = np.asarray(t.summary.bank_freq)
             slab_freq = np.asarray(t.summary.slab_freq)
             reuse = np.asarray(t.summary.reuse_class)
@@ -656,7 +753,7 @@ class MemosManager:
                     np.asarray(t.summary.wd_code),
                     np.asarray(t.summary.hotness),
                     t.view.tier, n=self.cfg.max_migrations or 64,
-                    exclude_wd=t.wear_pressure)
+                    exclude_wd=pressure)
                 # candidates come from the snapshot's tier table, so exclude
                 # pages this pass already plans to move — the synchronous path
                 # picks candidates *after* migrating, so a just-demoted page
@@ -748,7 +845,9 @@ class MemosManager:
         self.plan_ns_total += plan_dur
         self.plan_hidden_ns_total += hidden
         return self._finish_pass(decision, stats, spilled, t.summary,
-                                 t.wear_pressure, committed_async=True,
+                                 t.wear_pressure,
+                                 power_pressure=t.power_pressure,
+                                 committed_async=True,
                                  pages_committed=committed,
                                  pages_degraded=degraded,
                                  pages_dropped=dropped,

@@ -64,16 +64,30 @@ def _wants_fastest(wd_code: np.ndarray, hot: np.ndarray, future: np.ndarray,
 
 def _fill_intermediate_tiers(tgt: np.ndarray, tolerant: np.ndarray,
                              hierarchy: MemoryHierarchy,
-                             reads: np.ndarray, writes: np.ndarray) -> None:
+                             reads: np.ndarray, writes: np.ndarray, *,
+                             page_weight: np.ndarray | None = None,
+                             energy_aware: bool = False) -> None:
     """Distribute slow-tolerant pages over tiers 1..deepest by utility:
     each intermediate tier (cheapest first) takes the pages whose
     read/write mix gains the most latency vs. the deepest medium, up to
     its slot capacity; everything else stays targeted at the deepest
-    tier.  Mutates ``tgt`` in place."""
+    tier.  Mutates ``tgt`` in place.
+
+    ``page_weight`` multiplies per-page benefit (tenant QoS weight as a
+    utility multiplier, Li et al.), so weighted pages win the
+    capacity-constrained intermediate slots.  ``energy_aware`` prices
+    tiers by Table-1 access *energy* instead of latency — the power
+    governor sets it while over the dynamic-power budget, biasing
+    placement toward the low-energy medium."""
     deepest = hierarchy.deepest
-    mids = sorted(range(1, deepest),
-                  key=lambda t: (hierarchy[t].read_cost_ns()
-                                 + hierarchy[t].write_cost_ns(), t))
+    if energy_aware:
+        def tier_cost(t):
+            m = hierarchy[t].medium
+            return m.read_energy_nj + m.write_energy_nj
+    else:
+        def tier_cost(t):
+            return hierarchy[t].read_cost_ns() + hierarchy[t].write_cost_ns()
+    mids = sorted(range(1, deepest), key=lambda t: (tier_cost(t), t))
     ids = np.nonzero(tolerant)[0]
     if ids.size == 0:
         return
@@ -85,8 +99,16 @@ def _fill_intermediate_tiers(tgt: np.ndarray, tolerant: np.ndarray,
         spec = hierarchy[t]
         # per-page benefit of tier t over the deepest tier, priced through
         # the Table-1 media (>= 0 when the hierarchy is ordered)
-        benefit = (r * (deep.read_cost_ns() - spec.read_cost_ns())
-                   + w * (deep.write_cost_ns() - spec.write_cost_ns()))
+        if energy_aware:
+            benefit = (r * (deep.medium.read_energy_nj
+                            - spec.medium.read_energy_nj)
+                       + w * (deep.medium.write_energy_nj
+                              - spec.medium.write_energy_nj))
+        else:
+            benefit = (r * (deep.read_cost_ns() - spec.read_cost_ns())
+                       + w * (deep.write_cost_ns() - spec.write_cost_ns()))
+        if page_weight is not None:
+            benefit = benefit * page_weight[ids]
         cand = np.nonzero(remaining & (benefit > 0))[0]
         if cand.size == 0:
             continue
@@ -100,7 +122,9 @@ def target_tier(wd_code: np.ndarray, hot: np.ndarray, future: np.ndarray,
                 reuse_class: np.ndarray, wear_penalty: float = 0.0, *,
                 hierarchy: MemoryHierarchy | None = None,
                 reads: np.ndarray | None = None,
-                writes: np.ndarray | None = None) -> np.ndarray:
+                writes: np.ndarray | None = None,
+                page_weight: np.ndarray | None = None,
+                energy_aware: bool = False) -> np.ndarray:
     """Target tier index per page.
 
     Without a ``hierarchy`` (or with a two-tier one) this is exactly the
@@ -109,7 +133,8 @@ def target_tier(wd_code: np.ndarray, hot: np.ndarray, future: np.ndarray,
     pages additionally spread over the intermediate tiers by per-page
     utility over the tiers' ``MediumSpec`` costs (``reads``/``writes``
     supply the access mix; omitted, everything tolerant sinks to the
-    deepest tier).
+    deepest tier).  ``page_weight`` / ``energy_aware`` thread the QoS
+    utility multiplier and the power-cap energy bias into that fill.
     """
     fast = _wants_fastest(wd_code, hot, future, reuse_class, wear_penalty)
     deepest = 1 if hierarchy is None else hierarchy.deepest
@@ -117,24 +142,41 @@ def target_tier(wd_code: np.ndarray, hot: np.ndarray, future: np.ndarray,
     if hierarchy is not None and hierarchy.n_tiers > 2 \
             and reads is not None and writes is not None:
         _fill_intermediate_tiers(tgt, ~fast, hierarchy,
-                                 np.asarray(reads), np.asarray(writes))
+                                 np.asarray(reads), np.asarray(writes),
+                                 page_weight=page_weight,
+                                 energy_aware=energy_aware)
     return tgt
 
 
 def plan(summary, current_tier: np.ndarray, *, max_migrations: int | None = None,
          wear_penalty: float = 0.0,
-         hierarchy: MemoryHierarchy | None = None) -> PlacementDecision:
+         hierarchy: MemoryHierarchy | None = None,
+         page_weight: np.ndarray | None = None,
+         energy_aware: bool = False) -> PlacementDecision:
     """Fig. 10 steps 2-3: decide targets, mark migrations, rank the HL.
 
     Under wear pressure (``wear_penalty > 0``) WD pages additionally get a
     ranking boost so their promotions win the migration budget, and the
     target-tier rule pins them to the fast tier (see ``target_tier``).
+
+    ``page_weight`` is the multi-tenant QoS hook (Li et al. page-utility
+    model, tenant weight as per-page utility multiplier): it scales the
+    hotness score in the migration ranking, scales intermediate-tier fill
+    benefit, and pages with weight > 1 *resist demotion* — a demotion
+    target (deeper than the current tier) is cancelled for them, so a
+    latency-critical tenant's KV pages hold their tier while unweighted
+    pages around them sink.  ``energy_aware`` makes the intermediate-tier
+    fill rank media by access energy (power-cap response).  With
+    ``page_weight`` None/all-ones and ``energy_aware`` False the decision
+    is bit-identical to the pre-QoS planner.
     """
     wd_code = np.asarray(summary.wd_code)
     hot = np.asarray(summary.hot)
     future = np.asarray(summary.future)
     reuse = np.asarray(summary.reuse_class)
     hotness = np.asarray(summary.hotness)
+    weight = None if page_weight is None \
+        else np.asarray(page_weight, dtype=np.float64)
 
     # the access mix only matters for intermediate-tier assignment, and
     # minimal summary stubs (tests) may not carry raw counters
@@ -143,9 +185,15 @@ def plan(summary, current_tier: np.ndarray, *, max_migrations: int | None = None
     tgt = target_tier(
         wd_code, hot, future, reuse, wear_penalty, hierarchy=hierarchy,
         reads=None if reads is None else np.asarray(reads),
-        writes=None if writes is None else np.asarray(writes))
+        writes=None if writes is None else np.asarray(writes),
+        page_weight=weight, energy_aware=energy_aware)
+    if weight is not None:
+        resist = (weight > 1.0) & (tgt > current_tier)
+        tgt = np.where(resist, current_tier, tgt).astype(np.int8)
     migrate = tgt != current_tier
     score = hotness.astype(np.float64)
+    if weight is not None:
+        score = score * weight
     if wear_penalty > 0:
         score = score + wear_penalty * (wd_code == patterns.WD)
 

@@ -58,6 +58,7 @@ from repro.kernels.wear_update import wear_update
 from repro.models import attention as attn_mod
 from repro.models import layers as L
 from repro.models import transformer as T
+from repro.qos import QoSConfig
 from repro.serving.kv_cache import SERVE_TIER, PagedKVCache, PagedKVConfig
 from repro.serving.scheduler import ContinuousBatcher, Request
 
@@ -87,6 +88,12 @@ class ServeConfig:
     # retained unfused K=1 path — host-side sampling + standalone SysMon
     # records; the parity oracle and the pre-fusion throughput baseline
     reference: bool = False
+    # multi-tenant QoS (repro.qos): tenant classes + priorities, page
+    # utility weights into memos placement, and the dynamic-power cap.
+    # None — or a bare QoSConfig() with no tenants and no budget — keeps
+    # every scheduler and placement decision bit-identical to pre-QoS
+    # behavior (pinned by tests/test_qos.py).
+    qos: QoSConfig | None = None
 
 
 class PagedServingEngine:
@@ -120,11 +127,21 @@ class PagedServingEngine:
         self.sysmon = sysmon_mod.init(
             self.kv.n_pages, n_banks=store.cfg.n_banks,
             n_slabs=store.cfg.n_slabs)
+        qos = scfg.qos
         self.memos = MemosManager(store, MemosConfig(
             interval=scfg.memos_interval, adaptive_interval=False,
             lifetime_horizon_years=scfg.lifetime_horizon_years,
-            async_plan=scfg.overlap_plan))
-        self.batcher = ContinuousBatcher(scfg.max_batch)
+            async_plan=scfg.overlap_plan,
+            power_cap_mw=qos.power_budget_mw if qos is not None else None,
+            power_recover_passes=(qos.power_recover_passes
+                                  if qos is not None else 2)))
+        # priority-aware scheduling engages only when tenants are actually
+        # configured: a bare QoSConfig() keeps the literal legacy admission
+        # code path, making the bit-identity pin structural
+        self.batcher = ContinuousBatcher(
+            scfg.max_batch,
+            priority_aware=bool(qos is not None and qos.priority_aware
+                                and qos.tenants))
         self.step_count = 0
         self.expert_counts = (np.zeros(cfg.n_experts, np.int64)
                               if cfg.is_moe else None)
@@ -138,12 +155,24 @@ class PagedServingEngine:
         self._fused_pinned_fns: dict[int, object] = {}
 
     # -- request API -----------------------------------------------------------
-    def submit(self, prompt: list[int], max_new: int) -> Request:
+    def submit(self, prompt: list[int], max_new: int, *,
+               tenant: str | None = None) -> Request:
         cap = self.scfg.max_pages_per_seq * self.scfg.page_size
         assert len(prompt) + max_new <= cap, \
             f"sequence needs {len(prompt) + max_new} positions but " \
             f"max_pages_per_seq*page_size = {cap}"
         req = Request(self.rid, list(prompt), max_new, arrival=self.step_count)
+        req.submit_ts = time.monotonic()
+        if tenant is not None:
+            req.tenant = tenant
+        qos = self.scfg.qos
+        if qos is not None:
+            spec = qos.spec(tenant)
+            req.priority = spec.priority
+            if qos.placement_weights:
+                req.weight = spec.page_weight
+            if spec.deadline_s is not None:
+                req.deadline = req.submit_ts + spec.deadline_s
         req.tokens = []          # processed tokens (prompt-consumed + generated)
         req.generated = []       # type: ignore[attr-defined]
         self.rid += 1
@@ -170,7 +199,21 @@ class PagedServingEngine:
             if pid is None:
                 return False
             req.pages.append(pid)
+            if req.weight != 1.0:
+                # tenant utility weight rides onto the page for the memos
+                # planner (demotion resistance + ranking multiplier)
+                self.memos.set_page_weight([pid], req.weight)
         return self._promote_all([req])
+
+    def _release_pages(self, req: Request) -> None:
+        """Free a retired request's pages, first resetting any tenant
+        utility weight back to neutral — recycled pages must not inherit
+        the previous owner's demotion resistance."""
+        if req.weight != 1.0 and req.pages:
+            self.memos.set_page_weight(req.pages, 1.0)
+        for pid in req.pages:
+            self.kv.free_page(pid)
+        req.pages = []
 
     def _promote_all(self, reqs: list[Request]) -> bool:
         """Promote every non-servable page of ``reqs`` in one batched
@@ -186,10 +229,13 @@ class PagedServingEngine:
             mask = self._servable_mask(pids)
         return bool(mask.all())
 
-    def _make_room(self) -> bool:
-        victim = self.batcher.preempt_lowest()
+    def _make_room(self, max_priority: int | None = None) -> bool:
+        victim = self.batcher.preempt_lowest(max_priority)
         if victim is None:
             return False
+        obs.get_registry().counter(
+            "serving.preemptions",
+            "running sequences preempted for capacity").inc()
         # eagerly demote the victim's serving-tier pages: preemption must
         # actually free tier-0 slots, because the lazy memos drain only
         # runs between dispatches and admission can be blocked *now*
@@ -211,9 +257,7 @@ class PagedServingEngine:
         its pages (quarantined pages have no slot left — ``release`` is a
         no-op for them and only the logical id returns) and retire it
         through the scheduler so the batch keeps serving."""
-        for pid in req.pages:
-            self.kv.free_page(pid)
-        req.pages = []
+        self._release_pages(req)
         self.batcher.fail(req, self.step_count, err)
         obs.get_registry().counter(
             "serving.failed_requests",
@@ -648,6 +692,34 @@ class PagedServingEngine:
             reg.gauge(f"serving.queue_{qn}",
                       f"scheduler {qn} queue depth").set(qv)
 
+    def _publish_first_token(self, req: Request) -> None:
+        """Wall-clock TTFT, aggregate + per-tenant (metric-name label)."""
+        if req.ttft_s is None:
+            return
+        reg = obs.get_registry()
+        reg.histogram("serving.ttft_s",
+                      "wall-clock time to first token").observe(req.ttft_s)
+        reg.histogram(f"qos.ttft_s.{req.tenant}",
+                      "per-tenant wall-clock TTFT").observe(req.ttft_s)
+
+    def _publish_finish(self, req: Request) -> None:
+        """Wall-clock end-to-end latency + mean inter-token latency for a
+        completed request, aggregate + per-tenant."""
+        if req.e2e_s is None:
+            return
+        reg = obs.get_registry()
+        reg.histogram("serving.e2e_latency_s",
+                      "wall-clock submit-to-finish latency").observe(
+                          req.e2e_s)
+        reg.histogram(f"qos.e2e_s.{req.tenant}",
+                      "per-tenant wall-clock e2e latency").observe(req.e2e_s)
+        if req.first_token_ts is not None and len(req.generated) > 1:
+            itl = ((req.finish_ts - req.first_token_ts)
+                   / (len(req.generated) - 1))
+            reg.histogram(f"qos.itl_s.{req.tenant}",
+                          "per-tenant mean inter-token latency").observe(
+                              itl, n=len(req.generated) - 1)
+
     def step(self) -> dict:
         # 0) fail owners of pages quarantined since the last boundary
         # (memos-pass scrub, late promotion pre-flights) before admitting
@@ -658,21 +730,40 @@ class PagedServingEngine:
         # progress (its blocker holds the pool) — stop admitting and let
         # the dispatch/memos machinery below free capacity first.
         failed: set[int] = set()
+        # power governor (repro.qos): while over the dynamic-power budget
+        # the admission width shrinks one slot per throttle level, so the
+        # write stream — and with it NVM dynamic power — backs off
+        gov = self.memos.governor
+        limit = (gov.batch_limit(self.scfg.max_batch)
+                 if gov is not None else None)
         with obs.span("serve.admit", step=self.step_count):
             while True:
-                admitted = self.batcher.admit()
+                admitted = self.batcher.admit(limit)
                 if not admitted:
                     break
+                obs.get_registry().counter(
+                    "serving.admissions",
+                    "requests admitted into decode slots").inc(len(admitted))
                 ok = True
                 stuck = False
+                need_room = 0
                 for req in admitted:
                     if req.start_step is None:
                         req.start_step = self.step_count
                     if not self._ensure_pages(req):
                         ok = False
+                        need_room = max(need_room, req.priority)
                         stuck = stuck or req.rid in failed
                         failed.add(req.rid)
-                if stuck or (not ok and not self._make_room()):
+                if stuck:
+                    break
+                # admission-time preemption is priority-bounded: freeing
+                # room for a request may only evict strictly lower
+                # priority (unbounded preemption stays reserved for the
+                # provision loop, where the dispatch must proceed)
+                if not ok and not self._make_room(
+                        need_room - 1 if self.batcher.priority_aware
+                        else None):
                     break
 
         active = list(self.batcher.active)
@@ -922,17 +1013,25 @@ class PagedServingEngine:
         with obs.span("serve.retire", step=self.step_count):
             emit_from = np.maximum(prompt_lens - 1 - positions, 0)
             for i, req in enumerate(active):
+                had_gen = bool(req.generated)
                 new_gen = [int(t) for t in sampled[emit_from[i]:k, i]]
                 req.generated.extend(new_gen)
                 self.tokens_out += len(new_gen)
+                if new_gen and not had_gen:
+                    # first token of this request surfaced in this block:
+                    # stamp both clocks (wall for reporting, step for the
+                    # deterministic QoS gates — the inner step that
+                    # sampled it)
+                    req.first_token_step = self.step_count + int(emit_from[i])
+                    req.first_token_ts = time.monotonic()
+                    self._publish_first_token(req)
                 seq = req.prompt + req.generated
                 p0 = int(positions[i])
                 req.tokens.extend(seq[p0:p0 + k])
                 if len(req.generated) >= req.max_new:
                     self.batcher.finish(req, self.step_count + k - 1)
-                    for pid in req.pages:
-                        self.kv.free_page(pid)
-                    req.pages = []
+                    self._publish_finish(req)
+                    self._release_pages(req)
 
         # 6) memos loop between dispatches (hot pages stay; cold/preempted
         # pages drain to host) — pass granularity, off the decode hot
@@ -954,6 +1053,9 @@ class PagedServingEngine:
                     "to_fast": report.migrations.to_fast,
                     "to_slow": report.migrations.to_slow,
                     "wear_pressure": report.wear_pressure,
+                    "power_pressure": report.power_pressure,
+                    "power_throttle": report.power_throttle,
+                    "power_mw": report.power_mw,
                     "committed_async": report.committed_async,
                     "plan_conflict": report.plan_conflict,
                     "pages_committed": report.pages_committed,

@@ -1,0 +1,306 @@
+"""Multi-tenant QoS subsystem tests (repro.qos + the scheduler/placement/
+memos/engine hooks):
+
+  * trace generation is deterministic and round-trips byte-for-byte
+    through the JSONL schema;
+  * the power governor's throttle/recovery state machine;
+  * placement with page weights: all-ones parity (bit-identical to the
+    pre-QoS planner), demotion resistance for weighted pages, weighted
+    ranking; energy-aware intermediate fill stays valid;
+  * the headline compatibility pin: an engine with ``qos=None`` and one
+    with a bare ``QoSConfig()`` produce **bit-identical** scheduler
+    decisions and served tokens;
+  * tenant priorities actually reorder service end to end;
+  * wall-clock timestamps + TTFT/e2e/ITL histograms publish per tenant.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import registry, smoke
+from repro.core import placement
+from repro.core.patterns import RD, WD
+from repro.core.predictor import UN_WD, WD_FREQ_H
+from repro.models import transformer as T
+from repro.qos import (BATCH, LATENCY_CRITICAL, PowerGovernor, QoSConfig,
+                       tenant_for_class)
+from repro.qos.traces import (ArrivalSpec, canonical_specs, generate_trace,
+                              read_trace, write_trace)
+from repro.serving import PagedServingEngine, ServeConfig
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke(registry()["qwen3_4b"])
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(autouse=True)
+def fresh_registry():
+    obs.reset()
+    yield
+    obs.reset()
+
+
+# -- traces -------------------------------------------------------------------
+
+def test_trace_generation_deterministic():
+    specs = [ArrivalSpec("a", process="poisson", rate_rps=5.0),
+             ArrivalSpec("b", tier_class=BATCH, process="bursty",
+                         rate_rps=6.0, burst_size=3),
+             ArrivalSpec("c", process="diurnal", rate_rps=4.0)]
+    m1, e1 = generate_trace("t", specs, 3.0, seed=42)
+    m2, e2 = generate_trace("t", specs, 3.0, seed=42)
+    assert m1 == m2
+    assert [(e.rid, e.t, e.tenant, e.prompt, e.max_new) for e in e1] == \
+        [(e.rid, e.t, e.tenant, e.prompt, e.max_new) for e in e2]
+    # adding a stream never perturbs existing streams' arrivals
+    m3, e3 = generate_trace("t", specs + [ArrivalSpec("d")], 3.0, seed=42)
+    a_times = [e.t for e in e1 if e.tenant == "a"]
+    assert [e.t for e in e3 if e.tenant == "a"] == a_times
+    assert all(e.t < 3.0 for e in e1)
+    assert [e.rid for e in e1] == sorted(e.rid for e in e1)
+
+
+def test_trace_jsonl_roundtrip_byte_identical(tmp_path):
+    name, (specs, dur, seed) = next(iter(canonical_specs().items()))
+    meta, events = generate_trace(name, specs, dur, seed)
+    p1 = write_trace(tmp_path / "a.jsonl", meta, events)
+    meta2, events2 = read_trace(p1)
+    p2 = write_trace(tmp_path / "b.jsonl", meta2, events2)
+    assert p1.read_bytes() == p2.read_bytes()
+    assert meta2["n_requests"] == len(events2) == len(events)
+
+
+# -- power governor -----------------------------------------------------------
+
+def test_power_governor_throttle_and_hysteresis():
+    g = PowerGovernor(budget_mw=100.0, recover_passes=2)
+    assert not g.pressure and g.batch_limit(4) == 4
+    assert g.observe(150.0)           # over: throttle 1
+    assert g.observe(120.0)           # over: throttle 2
+    assert g.pressure and g.throttle == 2 and g.batch_limit(4) == 2
+    assert g.peak_power_mw == 150.0 and g.over_budget_passes == 2
+    assert not g.observe(90.0)        # calm 1: no release yet
+    assert g.throttle == 2
+    assert not g.observe(80.0)        # calm 2: release one level
+    assert g.throttle == 1
+    g.observe(85.0)
+    g.observe(85.0)                   # two more calm passes: released
+    assert g.throttle == 0 and not g.pressure
+    # throttle never exceeds max and batch_limit never drops below 1
+    for _ in range(20):
+        g.observe(1e9)
+    assert g.throttle == g.max_throttle
+    assert g.batch_limit(4) == 1
+
+
+# -- placement: page weights + energy-aware fill ------------------------------
+
+def _summary(n, wd_code, hot, future, reuse, hotness):
+    class S:
+        pass
+
+    s = S()
+    s.wd_code = np.asarray(wd_code)
+    s.hot = np.asarray(hot, bool)
+    s.future = np.asarray(future)
+    s.reuse_class = np.asarray(reuse)
+    s.hotness = np.asarray(hotness, np.float64)
+    return s
+
+
+def test_plan_all_ones_weight_is_bit_identical():
+    rng = np.random.RandomState(3)
+    n = 64
+    s = _summary(n, rng.randint(0, 3, n), rng.rand(n) < 0.3,
+                 rng.randint(0, 3, n), rng.randint(0, 3, n),
+                 rng.rand(n) * 10)
+    cur = rng.randint(0, 2, n).astype(np.int8)
+    base = placement.plan(s, cur.copy())
+    ones = placement.plan(s, cur.copy(), page_weight=np.ones(n))
+    none = placement.plan(s, cur.copy(), page_weight=None,
+                          energy_aware=False)
+    for a, b in ((base, ones), (base, none)):
+        assert np.array_equal(a.target_tier, b.target_tier)
+        assert np.array_equal(a.migrate, b.migrate)
+        assert np.array_equal(a.hotness_list, b.hotness_list)
+
+
+def test_weighted_pages_resist_demotion():
+    n = 4
+    # all pages cold RD in tier 0: the rule wants them all demoted
+    s = _summary(n, [RD] * n, [False] * n, [UN_WD] * n, [0] * n,
+                 [1.0] * n)
+    cur = np.zeros(n, np.int8)
+    base = placement.plan(s, cur.copy())
+    assert base.migrate.all(), "sanity: unweighted pages all demote"
+    w = np.ones(n)
+    w[1] = 4.0                        # the LC tenant's page
+    dec = placement.plan(s, cur.copy(), page_weight=w)
+    assert dec.target_tier[1] == 0 and not dec.migrate[1]
+    assert dec.migrate[[0, 2, 3]].all(), "neutral pages still demote"
+    # promotion is never blocked by weight
+    s2 = _summary(n, [WD] * n, [True] * n, [WD_FREQ_H] * n, [0] * n,
+                  [5.0] * n)
+    dec2 = placement.plan(s2, np.ones(n, np.int8), page_weight=w)
+    assert dec2.migrate.all() and (dec2.target_tier == 0).all()
+
+
+def test_weight_scales_migration_ranking():
+    n = 3
+    s = _summary(n, [WD] * n, [True] * n, [WD_FREQ_H] * n, [0] * n,
+                 [1.0, 2.0, 3.0])
+    cur = np.ones(n, np.int8)
+    base = placement.plan(s, cur.copy())
+    assert list(base.hotness_list) == [2, 1, 0]
+    w = np.array([10.0, 1.0, 1.0])
+    dec = placement.plan(s, cur.copy(), page_weight=w)
+    assert list(dec.hotness_list) == [0, 2, 1], \
+        "weight multiplies hotness in the HL ranking"
+
+
+def test_energy_aware_fill_valid_and_two_tier_noop():
+    from repro.core.hierarchy import MemoryHierarchy
+    rng = np.random.RandomState(5)
+    n = 48
+    s = _summary(n, rng.randint(0, 3, n), rng.rand(n) < 0.2,
+                 rng.randint(0, 3, n), rng.randint(0, 3, n), rng.rand(n))
+    s.reads = rng.randint(0, 50, n)
+    s.writes = rng.randint(0, 50, n)
+    cur = rng.randint(0, 2, n).astype(np.int8)
+    # two-tier: no intermediate tiers, so energy_aware changes nothing
+    base = placement.plan(s, cur.copy())
+    ea = placement.plan(s, cur.copy(), energy_aware=True)
+    assert np.array_equal(base.target_tier, ea.target_tier)
+    # three-tier: decision stays structurally valid under the energy cost
+    h3 = MemoryHierarchy.three_tier(8, 8, 64)
+    cur3 = rng.randint(0, 3, n).astype(np.int8)
+    d3 = placement.plan(s, cur3, hierarchy=h3, energy_aware=True)
+    assert set(np.unique(d3.target_tier)).issubset({0, 1, 2})
+    assert int((d3.target_tier == 1).sum()) <= 8
+
+
+# -- engine integration -------------------------------------------------------
+
+def _serve(cfg, params, qos, submits, **kw):
+    scfg = dict(page_size=8, max_batch=2, fast_slots=12, slow_slots=128,
+                memos_interval=5, qos=qos)
+    scfg.update(kw)
+    eng = PagedServingEngine(cfg, params, ServeConfig(**scfg))
+    reqs = [eng.submit(p, max_new=n, tenant=t) for p, n, t in submits]
+    eng.run(max_steps=600)
+    assert eng.batcher.all_done()
+    eng.close()
+    return eng, reqs
+
+
+def test_bare_qos_config_bit_identical_to_none(model):
+    """The acceptance pin: with no tenants configured, scheduler
+    decisions and served tokens are bit-identical to pre-QoS behavior —
+    under memory pressure (preemptions) and across memos passes."""
+    cfg, params = model
+    submits = [([5, 7, 9, 11, 13], 6, None), ([21, 22, 23], 6, None),
+               ([1, 2, 3, 4, 5, 6, 7, 8, 9], 6, None)]
+    eng_a, reqs_a = _serve(cfg, params, None, submits, max_batch=3)
+    eng_b, reqs_b = _serve(cfg, params, QoSConfig(), submits, max_batch=3)
+    for ra, rb in zip(reqs_a, reqs_b):
+        assert ra.generated == rb.generated
+        assert ra.finish_step == rb.finish_step
+        assert ra.start_step == rb.start_step
+        assert ra.first_token_step == rb.first_token_step
+    assert [r.rid for r in eng_a.batcher.finished] == \
+        [r.rid for r in eng_b.batcher.finished]
+    assert np.array_equal(eng_a.kv.store.tier, eng_b.kv.store.tier)
+    assert eng_a.batcher.n_preempted == eng_b.batcher.n_preempted
+    assert eng_a.step_count == eng_b.step_count
+
+
+def test_priority_reorders_service_end_to_end(model):
+    """One decode slot, two queued batch requests, then an LC arrival:
+    priority-aware serves the LC request before the queued batch ones;
+    the blind engine serves strict FIFO."""
+    cfg, params = model
+    qos = QoSConfig(tenants=(tenant_for_class("lc", LATENCY_CRITICAL),
+                             tenant_for_class("bat", BATCH)))
+    submits = [([3, 4, 5], 4, "bat"), ([6, 7, 8], 4, "bat"),
+               ([9, 10, 11], 4, "lc")]
+    eng_aware, r_aware = _serve(cfg, params, qos, submits, max_batch=1,
+                                fast_slots=32)
+    eng_blind, r_blind = _serve(cfg, params, None, submits, max_batch=1,
+                                fast_slots=32)
+    fin_aware = [r.tenant for r in eng_aware.batcher.finished]
+    fin_blind = [r.rid for r in eng_blind.batcher.finished]
+    assert fin_blind == [0, 1, 2], "blind engine is FIFO"
+    assert fin_aware.index("lc") < 2, \
+        "LC must overtake at least one queued batch request"
+    assert r_aware[2].first_token_step < r_blind[2].first_token_step
+    # same tokens regardless of order (greedy decode is per-sequence)
+    for ra, rb in zip(r_aware, r_blind):
+        assert ra.generated == rb.generated
+    # tenant identity landed on the requests
+    assert r_aware[2].priority > r_aware[0].priority
+    assert r_aware[2].weight == 4.0 and r_aware[0].weight == 1.0
+
+
+def test_timestamps_and_histograms_publish(model):
+    cfg, params = model
+    qos = QoSConfig(tenants=(tenant_for_class("lc", LATENCY_CRITICAL),))
+    _, reqs = _serve(cfg, params, qos,
+                     [([5, 6, 7], 4, "lc"), ([8, 9, 10], 4, None)])
+    for r in reqs:
+        assert r.submit_ts is not None
+        assert r.first_token_ts is not None and r.finish_ts is not None
+        assert r.finish_ts >= r.first_token_ts >= r.submit_ts
+        assert r.ttft_s is not None and r.ttft_s >= 0
+        assert r.e2e_s is not None and r.e2e_s >= r.ttft_s
+    flat = obs.get_registry().flat()
+    assert flat["serving.ttft_s.count"] == 2
+    assert flat["serving.e2e_latency_s.count"] == 2
+    assert flat["qos.ttft_s.lc.count"] == 1
+    assert flat["qos.ttft_s.default.count"] == 1
+    assert flat["qos.e2e_s.lc.p50"] > 0
+    assert flat["qos.itl_s.lc.count"] == 3    # max_new-1 token gaps
+    assert flat["serving.admissions"] >= 2
+
+
+def test_power_cap_shrinks_admission_and_recovers(model):
+    """A tight budget must drive the governor's throttle up (admission
+    narrows below max_batch) and telemetry must record the over-budget
+    passes; with no budget the governor is absent entirely."""
+    cfg, params = model
+    submits = [([i + 1, i + 2, i + 3], 8, None) for i in range(4)]
+    eng_free, _ = _serve(cfg, params, QoSConfig(), submits,
+                         max_batch=4, fast_slots=4, slow_slots=128,
+                         memos_interval=4)
+    assert eng_free.memos.governor is None
+    peak = max((r.power_mw for r in eng_free.memos.reports), default=0.0)
+    assert peak > 0, "pressure config must generate slow-tier power"
+    qos = QoSConfig(power_budget_mw=peak * 0.2)
+    eng_cap, reqs = _serve(cfg, params, qos, submits,
+                           max_batch=4, fast_slots=4, slow_slots=128,
+                           memos_interval=4)
+    gov = eng_cap.memos.governor
+    assert gov is not None and gov.over_budget_passes > 0
+    assert any(r.power_throttle > 0 for r in eng_cap.memos.reports)
+    assert any(r.power_pressure for r in eng_cap.memos.reports)
+    assert all(r.generated for r in reqs), "capped engine still serves"
+    flat = obs.get_registry().flat()
+    assert flat["power.budget_mw"] == pytest.approx(peak * 0.2)
+    assert flat["power.over_budget_passes"] > 0
+
+
+def test_report_roundtrip_with_power_fields(model):
+    cfg, params = model
+    qos = QoSConfig(power_budget_mw=0.001)
+    eng, _ = _serve(cfg, params, qos, [([5, 6, 7], 6, None)],
+                    memos_interval=4)
+    from repro.core.memos import MemosReport
+    r = eng.memos.reports[-1]
+    rt = MemosReport.from_dict(r.to_dict())
+    assert rt.power_mw == r.power_mw
+    assert rt.power_throttle == r.power_throttle
+    assert rt.power_pressure == r.power_pressure
+    assert "power_mw" in r.flat_metrics()

@@ -1,0 +1,171 @@
+"""ContinuousBatcher unit tests: admission / preemption / resume / fail
+ordering, free-slot reuse, and the priority-aware policy paths — plus the
+pins that make the QoS work safe: the legacy (priority-blind) admission
+order is bit-identical to the pre-QoS scheduler, and the priority-aware
+order fixes the resumed-batch-starves-new-LC hazard."""
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+def mk(rid, priority=0, tenant="default", prompt=None, max_new=3):
+    r = Request(rid, prompt or [1, 2], max_new, tenant=tenant,
+                priority=priority)
+    return r
+
+
+def fill(b, reqs):
+    for r in reqs:
+        b.submit(r)
+    return b
+
+
+# -- legacy (priority-blind) policy: exact pre-QoS behavior -------------------
+
+def test_legacy_admit_fifo_and_slot_order():
+    b = fill(ContinuousBatcher(3), [mk(i) for i in range(5)])
+    admitted = b.admit()
+    assert [r.rid for r in admitted] == [0, 1, 2]
+    assert [r.slot for r in admitted] == [0, 1, 2]
+    assert [r.rid for r in b.waiting] == [3, 4]
+
+
+def test_legacy_preempted_drains_before_waiting():
+    """The legacy admission order, pinned verbatim: resumed requests
+    always win over new arrivals regardless of anything else.  This is
+    the starvation hazard the priority-aware policy exists to fix — but
+    with QoS off it must stay exactly as it always was."""
+    b = fill(ContinuousBatcher(2), [mk(0), mk(1), mk(2)])
+    b.admit()
+    victim = b.preempt_lowest()
+    assert victim.rid == 0            # start_step unset: max() keeps the
+    #                                   first of the tied slots
+    b.submit(mk(9))                   # new arrival AFTER the preemption
+    admitted = b.admit()              # one free slot: the resumed req wins
+    assert admitted == [victim], "resumed must come first under legacy"
+    assert [r.rid for r in b.waiting] == [2, 9]
+
+
+def test_legacy_preempt_is_pure_lifo():
+    b = fill(ContinuousBatcher(3), [mk(i) for i in range(3)])
+    for i, r in enumerate(b.admit()):
+        r.start_step = i              # 0, 1, 2 — rid 2 admitted last
+    assert b.preempt_lowest().rid == 2
+    assert b.preempt_lowest().rid == 1
+
+
+def test_free_slot_reuse():
+    b = fill(ContinuousBatcher(2), [mk(i) for i in range(4)])
+    b.admit()
+    b.finish(b.running[0], step=3)    # frees slot 0
+    nxt = b.admit()
+    assert len(nxt) == 1 and nxt[0].rid == 2 and nxt[0].slot == 0
+    assert set(b.running) == {0, 1}
+
+
+def test_finish_and_fail_retire_everywhere():
+    b = fill(ContinuousBatcher(2), [mk(i) for i in range(4)])
+    b.admit()
+    waiting_req = b.waiting[0]        # rid 2
+    b.fail(waiting_req, step=1, error=RuntimeError("boom"))
+    assert waiting_req.done and waiting_req.error is not None
+    assert waiting_req.finish_ts is not None
+    assert [r.rid for r in b.waiting] == [3]
+    victim = b.preempt_lowest()
+    b.fail(victim, step=2, error=RuntimeError("boom"))
+    assert not b.preempted
+    running = next(iter(b.running.values()))
+    b.finish(running, step=4)
+    assert running.finish_step == 4 and running.finish_ts is not None
+    b.admit()
+    b.finish(next(iter(b.running.values())), step=5)
+    assert b.all_done()
+    assert len(b.finished) == 4
+
+
+def test_admit_limit_caps_running():
+    b = fill(ContinuousBatcher(4), [mk(i) for i in range(4)])
+    assert len(b.admit(limit=2)) == 2
+    assert len(b.running) == 2
+    assert b.admit(limit=2) == []     # already at the cap
+    assert len(b.admit(limit=None)) == 2
+
+
+# -- priority-aware policy ----------------------------------------------------
+
+def test_priority_admit_highest_first_fifo_within():
+    b = ContinuousBatcher(2, priority_aware=True)
+    fill(b, [mk(0, priority=0), mk(1, priority=2), mk(2, priority=1),
+             mk(3, priority=2)])
+    admitted = b.admit()
+    assert [r.rid for r in admitted] == [1, 3]   # both prio 2, FIFO
+    b.finish(admitted[0], step=1)
+    assert b.admit()[0].rid == 2                 # prio 1 before prio 0
+
+
+def test_priority_fixes_resumed_batch_starving_new_lc():
+    """The satellite-1 scenario: a preempted batch request must NOT
+    starve a newly-arrived latency-critical request under the
+    priority-aware policy (it did — and still does — under legacy)."""
+    b = ContinuousBatcher(1, priority_aware=True)
+    fill(b, [mk(0, priority=0, tenant="batch")])
+    b.admit()
+    victim = b.preempt_lowest()
+    assert victim.rid == 0
+    b.submit(mk(1, priority=2, tenant="lc"))
+    admitted = b.admit()
+    assert admitted[0].rid == 1, "LC arrival must beat the resumed batch req"
+    assert [r.rid for r in b.preempted] == [0]
+
+
+def test_priority_resumed_before_new_within_priority():
+    b = ContinuousBatcher(1, priority_aware=True)
+    fill(b, [mk(0, priority=1)])
+    b.admit()
+    victim = b.preempt_lowest()
+    b.submit(mk(1, priority=1))       # same priority, new arrival
+    assert b.admit()[0] is victim
+
+
+def test_priority_preempt_lowest_then_lifo():
+    b = ContinuousBatcher(3, priority_aware=True)
+    fill(b, [mk(0, priority=2), mk(1, priority=0), mk(2, priority=0)])
+    for i, r in enumerate(b.admit()):
+        r.start_step = i
+    v = b.preempt_lowest()
+    assert v.rid == 2                 # lowest priority (0), LIFO within
+    v = b.preempt_lowest()
+    assert v.rid == 1
+    v = b.preempt_lowest()
+    assert v.rid == 0                 # only the prio-2 one left
+
+
+def test_preempt_max_priority_guard():
+    b = ContinuousBatcher(2, priority_aware=True)
+    fill(b, [mk(0, priority=2), mk(1, priority=1)])
+    b.admit()
+    assert b.preempt_lowest(max_priority=0) is None
+    v = b.preempt_lowest(max_priority=1)
+    assert v.rid == 1
+    # only a prio-2 victim remains; a guard below it refuses
+    assert b.preempt_lowest(max_priority=1) is None
+    assert b.preempt_lowest() is not None   # unbounded still works
+
+
+def test_uniform_priorities_reduce_to_legacy_victim():
+    """With every priority equal, the aware preemption picks exactly the
+    legacy pure-LIFO victim — the reduction that makes one code path
+    safe for both modes."""
+    for aware in (False, True):
+        b = ContinuousBatcher(3, priority_aware=aware)
+        fill(b, [mk(i) for i in range(3)])
+        for i, r in enumerate(b.admit()):
+            r.start_step = i
+        assert [b.preempt_lowest().rid for _ in range(3)] == [2, 1, 0]
+
+
+def test_decision_counters():
+    b = fill(ContinuousBatcher(2), [mk(i) for i in range(3)])
+    b.admit()
+    b.preempt_lowest()
+    b.admit()
+    assert b.n_admitted == 3          # 2 initial + 1 resume
+    assert b.n_preempted == 1
