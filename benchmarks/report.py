@@ -147,8 +147,9 @@ def serving_sweep_rows(r: dict) -> list[str]:
     paths = sorted({k.rsplit("_", 1)[0] for k in sweep}, key=path_key)
     base = sweep.get("reference_memos", {}).get("tokens_per_s")
     lines = ["| path | tok/s (memos on) | tok/s (memos off) | "
-             "vs reference (memos on) | tok p50/p99 ms | overlap eff | "
-             "committed/degraded |", "|---|---|---|---|---|---|---|"]
+             "vs reference (memos on) | tok p50/p99 ms | TTFT p50/p99 ms "
+             "| prefill tok/s | overlap eff | committed/degraded |",
+             "|---|---|---|---|---|---|---|---|---|"]
     for p in paths:
         row_on = sweep.get(f"{p}_memos", {})
         on = row_on.get("tokens_per_s")
@@ -159,13 +160,20 @@ def serving_sweep_rows(r: dict) -> list[str]:
         lat_s = (f"{lat(row_on, 'token_p50_ms')}/"
                  f"{lat(row_on, 'token_p99_ms')}"
                  if row_on.get("latency") else "—")
+        ttft_s = (f"{lat(row_on, 'ttft_p50_ms')}/"
+                  f"{lat(row_on, 'ttft_p99_ms')}"
+                  if row_on.get("latency", {}).get("ttft_p50_ms")
+                  is not None else "—")
+        pf = row_on.get("prefill_tokens_per_s")
+        pf_s = f"{pf:.0f}" if pf else "—"
         eff = row_on.get("overlap_efficiency")
         eff_s = f"{eff:.2f}" if eff is not None else "—"
         pages_s = (f"{row_on['pages_committed']}/{row_on['pages_degraded']}"
                    if "pages_committed" in row_on else "—")
         lines.append(f"| {p} | {on_s} | {off_s} | {rel} | {lat_s} | "
-                     f"{eff_s} | {pages_s} |" if on or off
-                     else f"| {p} | — | — | — | — | — | — |")
+                     f"{ttft_s} | {pf_s} | {eff_s} | {pages_s} |"
+                     if on or off
+                     else f"| {p} | — | — | — | — | — | — | — | — |")
     kmax = r.get("k_max")
     deltas = [("overlap vs sync", r.get("speedup_overlap_vs_sync")),
               ("pinned vs sync", r.get("speedup_pinned_vs_sync")),
@@ -196,6 +204,19 @@ def serving_sweep_rows(r: dict) -> list[str]:
                                   f"({a / b:.2f}x)")
         if lat_deltas:
             lines.append("Token p99 latency: " + ", ".join(lat_deltas))
+    pf_ratio = r.get("speedup_prefill_vs_replay_decode")
+    if pf_ratio is not None:
+        lines.append("")
+        lines.append(f"Packed prefill at K={kmax}: aggregate decode "
+                     f"tokens/s = {pf_ratio:.2f}x the prompt-replay path")
+    tr = r.get("speedup_prefill_ttft_p50")
+    if tr is not None:
+        rep, pre = r.get("ttft_replay", {}), r.get("ttft_prefill", {})
+        lines.append(f"TTFT at prompt {r.get('ttft_prompt_len', '?')}: "
+                     f"p50 replay {rep.get('p50_ms', 0):.1f} ms vs "
+                     f"prefill {pre.get('p50_ms', 0):.1f} ms = {tr:.1f}x "
+                     f"(p99 {rep.get('p99_ms', 0):.1f} vs "
+                     f"{pre.get('p99_ms', 0):.1f} ms)")
     ratio = r.get("tracing_overhead_ratio")
     if ratio is not None:
         lines.append("")

@@ -21,13 +21,21 @@ axes (the PR 5 tentpole):
   * +pinned         — the slow tier is a pinned-host jax pool: demotion
                       commits donate the pool, slow-tier KV appends and
                       wear telemetry join the fused dispatch;
-  * +overlap+pinned — both.
+  * +overlap+pinned — both;
+  * +prefill        — bucketed packed prefill: prompts ingest through one
+                      AOT-compiled full-sequence dispatch per pow2 bucket
+                      instead of replaying the prompt one decode step at
+                      a time (real TTFT).
 
-Bars: fused K=16 >= 3x the K=1 reference path (the fusion PR's bar), and
+Bars: fused K=16 >= 3x the K=1 reference path (the fusion PR's bar),
 EACH overlapped config must independently reach ``--overlap-bar`` x its
 own synchronous counterpart (+overlap vs the plain K_max path,
 +overlap+pinned vs +pinned — so the pinned tier's inherent cost is never
-billed to the overlap machinery).  Default 1.0: with page-granular
+billed to the overlap machinery), the +prefill engine must hold
+``--prefill-bar`` x the replay path's aggregate decode tokens/s, and
+with ``--ttft-bar`` set, its p50 TTFT at ``--ttft-prompt-len`` must be
+at least that factor better than prompt replay (paired interleaved
+rounds).  Default 1.0: with page-granular
 commits overlap is a strict win, so the gate is no-regression; a failure
 names the offending config.  A conflict-free
 serving run must also report ``pages_degraded == 0`` for every memos-on
@@ -52,7 +60,7 @@ ROOT = Path(__file__).resolve().parents[1]
 
 
 def build_engine(cfg, params, *, k, memos, reference, args,
-                 overlap=False, pinned=False):
+                 overlap=False, pinned=False, prefill=False):
     from repro.core.hierarchy import MemoryHierarchy
     from repro.serving import PagedServingEngine, ServeConfig
     hier = (MemoryHierarchy.two_tier(args.fast_slots, args.slow_slots,
@@ -63,7 +71,8 @@ def build_engine(cfg, params, *, k, memos, reference, args,
         fast_slots=args.fast_slots, slow_slots=args.slow_slots,
         hierarchy=hier, memos_interval=args.memos_interval,
         memos_enabled=memos, max_pages_per_seq=args.max_pages,
-        decode_block=k, overlap_plan=overlap, reference=reference))
+        decode_block=k, overlap_plan=overlap, reference=reference,
+        prefill=prefill))
 
 
 def serve_round(engine, cfg, args, rng):
@@ -81,7 +90,7 @@ def serve_round(engine, cfg, args, rng):
 
 
 def measure(cfg, params, *, k, memos, reference, args,
-            overlap=False, pinned=False, tag=""):
+            overlap=False, pinned=False, prefill=False, tag=""):
     """Throughput for one engine config.  The engine persists across
     rounds (as in a real server), so jit caches stay warm; round 0 pays
     every compile and is discarded.  The obs metrics registry is reset
@@ -91,23 +100,27 @@ def measure(cfg, params, *, k, memos, reference, args,
     from repro.core.memos import aggregate_reports
     label = ("reference" if reference else f"k{k}") + \
         ("+overlap" if overlap else "") + ("+pinned" if pinned else "") + \
+        ("+prefill" if prefill else "") + \
         ("_memos" if memos else "_nomemos")
     engine = build_engine(cfg, params, k=k, memos=memos,
                           reference=reference, args=args,
-                          overlap=overlap, pinned=pinned)
+                          overlap=overlap, pinned=pinned, prefill=prefill)
     if not reference:
         # compile every dispatch variant up front (tail-shrunken K,
-        # dual-pool when pinned) — which variant a boundary needs depends
-        # on runtime state, and a mid-round compile would be timed
+        # dual-pool when pinned, every advertised prefill bucket) — which
+        # variant a boundary needs depends on runtime state, and a
+        # mid-round compile would be timed
         engine.warmup()
     best = float("inf")
+    ttfts: list[float] = []
     for rep in range(args.repeats + 1):       # rep 0 warms compile caches
         if rep == 1:
             obs.reset()   # drop warmup-round metrics (compiles, cold caches)
         rng = np.random.RandomState(0)
-        _, dt = serve_round(engine, cfg, args, rng)
+        reqs, dt = serve_round(engine, cfg, args, rng)
         if rep > 0:
             best = min(best, dt)
+            ttfts += [r.ttft_s for r in reqs if r.ttft_s is not None]
     toks = args.requests * args.max_new
     flat = obs.get_registry().flat()
     agg = aggregate_reports(engine.memos.reports)
@@ -132,13 +145,27 @@ def measure(cfg, params, *, k, memos, reference, args,
                 flat.get("serving.token_latency_s.p50", 0.0) * 1e3,
             "token_p99_ms":
                 flat.get("serving.token_latency_s.p99", 0.0) * 1e3,
+            "ttft_p50_ms":
+                float(np.percentile(ttfts, 50)) * 1e3 if ttfts else None,
+            "ttft_p99_ms":
+                float(np.percentile(ttfts, 99)) * 1e3 if ttfts else None,
         },
     }
+    # prompt-ingest rate: prompt tokens the packed prefill dispatches
+    # consumed per second of prefill wall time (absent on replay paths)
+    pf_tok = flat.get("serving.prefill_tokens", 0)
+    pf_sec = flat.get("serving.prefill_latency_s.sum", 0.0)
+    if pf_tok:
+        row["prefill_tokens"] = pf_tok
+        row["prefill_dispatches"] = flat.get("serving.prefill_dispatches", 0)
+        row["prefill_tokens_per_s"] = pf_tok / pf_sec if pf_sec else None
     eff = row["overlap_efficiency"]
+    ttft_s = row["latency"]["ttft_p50_ms"]
     print(f"  {label + tag:18s}: {best * 1e3:8.1f} ms  "
           f"{row['tokens_per_s']:10.1f} tok/s  "
           f"tok p50/p99 {row['latency']['token_p50_ms']:.2f}/"
           f"{row['latency']['token_p99_ms']:.2f} ms"
+          + (f"  ttft p50 {ttft_s:.1f} ms" if ttft_s is not None else "")
           + (f"  ovl {eff:.2f}" if eff is not None else ""))
     engine.close()        # stop the async plan worker, if any
     return label, row
@@ -179,6 +206,43 @@ def gated_paired_ratio(cfg, params, args, base_kw, test_kw, bar,
     return best
 
 
+def ttft_paired(cfg, params, args, kmax):
+    """p50 wall-clock TTFT (submit -> first token) of the prefill engine
+    vs the prompt-replay baseline at ``--ttft-prompt-len``, both fused
+    K_max memos-on.  Same drift-immunity as ``paired_ratio``: both
+    engines live at once, single rounds alternate, min-p50 per engine.
+    Long prompts need more pages than the sweep default, so the gate
+    runs on its own args copy with the pools sized to fit
+    prompt + generation.  Returns (ratio, [baseline stats, prefill
+    stats])."""
+    import copy
+    a = copy.copy(args)
+    a.prompt_len = args.ttft_prompt_len
+    need = -(-(a.prompt_len + a.max_new) // a.page_size) + 2
+    a.max_pages = max(a.max_pages, need)
+    a.slow_slots = max(a.slow_slots, a.requests * a.max_pages)
+    kws = [dict(k=kmax, memos=True, reference=False),
+           dict(k=kmax, memos=True, reference=False, prefill=True)]
+    engines = [build_engine(cfg, params, args=a, **kw) for kw in kws]
+    best = [float("inf"), float("inf")]
+    stats = [None, None]
+    for e in engines:
+        e.warmup()
+        serve_round(e, cfg, a, np.random.RandomState(0))  # compile round
+    for _ in range(max(args.repeats, 3)):
+        for i, e in enumerate(engines):
+            reqs, _ = serve_round(e, cfg, a, np.random.RandomState(0))
+            tt = np.asarray([r.ttft_s for r in reqs], np.float64)
+            p50 = float(np.percentile(tt, 50))
+            if p50 < best[i]:
+                best[i] = p50
+                stats[i] = {"p50_ms": p50 * 1e3,
+                            "p99_ms": float(np.percentile(tt, 99)) * 1e3}
+    for e in engines:
+        e.close()
+    return best[0] / best[1], stats
+
+
 def measure_overhead(cfg, params, args, kmax):
     """Tracing on/off tokens/s ratio, drift-immune: ONE warm engine,
     alternating untraced / traced rounds back-to-back, min per mode.
@@ -205,25 +269,62 @@ def measure_overhead(cfg, params, args, kmax):
 
 
 def capture_trace(cfg, params, args, kmax):
-    """One untimed +overlap+pinned round with tracing on — the committed
-    Chrome-trace artifact whose ``memos-plan`` track shows worker-thread
-    plan spans running under the main thread's next ``serve.dispatch``."""
+    """One untimed +overlap+pinned+prefill round with tracing on — the
+    committed Chrome-trace artifact whose ``memos-plan`` track shows
+    worker-thread plan spans running under the main thread's next
+    ``serve.dispatch``.  Admissions are staggered: half the requests
+    arrive mid-round, so their packed ``serve.prefill`` dispatch lands
+    right after a boundary that just launched an async plan — the trace
+    then shows prefill running *over* the worker's ``memos.plan`` span
+    (retried across seeds; the overlap window is a real race against
+    the plan's wall time)."""
     from repro import obs
     engine = build_engine(cfg, params, k=kmax, memos=True, reference=False,
-                          args=args, overlap=True, pinned=True)
+                          args=args, overlap=True, pinned=True, prefill=True)
     engine.warmup()
-    rng = np.random.RandomState(0)
-    serve_round(engine, cfg, args, rng)       # warm round, untraced
-    obs.reset()
-    obs.configure(trace=True)
-    rng = np.random.RandomState(0)
-    serve_round(engine, cfg, args, rng)
-    obs.configure(trace=False)
-    n = obs.get_tracer().n_recorded
-    path = obs.export.write_chrome_trace(args.trace_out, obs.get_tracer())
+    serve_round(engine, cfg, args, np.random.RandomState(0))  # warm, untraced
+
+    def staggered_round(rng):
+        t0 = engine.tokens_out
+        n0 = max(args.requests // 2, 1)
+        prompts = [rng.randint(0, cfg.vocab, size=args.prompt_len).tolist()
+                   for _ in range(args.requests)]
+        for p in prompts[:n0]:
+            engine.submit(p, max_new=args.max_new)
+        rest, seen = prompts[n0:], len(engine.memos.reports)
+        while rest or not engine.batcher.all_done():
+            engine.step()
+            if rest and len(engine.memos.reports) > seen:
+                # a plan just committed and its successor launched: the
+                # next boundary's prefill overlaps the in-flight plan
+                for p in rest:
+                    engine.submit(p, max_new=args.max_new)
+                rest = []
+        assert engine.tokens_out - t0 == args.requests * args.max_new
+
+    def prefill_overlaps_plan(path):
+        ev = json.loads(Path(path).read_text())["traceEvents"]
+        pf = [(e["ts"], e["ts"] + e["dur"]) for e in ev
+              if e.get("name") == "serve.prefill"]
+        pl = [(e["ts"], e["ts"] + e["dur"]) for e in ev
+              if e.get("name") == "memos.plan"]
+        return any(a < d and c < b for a, b in pf for c, d in pl)
+
+    for attempt in range(5):
+        obs.reset()
+        obs.configure(trace=True)
+        staggered_round(np.random.RandomState(attempt))
+        obs.configure(trace=False)
+        n = obs.get_tracer().n_recorded
+        path = obs.export.write_chrome_trace(args.trace_out,
+                                             obs.get_tracer())
+        if prefill_overlaps_plan(path):
+            break
+    shown = prefill_overlaps_plan(path)
     engine.close()
     obs.reset()
-    print(f"  trace    : wrote {path} ({n} events)")
+    print(f"  trace    : wrote {path} ({n} events; prefill/plan overlap "
+          f"{'shown' if shown else 'NOT captured'})")
     return path
 
 
@@ -254,6 +355,20 @@ def main():
                          "+overlap+pinned vs +pinned); page-granular "
                          "commits make overlap a strict win, so the "
                          "default is no-regression")
+    ap.add_argument("--ttft-bar", type=float, default=None,
+                    help="min p50-TTFT ratio (prompt-replay baseline / "
+                         "prefill engine) at --ttft-prompt-len; paired "
+                         "interleaved rounds at K_max memos-on.  Omit to "
+                         "skip the TTFT gate")
+    ap.add_argument("--ttft-prompt-len", type=int, default=256,
+                    help="prompt length for the TTFT gate (long enough "
+                         "that replaying it one decode step at a time "
+                         "visibly delays the first token)")
+    ap.add_argument("--prefill-bar", type=float, default=0.95,
+                    help="min aggregate decode tokens/s ratio of the "
+                         "+prefill engine over the prompt-replay K_max "
+                         "path (prefill must not tax steady-state "
+                         "decode)")
     ap.add_argument("--out", type=Path,
                     default=ROOT / "benchmarks" / "results" /
                     "serving_throughput.json")
@@ -316,6 +431,11 @@ def main():
                              reference=False, args=args,
                              overlap=overlap, pinned=pinned)
         results["sweep"][label] = row
+    # bucketed packed prefill at K_max, memos on: prompts ingest via one
+    # AOT-compiled full-sequence dispatch instead of a K-step replay
+    label, row = measure(cfg, params, k=kmax, memos=True, reference=False,
+                         args=args, prefill=True)
+    results["sweep"][label] = row
     if args.metrics_out:
         # the registry still holds the last config's post-warmup metrics
         from repro import obs
@@ -356,6 +476,15 @@ def main():
             dict(k=kmax, memos=True, reference=False, overlap=True,
                  pinned=True),
             args.overlap_bar)
+    # aggregate tokens/s of the prefill engine vs the prompt-replay K_max
+    # path: real prefill must not cost steady-state decode throughput
+    # (paired interleaved rounds, same drift-immunity as the overlap gate)
+    if f"k{kmax}+prefill_memos" in sweep:
+        results["speedup_prefill_vs_replay_decode"] = gated_paired_ratio(
+            cfg, params, args,
+            dict(k=kmax, memos=True, reference=False),
+            dict(k=kmax, memos=True, reference=False, prefill=True),
+            args.prefill_bar)
     from repro import obs
     obs.reset()   # paired rounds polluted the shared registry
     results["config"] = {
@@ -383,15 +512,46 @@ def main():
                           for s, r in overlap_ratios.items())
         print(f"  overlap  : {shown} (bar {args.overlap_bar:.2f}, "
               f"each config gated independently)")
+    prefill_ratio = results.get("speedup_prefill_vs_replay_decode")
+    prefill_ok = True
+    if prefill_ratio is not None:
+        prefill_ok = prefill_ratio >= args.prefill_bar
+        print(f"  prefill  : decode tokens/s = {prefill_ratio:.2f}x the "
+              f"replay path ({'meets' if prefill_ok else 'BELOW'} the "
+              f"{args.prefill_bar:.2f}x bar)")
     # conflict-free serving must commit every planned page: any degrade
     # here means the dirty-set validator flagged a page nothing touched
-    for suffix in ("", "+overlap", "+pinned", "+overlap+pinned"):
+    for suffix in ("", "+overlap", "+pinned", "+overlap+pinned",
+                   "+prefill"):
         row = sweep.get(f"k{kmax}{suffix}_memos")
         if row and row["pages_degraded"]:
             raise AssertionError(
                 f"k{kmax}{suffix}_memos degraded {row['pages_degraded']} "
                 f"pages on a conflict-free run (committed "
                 f"{row['pages_committed']})")
+
+    # the TTFT gate: long-prompt p50 time-to-first-token, prefill vs
+    # prompt-replay (off the timed sweep; same retry semantics as the
+    # overlap gate — one trial's min-p50 still carries scheduler jitter)
+    ttft_ok = True
+    if args.ttft_bar is not None:
+        ratio, stats = -float("inf"), None
+        for _ in range(3):
+            r_, s_ = ttft_paired(cfg, params, args, kmax)
+            if r_ > ratio:
+                ratio, stats = r_, s_
+            if ratio >= args.ttft_bar:
+                break
+        results["ttft_prompt_len"] = args.ttft_prompt_len
+        results["ttft_replay"] = stats[0]
+        results["ttft_prefill"] = stats[1]
+        results["speedup_prefill_ttft_p50"] = ratio
+        ttft_ok = ratio >= args.ttft_bar
+        print(f"  ttft     : prompt {args.ttft_prompt_len}, p50 replay "
+              f"{stats[0]['p50_ms']:.1f} ms vs prefill "
+              f"{stats[1]['p50_ms']:.1f} ms = {ratio:.1f}x "
+              f"({'meets' if ttft_ok else 'BELOW'} the "
+              f"{args.ttft_bar:.2f}x bar)")
 
     # observability extras: tracing-overhead gate and the committed
     # Chrome-trace artifact (both off the timed sweep)
@@ -422,7 +582,8 @@ def main():
                               for s, r in below.items())
         print(f"  OVERLAP BAR FAILED ({args.overlap_bar:.2f}x): "
               f"{offenders}")
-    ok = (speedup >= bar or args.tiny) and not below and overhead_ok
+    ok = ((speedup >= bar or args.tiny) and not below and overhead_ok
+          and prefill_ok and ttft_ok)
     return 0 if ok or args.no_check else 1
 
 

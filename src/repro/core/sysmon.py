@@ -111,6 +111,13 @@ def record(state: SysmonState, page_ids: jnp.ndarray, *,
     from repro.kernels.hotness_update import touch_update
     d_reads, d_writes, touched_i = touch_update(
         state.n_pages, page_ids, is_write, valid)
+    return _apply_sampling(state, d_reads, d_writes, touched_i)
+
+
+def _apply_sampling(state: SysmonState, d_reads: jnp.ndarray,
+                    d_writes: jnp.ndarray, touched_i: jnp.ndarray
+                    ) -> SysmonState:
+    """Fold one sampling's dense per-page increments into the state."""
     touched = touched_i > 0
 
     reads = state.reads + d_reads
@@ -142,6 +149,27 @@ def record(state: SysmonState, page_ids: jnp.ndarray, *,
         intv_sqsum=intv_sqsum, bank_freq=bank_freq, slab_freq=slab_freq,
         sample_idx=state.sample_idx + 1,
     )
+
+
+def record_dense(state: SysmonState, d_reads: jnp.ndarray,
+                 d_writes: jnp.ndarray) -> SysmonState:
+    """Record a *bulk sequential* access burst as ONE sampling (jit-safe).
+
+    ``d_reads``/``d_writes`` are dense int32 [n_pages] event totals — e.g.
+    every page a prefill dispatch streamed through, with exact per-page
+    read/write counts.  Unlike replaying the burst as K per-token
+    ``record`` samplings, the whole burst lands as a single sampling: the
+    raw ``reads``/``writes``/``bank_freq``/``slab_freq`` totals match the
+    per-token replay exactly (they are sums either way), but
+    ``access_count`` advances by at most 1 and ``sample_idx`` by exactly
+    1 — so the *cadence* counters see one streaming touch, not K fake
+    decode touches, and the next classification pass ranks these pages as
+    sequential/cold rather than hot (paper Sec. 4.2: streaming pages must
+    not be promoted on raw touch volume).
+    """
+    touched_i = ((d_reads + d_writes) > 0).astype(jnp.int32)
+    return _apply_sampling(state, d_reads.astype(jnp.int32),
+                           d_writes.astype(jnp.int32), touched_i)
 
 
 @jax.jit

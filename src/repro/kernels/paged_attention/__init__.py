@@ -1,5 +1,7 @@
-from .ops import paged_attention, paged_attention_pages
+from .ops import (paged_attention, paged_attention_pages,
+                  paged_attention_prefill, paged_attention_prefill_pages)
 from .ref import paged_attention_pages_ref, paged_attention_ref
 
 __all__ = ["paged_attention", "paged_attention_pages",
+           "paged_attention_prefill", "paged_attention_prefill_pages",
            "paged_attention_ref", "paged_attention_pages_ref"]

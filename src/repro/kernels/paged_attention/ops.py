@@ -46,6 +46,33 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     return out.reshape(B, Hq, D)
 
 
+def paged_attention_prefill(q_all: jnp.ndarray, k_pool: jnp.ndarray,
+                            v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                            lengths: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence prefill attention over freshly written KV pages.
+
+    Treats every packed position as its own decode-style query row:
+    ``q_all`` [L, Hq, D] attends through per-row block tables
+    [L, n_pages] (each row lists only its *own segment's* pages, padded
+    with slot 0) masked to ``lengths`` [L] = causal prefix length.  The
+    mask drives every out-of-prefix score to -1e30 exactly as the decode
+    path does, so position p of a packed segment produces bitwise the
+    same output as a decode step at position p over the same pool —
+    segments can never attend across packing boundaries because foreign
+    pages simply aren't in the row's table.  Seam for a future Pallas
+    flash-prefill variant; today it reuses ``paged_attention`` verbatim.
+    """
+    return paged_attention(q_all, k_pool, v_pool, block_tables, lengths)
+
+
+def paged_attention_prefill_pages(q_all: jnp.ndarray, k_pages: jnp.ndarray,
+                                  v_pages: jnp.ndarray,
+                                  lengths: jnp.ndarray) -> jnp.ndarray:
+    """Dual-pool prefill attention over pre-gathered per-row pages
+    (pinned-tier variant of ``paged_attention_prefill``)."""
+    return paged_attention_pages(q_all, k_pages, v_pages, lengths)
+
+
 @jax.jit
 def paged_attention_pages(q: jnp.ndarray, k_pages: jnp.ndarray,
                           v_pages: jnp.ndarray,

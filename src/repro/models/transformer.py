@@ -177,8 +177,16 @@ def _rope_tables(cfg: ArchConfig, positions: jnp.ndarray):
 # layer bodies
 # =============================================================================
 
-def _ffn(lp: dict, cfg: ArchConfig, x: jnp.ndarray, mi: sh.MeshInfo | None):
-    """MLP or MoE; returns (y, expert_counts|None, aux_loss)."""
+def _ffn(lp: dict, cfg: ArchConfig, x: jnp.ndarray, mi: sh.MeshInfo | None,
+         valid: jnp.ndarray | None = None):
+    """MLP or MoE; returns (y, expert_counts|None, aux_loss).
+
+    ``valid`` (optional bool [B, S]) masks padding rows out of the MoE
+    expert-count histogram — bucketed prefill pads sequences, and pad
+    rows must not inflate the expert-hotness signal.  The routing/output
+    math is untouched (pad rows still flow through and are discarded by
+    the caller), only ``counts`` is recomputed from real rows.
+    """
     if cfg.is_moe:
         p = moe_mod.MoEParams(**lp["moe"])
         y, (probs, idx, counts) = moe_mod.moe_apply(
@@ -191,6 +199,12 @@ def _ffn(lp: dict, cfg: ArchConfig, x: jnp.ndarray, mi: sh.MeshInfo | None):
         aux = moe_mod.aux_load_balance_loss(
             probs.reshape(-1, cfg.n_experts), idx.reshape(-1, cfg.top_k),
             cfg.n_experts)
+        if valid is not None:
+            idx_f = idx.reshape(-1, cfg.top_k)
+            vrow = valid.reshape(-1).astype(jnp.int32)
+            counts = jnp.zeros((cfg.n_experts,), jnp.int32).at[
+                idx_f.reshape(-1)].add(
+                    jnp.broadcast_to(vrow[:, None], idx_f.shape).reshape(-1))
         return y, counts, aux
     if cfg.mlp_kind == "gelu":
         return layers.gelu_mlp(x, lp["mlp"]["w_up"], lp["mlp"]["w_down"]), None, 0.0
@@ -216,10 +230,11 @@ def _attn_block(lp: dict, cfg: ArchConfig, h, positions, ropes, window,
     return h + out
 
 
-def _ffn_block(lp: dict, cfg: ArchConfig, h, mi: sh.MeshInfo | None):
+def _ffn_block(lp: dict, cfg: ArchConfig, h, mi: sh.MeshInfo | None,
+               valid: jnp.ndarray | None = None):
     x = layers.rms_norm(h, lp["ln2"], eps=cfg.norm_eps,
                         gemma_style=cfg.gemma_norm)
-    y, counts, aux = _ffn(lp, cfg, x, mi)
+    y, counts, aux = _ffn(lp, cfg, x, mi, valid=valid)
     if cfg.gemma_norm:
         y = layers.rms_norm(y, lp["ln2_post"], eps=cfg.norm_eps,
                             gemma_style=True)

@@ -1,6 +1,8 @@
 from .engine import PagedServingEngine, ServeConfig
 from .kv_cache import PagedKVCache, PagedKVConfig
+from .prefill import PackedGroup, PrefillRunner, bucket_for, pack_prompts
 from .scheduler import ContinuousBatcher, Request
 
 __all__ = ["PagedServingEngine", "ServeConfig", "PagedKVCache",
-           "PagedKVConfig", "ContinuousBatcher", "Request"]
+           "PagedKVConfig", "ContinuousBatcher", "Request",
+           "PackedGroup", "PrefillRunner", "bucket_for", "pack_prompts"]

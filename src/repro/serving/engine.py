@@ -60,6 +60,8 @@ from repro.models import layers as L
 from repro.models import transformer as T
 from repro.qos import QoSConfig
 from repro.serving.kv_cache import SERVE_TIER, PagedKVCache, PagedKVConfig
+from repro.serving.prefill import (PackedGroup, PrefillRunner, pack_prompts,
+                                   replay_page_counts)
 from repro.serving.scheduler import ContinuousBatcher, Request
 
 
@@ -94,6 +96,18 @@ class ServeConfig:
     # every scheduler and placement decision bit-identical to pre-QoS
     # behavior (pinned by tests/test_qos.py).
     qos: QoSConfig | None = None
+    # bucketed packed prefill (serving/prefill.py): newly admitted
+    # requests ingest their whole prompt in one pow2-bucket dispatch
+    # instead of replaying it through the decode scan.  Off by default
+    # — the replay path is the bit-parity oracle — and ignored under
+    # reference=True (the oracle IS prompt replay).
+    prefill: bool = False
+    prefill_min_bucket: int = 16
+    # largest bucket (pow2-rounded); None -> covers max_pages_per_seq
+    prefill_max_bucket: int | None = None
+    # pack multiple short prompts into one bucket row (segment-isolated)
+    prefill_pack: bool = True
+    prefill_max_segments: int = 4
 
 
 class PagedServingEngine:
@@ -153,14 +167,32 @@ class PagedServingEngine:
                                          donate_argnums=(6, 7))
         self._fused_fns: dict[int, object] = {}
         self._fused_pinned_fns: dict[int, object] = {}
+        self.prefill_runner = (PrefillRunner(self)
+                               if scfg.prefill and not scfg.reference
+                               else None)
+        # prompt tokens ingested by prefill since the last memos tick —
+        # the pass's sampling clock advances by them (replay would have
+        # spent that many inner decode steps), drained at step 6
+        self._prefill_tokens_pending = 0
 
     # -- request API -----------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int, *,
                tenant: str | None = None) -> Request:
         cap = self.scfg.max_pages_per_seq * self.scfg.page_size
-        assert len(prompt) + max_new <= cap, \
-            f"sequence needs {len(prompt) + max_new} positions but " \
-            f"max_pages_per_seq*page_size = {cap}"
+        if len(prompt) + max_new > cap:
+            # structured rejection (a bare assert vanishes under -O): the
+            # sequence can never fit, so refuse at the door instead of
+            # failing mid-serve with a CapacityError nobody can act on
+            raise CapacityError(
+                f"sequence needs {len(prompt) + max_new} positions but "
+                f"max_pages_per_seq*page_size = {cap}")
+        if (self.prefill_runner is not None
+                and len(prompt) > self.prefill_runner.max_bucket):
+            raise CapacityError(
+                f"prompt of {len(prompt)} tokens exceeds the largest "
+                f"prefill bucket ({self.prefill_runner.max_bucket}); raise "
+                f"prefill_max_bucket (or max_pages_per_seq) or split the "
+                f"prompt")
         req = Request(self.rid, list(prompt), max_new, arrival=self.step_count)
         req.submit_ts = time.monotonic()
         if tenant is not None:
@@ -436,6 +468,18 @@ class PagedServingEngine:
                                         block_tables, pool_sel, lengths,
                                         fast_pool, pinned_pool, remap)
 
+    @staticmethod
+    def _advance_prompt(positions, prompt_buf, prompt_len, sampled, b_idx):
+        """Advance one inner decode step: the next position, and the next
+        input token — the buffered prompt token while replay is still
+        inside the prompt, the freshly sampled token once past it.
+        Shared by every fused scan body (single- and dual-pool)."""
+        nxt_pos = positions + 1
+        prompt_next = prompt_buf[
+            b_idx, jnp.clip(nxt_pos, 0, prompt_buf.shape[1] - 1)]
+        nxt_tok = jnp.where(nxt_pos < prompt_len, prompt_next, sampled)
+        return nxt_tok, nxt_pos
+
     def _fused_decode(self, params, tokens, positions, prompt_buf,
                       prompt_len, page_tables, block_tables, sm_state,
                       fast_pool, *, k_steps: int):
@@ -467,10 +511,8 @@ class PagedServingEngine:
             # device-side greedy sampling feeds the next inner step
             sampled = jnp.argmax(logits[:, :cfg.vocab],
                                  axis=-1).astype(jnp.int32)
-            nxt_pos = positions + 1
-            prompt_next = prompt_buf[
-                b_idx, jnp.clip(nxt_pos, 0, prompt_buf.shape[1] - 1)]
-            nxt_tok = jnp.where(nxt_pos < prompt_len, prompt_next, sampled)
+            nxt_tok, nxt_pos = self._advance_prompt(
+                positions, prompt_buf, prompt_len, sampled, b_idx)
             # SysMon: the exact access stream — one read sampling over the
             # block-table prefix covering the current position, one write
             # sampling on the tail page (same two-sampling cadence as the
@@ -568,10 +610,8 @@ class PagedServingEngine:
                 positions + 1, fpool, ppool, remap)
             sampled = jnp.argmax(logits[:, :cfg.vocab],
                                  axis=-1).astype(jnp.int32)
-            nxt_pos = positions + 1
-            prompt_next = prompt_buf[
-                b_idx, jnp.clip(nxt_pos, 0, prompt_buf.shape[1] - 1)]
-            nxt_tok = jnp.where(nxt_pos < prompt_len, prompt_next, sampled)
+            nxt_tok, nxt_pos = self._advance_prompt(
+                positions, prompt_buf, prompt_len, sampled, b_idx)
             tailcol = positions // page
             sm = sysmon_mod.record(
                 sm, page_tables.reshape(-1), is_write=False,
@@ -671,6 +711,11 @@ class PagedServingEngine:
                         jnp.zeros_like(store.fast_pool),
                         jnp.zeros_like(ppool.data), wear, remap,
                         jnp.int32(0), jnp.int32(0))[0])
+        # prefill: AOT-compile every advertised (bucket, pool-variant)
+        # dispatch — .lower().compile() against abstract shapes, so no
+        # dummy pool copies are needed and serving never recompiles
+        if self.prefill_runner is not None:
+            self.prefill_runner.warmup()
 
     # -- main loop (dispatch-boundary slow path) -----------------------------------
     def _publish_dispatch_metrics(self, dt: float, k: int, batch: int) -> None:
@@ -720,6 +765,162 @@ class PagedServingEngine:
                           "per-tenant mean inter-token latency").observe(
                               itl, n=len(req.generated) - 1)
 
+    # -- bucketed packed prefill (serving/prefill.py) --------------------------
+    def _prefill_admitted(self) -> None:
+        new = [r for r in self.batcher.active if r.pos == 0]
+        if not new:
+            return
+        pr = self.prefill_runner
+        groups = pack_prompts(
+            new, min_bucket=pr.min_bucket, max_bucket=pr.max_bucket,
+            pack=self.scfg.prefill_pack, max_segments=pr.max_segments)
+        for g in groups:
+            self._prefill_group(g)
+
+    def _prefill_group(self, group: PackedGroup) -> None:
+        """One packed prefill dispatch: provision every segment's prompt
+        pages, run the (bucket, pool-variant) executable, then settle the
+        boundary accounting — store charges, SysMon streaming record,
+        pinned wear/integrity, first-token stamping — with totals exactly
+        matching what replaying the prompts through the decode scan would
+        have charged (the parity invariant), while SysMon's sampling
+        cadence sees ONE sequential burst instead of K decode touches."""
+        # provision under pressure: preempt, dropping group members that
+        # got evicted themselves (they re-enter at a later boundary with
+        # pos still 0), and fail the blocked request when nothing is left
+        segs = []
+        while True:
+            self._drain_faults()
+            segs = [r for r in group.requests
+                    if not r.preempted and not r.done]
+            blocked = None
+            for r in segs:
+                if not self._ensure_pages(r, k=len(r.prompt)):
+                    blocked = r
+                    break
+            if blocked is None:
+                break
+            if not self._make_room():
+                self._fail_request(blocked, CapacityError(
+                    f"request {blocked.rid}: HBM+host pools exhausted "
+                    f"during prefill and no preemption victim remains",
+                    rid=blocked.rid, occupancy=self.kv.occupancy()))
+                note_recovered("backpressure")
+        group.requests = segs
+        if not segs:
+            return
+
+        pr = self.prefill_runner
+        store = self.kv.store
+        page = self.scfg.page_size
+        pt = self.pinned_tier
+        Pp = pr.n_table_pages(group.bucket)
+        pages_rows = [r.pages for r in segs]
+        if pt is None:
+            page_tables, block_tables = self.kv.fill_tables(pages_rows, Pp)
+            pool_sel = None
+            wear_tr = None
+        else:
+            page_tables, block_tables, pool_sel = self.kv.fill_tables_mixed(
+                pages_rows, Pp)
+            wear_tr = store.wear_by_tier.get(pt)
+            if not pool_sel.any():
+                # all prompt pages landed tier-0 resident: single-pool
+                # dispatch (same downgrade the decode boundary applies)
+                pt = None
+                pool_sel = None
+                wear_tr = None
+        a = pr.build_args(group, block_tables, pool_sel)
+        n_tok = group.total_tokens
+        t0 = time.perf_counter()
+        with obs.span("serve.prefill", step=self.step_count,
+                      bucket=group.bucket, segments=len(segs),
+                      tokens=n_tok):
+            if pt is None:
+                fn = pr.get_plain(group.bucket)
+                first_d, seg_logits, ecounts, store.fast_pool = fn(
+                    self.params, jnp.asarray(a["tokens"]),
+                    jnp.asarray(a["local_pos"]),
+                    jnp.asarray(a["row_tables"]), jnp.asarray(a["lengths"]),
+                    jnp.asarray(a["write_slot"]),
+                    jnp.asarray(a["write_off"]),
+                    jnp.asarray(a["seg_last"]), store.fast_pool)
+            else:
+                ppool = store.pools[pt]
+                n_pin = ppool.data.shape[0]
+                remap_arr = (wear_tr.state.remap if wear_tr is not None
+                             else jnp.arange(n_pin, dtype=jnp.int32))
+                fn = pr.get_pinned(group.bucket)
+                (first_d, seg_logits, ecounts, store.fast_pool,
+                 ppool.data) = fn(
+                    self.params, jnp.asarray(a["tokens"]),
+                    jnp.asarray(a["local_pos"]),
+                    jnp.asarray(a["row_tables"]), jnp.asarray(a["row_sel"]),
+                    jnp.asarray(a["lengths"]), jnp.asarray(a["write_slot"]),
+                    jnp.asarray(a["write_sel"]),
+                    jnp.asarray(a["write_off"]),
+                    jnp.asarray(a["seg_last"]), store.fast_pool, ppool.data,
+                    remap_arr)
+            first = np.asarray(first_d)
+        dt = time.perf_counter() - t0
+        self.last_logits = seg_logits
+        reg = obs.get_registry()
+        reg.histogram("serving.prefill_latency_s",
+                      "wall time of one packed prefill dispatch").observe(dt)
+        reg.counter("serving.prefill_dispatches",
+                    "packed prefill dispatches issued").inc()
+        reg.counter("serving.prefill_tokens",
+                    "prompt tokens ingested via prefill").inc(n_tok)
+
+        if self.expert_counts is not None:
+            self.expert_counts += np.asarray(ecounts, np.int64)
+
+        # boundary accounting: closed-form dense totals, bit-identical to
+        # the replay stream (reads: page j of an Lp-token segment is
+        # covered by Lp - j*page inner-step prefixes; writes: the tail
+        # lands on it min(page, Lp - j*page) times)
+        prompt_lens = [len(r.prompt) for r in segs]
+        d_reads, d_writes = replay_page_counts(
+            prompt_lens, page_tables, page, self.kv.n_pages)
+        self.sysmon = sysmon_mod.record_dense(
+            self.sysmon, jnp.asarray(d_reads, dtype=jnp.int32),
+            jnp.asarray(d_writes, dtype=jnp.int32))
+        if pt is None:
+            store.charge_fast_accesses(d_writes, int(d_reads.sum()))
+        else:
+            store.charge_accesses(d_writes, d_reads)
+            # pinned-pool writes charge wear per token write (the decode
+            # scan's wear_update totals, host-side) and refresh the
+            # written rows' checksums — the in-dispatch scatters bypass
+            # the host write paths that normally record both
+            wr_slots: list[int] = []
+            for si, lp in enumerate(prompt_lens):
+                for j in range((lp - 1) // page + 1):
+                    if pool_sel[si, j]:
+                        wr_slots.extend([int(block_tables[si, j])]
+                                        * min(page, lp - j * page))
+            if wear_tr is not None and wr_slots:
+                store._account_host_writes(
+                    pt, wear_tr.phys(np.asarray(wr_slots, np.int64)))
+            if store.integrity.enabled and wr_slots:
+                store.integrity.record(store, pt, sorted(set(wr_slots)))
+
+        # lifecycle: the prompt is consumed and the first token sampled —
+        # the request joins the decode batch at pos == len(prompt), or
+        # retires right here when one token was all it asked for
+        for req, first_tok in zip(segs, first[:len(segs)]):
+            req.tokens = list(req.prompt)
+            req.generated = [int(first_tok)]
+            self.tokens_out += 1
+            req.first_token_step = self.step_count
+            req.first_token_ts = time.monotonic()
+            self._publish_first_token(req)
+            if req.max_new <= 1:
+                self.batcher.finish(req, self.step_count)
+                self._publish_finish(req)
+                self._release_pages(req)
+        self._prefill_tokens_pending += n_tok
+
     def step(self) -> dict:
         # 0) fail owners of pages quarantined since the last boundary
         # (memos-pass scrub, late promotion pre-flights) before admitting
@@ -765,6 +966,14 @@ class PagedServingEngine:
                         need_room - 1 if self.batcher.priority_aware
                         else None):
                     break
+
+        # 1b) prefill: every newly admitted request (pos == 0 — nothing
+        # processed yet) ingests its whole prompt in one packed bucketed
+        # dispatch and joins the running decode batch with its first
+        # token already sampled.  Resumed mid-prompt requests (preempted
+        # replay) keep the replay path — their pool state is positional.
+        if self.prefill_runner is not None:
+            self._prefill_admitted()
 
         active = list(self.batcher.active)
         stats = {"step": self.step_count, "active": len(active)}
@@ -1043,8 +1252,13 @@ class PagedServingEngine:
             # under running sequences *before* the next plan snapshots, so
             # the reaction is part of the snapshot instead of a guaranteed
             # mid-plan conflict at the next commit
+            # the memos sampling clock also advances by every prompt
+            # token prefill ingested since the last tick (replay would
+            # have spent that many inner decode steps)
+            pending = self._prefill_tokens_pending
+            self._prefill_tokens_pending = 0
             self.sysmon, report = self.memos.maybe_step(
-                self.sysmon, steps=k,
+                self.sysmon, steps=k + pending,
                 on_commit=lambda rep: self._promote_all(
                     list(self.batcher.active)))
             if report is not None:

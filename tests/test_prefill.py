@@ -1,0 +1,292 @@
+"""Bucketed packed prefill: bucket/packing policy invariants, AOT
+warmup coverage (no data-dependent recompiles), structured submit
+rejection, and the hard parity pin — prefill-then-decode must reproduce
+the prompt-replay oracle bit for bit (tokens, KV pool contents, SysMon
+raw counters, store accounting, pinned-tier wear)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry, smoke
+from repro.core.hierarchy import MemoryHierarchy
+from repro.faults.errors import CapacityError
+from repro.models import transformer as T
+from repro.serving import PagedServingEngine, ServeConfig, bucket_for, pack_prompts
+from repro.serving.prefill import bucket_list, next_pow2
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke(registry()["qwen3_4b"])
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def ref_greedy(cfg, params, prompt, n):
+    lg, state = T.prefill(params, cfg,
+                          {"tokens": jnp.asarray([prompt], jnp.int32)},
+                          cache_len=128)
+    gen = []
+    for _ in range(n):
+        g = int(jnp.argmax(lg[0, 0, :cfg.vocab]))
+        gen.append(g)
+        lg, state = T.decode_step(params, cfg, state,
+                                  {"tokens": jnp.asarray([[g]], jnp.int32)})
+    return gen
+
+
+def _run_engine(cfg, params, prompts, max_new=6, **scfg_kw):
+    kw = dict(page_size=8, max_batch=3, fast_slots=32, slow_slots=128,
+              memos_enabled=False)
+    kw.update(scfg_kw)
+    eng = PagedServingEngine(cfg, params, ServeConfig(**kw))
+    reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+    eng.run(max_steps=600)
+    assert eng.batcher.all_done()
+    return eng, reqs
+
+
+# raw counters only: prefill intentionally collapses the sampling
+# *cadence* (access_count / last_access / intv_* / sample_idx) to one
+# streaming touch per burst — that divergence is the feature, so the
+# parity pin covers the event-total fields replay must match exactly
+SYSMON_RAW = ("reads", "writes", "bank_freq", "slab_freq")
+
+
+def _assert_parity(ref, pre, rref, rpre, *, logits=True):
+    for a, b in zip(rref, rpre):
+        assert a.generated == b.generated
+        assert a.tokens == b.tokens
+    for f in SYSMON_RAW:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref.sysmon, f)),
+            np.asarray(getattr(pre.sysmon, f)), err_msg=f"sysmon.{f}")
+    sr, sp = ref.kv.store, pre.kv.store
+    np.testing.assert_array_equal(sr.version, sp.version)
+    assert sr.writes_to == sp.writes_to
+    assert sr.reads_from == sp.reads_from
+    for t, (pa, pb) in enumerate(zip(sr.pools, sp.pools)):
+        np.testing.assert_array_equal(
+            np.asarray(pa.data), np.asarray(pb.data),
+            err_msg=f"pool[{t}] contents")
+    if logits:
+        np.testing.assert_array_equal(np.asarray(ref.last_logits),
+                                      np.asarray(pre.last_logits))
+
+
+# -- bucket / packing policy ---------------------------------------------------
+
+def test_every_prompt_lands_in_smallest_covering_pow2_bucket():
+    for n in range(1, 300):
+        b = bucket_for(n, min_bucket=16, max_bucket=512)
+        assert b >= max(n, 16)
+        assert b & (b - 1) == 0, f"bucket {b} not a power of two"
+        # smallest: half the bucket would not cover (or would dip under
+        # the floor)
+        assert b == 16 or b // 2 < max(n, 16)
+    with pytest.raises(ValueError):
+        bucket_for(513, min_bucket=16, max_bucket=512)
+    assert bucket_list(16, 128) == [16, 32, 64, 128]
+    assert next_pow2(1) == 1 and next_pow2(17) == 32
+
+
+class _FakeReq:
+    def __init__(self, n):
+        self.prompt = list(range(n))
+
+
+def test_packing_invariants():
+    lens = [3, 5, 2, 9, 1, 1, 1, 1, 1, 30, 4]
+    reqs = [_FakeReq(n) for n in lens]
+    groups = pack_prompts(reqs, min_bucket=8, max_bucket=64,
+                          max_segments=4)
+    flat = [r for g in groups for r in g.requests]
+    assert flat == reqs, "packing must preserve admission order"
+    for g in groups:
+        assert g.total_tokens <= g.bucket <= 64
+        assert len(g.requests) <= 4
+        # the bucket is the smallest covering pow2 for the packed total
+        assert g.bucket == max(next_pow2(g.total_tokens), 8)
+    # greedy escalation: the first four prompts (3+5+2+9 = 19) coalesce
+    # into one bucket-32 group instead of one dispatch each
+    assert [len(g.requests) for g in groups[:2]] == [4, 4]
+    assert groups[0].bucket == 32
+    # packing off -> one group per request, bucket per prompt
+    solo = pack_prompts(reqs, min_bucket=8, max_bucket=64, pack=False)
+    assert all(len(g.requests) == 1 for g in solo)
+    assert all(g.bucket == bucket_for(len(g.requests[0].prompt), 8, 64)
+               for g in solo)
+
+
+# -- parity vs the prompt-replay oracle ----------------------------------------
+
+def test_prefill_parity_vs_replay_oracle(model):
+    """Prefill-then-decode == the prompt-replay reference engine, bit for
+    bit: tokens, final logits, SysMon raw counters, version/read/write
+    accounting, and every pool's contents."""
+    cfg, params = model
+    prompts = [list(range(5, 17)), list(range(30, 42)), list(range(50, 62))]
+    ref, rr = _run_engine(cfg, params, prompts, reference=True)
+    pre, rp = _run_engine(cfg, params, prompts, prefill=True, decode_block=4)
+    _assert_parity(ref, pre, rr, rp)
+    # the cadence counters must NOT match: the packed burst lands as one
+    # streaming sampling, not one sampling per replayed token
+    assert int(pre.sysmon.sample_idx) < int(ref.sysmon.sample_idx)
+
+
+def test_packed_prefill_parity_and_packing_bit_identity(model):
+    """Short prompts packed into one bucket row: (a) still bit-identical
+    to the replay oracle, (b) bit-identical to the *unpacked* prefill
+    (one dispatch per prompt) — segment isolation means packing can
+    never change any segment's math."""
+    cfg, params = model
+    prompts = [[5, 7, 9, 11, 13], [21, 22, 23, 24, 25, 26], [1, 2, 3, 4]]
+    ref, rr = _run_engine(cfg, params, prompts, max_new=3, reference=True)
+    pk, rpk = _run_engine(cfg, params, prompts, max_new=3, prefill=True,
+                          decode_block=4)
+    # logits=False: with unequal prompt lengths the prefill engine's rows
+    # sit at different positions than the replay oracle's during the final
+    # decode dispatch, so last_logits are computed at different per-row
+    # offsets.  Tokens, pools, and counters are still pinned exactly.
+    _assert_parity(ref, pk, rr, rpk, logits=False)
+    solo, rsolo = _run_engine(cfg, params, prompts, max_new=3, prefill=True,
+                              prefill_pack=False, decode_block=4)
+    _assert_parity(pk, solo, rpk, rsolo)
+    # the packed engine really did pack: fewer prefill dispatches
+    assert len(pack_prompts([_FakeReq(len(p)) for p in prompts],
+                            min_bucket=16, max_bucket=128)) == 1
+
+
+def test_pinned_prefill_parity_including_wear(model):
+    """Dual-pool prefill (prompt KV landing in the pinned-host tier) vs
+    the K=1 dual-pool reference: tokens, pools, counters, and the
+    pinned tier's wear array + write totals (gap interval large enough
+    that no Start-Gap advance reshuffles rows mid-test)."""
+    cfg, params = model
+    hier = lambda: MemoryHierarchy.two_tier(  # noqa: E731
+        2, 128, pinned_slow=True, gap_write_interval=10_000)
+    prompts = [list(range(5, 17)), list(range(30, 42)), list(range(50, 62))]
+    ref, rr = _run_engine(cfg, params, prompts, reference=True,
+                          fast_slots=2, hierarchy=hier())
+    pre, rp = _run_engine(cfg, params, prompts, prefill=True, decode_block=4,
+                          fast_slots=2, hierarchy=hier())
+    _assert_parity(ref, pre, rr, rp)
+    wr, wp = ref.kv.store.wear_by_tier[1], pre.kv.store.wear_by_tier[1]
+    assert wr.writes_total == wp.writes_total > 0
+    assert wr.leveling_writes == wp.leveling_writes
+    np.testing.assert_array_equal(np.asarray(wr.flush().wear),
+                                  np.asarray(wp.flush().wear))
+    np.testing.assert_array_equal(np.asarray(wr.state.remap),
+                                  np.asarray(wp.state.remap))
+
+
+def test_moe_prefill_expert_counts_exclude_padding(model):
+    """MoE prefill: packed bucket padding rows must not inflate the
+    expert-hotness histogram — counts match the replay oracle exactly."""
+    cfg = smoke(registry()["olmoe_1b_7b"])
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[5, 7, 9, 11, 13], [21, 22, 23, 24, 25, 26], [1, 2, 3, 4]]
+    ref, rr = _run_engine(cfg, params, prompts, max_new=3, reference=True)
+    pre, rp = _run_engine(cfg, params, prompts, max_new=3, prefill=True,
+                          decode_block=4)
+    for a, b in zip(rr, rp):
+        assert a.generated == b.generated
+    np.testing.assert_array_equal(ref.expert_counts, pre.expert_counts)
+
+
+def test_prefill_with_memos_matches_dense_oracle(model):
+    """Prefill under a live memos loop + HBM pressure: tiering decisions
+    may differ from replay (prefill pages classify as streaming, by
+    design) but generated tokens must still match the dense model."""
+    cfg, params = model
+    prompts = [list(range(5, 17)), [21, 22, 23], list(range(50, 59))]
+    eng, reqs = _run_engine(cfg, params, prompts, memos_enabled=True,
+                            memos_interval=5, fast_slots=12,
+                            prefill=True, decode_block=4)
+    for p, r in zip(prompts, reqs):
+        assert r.generated == ref_greedy(cfg, params, p, 6)
+
+
+# -- AOT warmup / no recompiles ------------------------------------------------
+
+def test_warmup_precompiles_exactly_the_advertised_buckets(model):
+    cfg, params = model
+    eng = PagedServingEngine(cfg, params, ServeConfig(
+        page_size=8, max_batch=3, fast_slots=32, slow_slots=128,
+        memos_enabled=False, prefill=True, prefill_max_bucket=32,
+        decode_block=4))
+    pr = eng.prefill_runner
+    assert pr.buckets == [16, 32]
+    eng.warmup()
+    assert pr.n_compiles == len(pr.buckets)
+    assert sorted(pr._plain) == pr.buckets
+    n0 = pr.n_compiles
+    # a mix of prompt lengths across both buckets: serving must never
+    # trigger a data-dependent recompile
+    for p in ([1] * 3, [2] * 17, [3] * 30, [4] * 5, [5] * 12):
+        eng.submit(list(p), max_new=2)
+    eng.run(max_steps=600)
+    assert eng.batcher.all_done()
+    assert pr.n_compiles == n0
+
+
+def test_warmup_covers_pinned_variant(model):
+    cfg, params = model
+    eng = PagedServingEngine(cfg, params, ServeConfig(
+        page_size=8, max_batch=2, fast_slots=2, slow_slots=128,
+        memos_enabled=False, prefill=True, prefill_max_bucket=16,
+        decode_block=4,
+        hierarchy=MemoryHierarchy.two_tier(2, 128, pinned_slow=True,
+                                           gap_write_interval=10_000)))
+    pr = eng.prefill_runner
+    eng.warmup()
+    assert pr.n_compiles == 2 * len(pr.buckets)     # plain + pinned
+    n0 = pr.n_compiles
+    eng.submit(list(range(12)), max_new=2)
+    eng.run(max_steps=200)
+    assert eng.batcher.all_done()
+    assert pr.n_compiles == n0
+
+
+# -- lifecycle edges -----------------------------------------------------------
+
+def test_submit_rejects_structurally(model):
+    cfg, params = model
+    eng = PagedServingEngine(cfg, params, ServeConfig(
+        page_size=8, max_batch=2, fast_slots=32, slow_slots=128,
+        max_pages_per_seq=4, prefill=True, prefill_max_bucket=16))
+    with pytest.raises(CapacityError):
+        eng.submit(list(range(30)), max_new=10)      # exceeds page budget
+    with pytest.raises(CapacityError):
+        eng.submit(list(range(20)), max_new=2)       # exceeds max bucket
+    eng.submit(list(range(10)), max_new=2)           # fits: accepted
+
+
+def test_max_new_one_finishes_at_prefill_boundary(model):
+    """A single-token request completes inside the prefill dispatch: the
+    first sampled token matches the dense oracle and the pages are
+    released without ever entering the decode batch."""
+    cfg, params = model
+    prompts = [list(range(5, 17)), [21, 22, 23]]
+    eng, reqs = _run_engine(cfg, params, prompts, max_new=1, prefill=True)
+    for p, r in zip(prompts, reqs):
+        assert r.generated == ref_greedy(cfg, params, p, 1)
+        assert r.done and not r.pages
+        assert r.first_token_step is not None
+
+
+def test_prefill_ttft_stamped_at_admission_boundary(model):
+    """Step-clock TTFT under prefill is pure queueing delay: a request
+    admitted at step s gets first_token_step == s (the prompt no longer
+    burns one decode step per token before the first emission)."""
+    cfg, params = model
+    prompts = [list(range(5, 17)), list(range(30, 42))]
+    eng, reqs = _run_engine(cfg, params, prompts, prefill=True,
+                            decode_block=4)
+    for r in reqs:
+        assert r.first_token_step == r.arrival == 0
+    ref, rref = _run_engine(cfg, params, prompts, reference=True)
+    for r in rref:
+        # the replay oracle pays one step per prompt token first
+        assert r.first_token_step == len(r.prompt) - 1
